@@ -1,0 +1,63 @@
+"""§Perf hillclimb driver: compile tagged variants of the three chosen cells
+and print the roofline-term deltas.
+
+    PYTHONPATH=src python -m benchmarks.perf qwen1.5-0.5b train_4k \
+        --tag fsdp --strategy fsdp_1d --overrides '{"xent_chunk": 512}'
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .common import BENCH_ART, artifact, dryrun_cell
+
+
+def show(rec, base=None):
+    from repro.analysis.roofline import terms_from_artifact
+
+    t = terms_from_artifact(rec)
+    rs = rec.get("rs_wire_bytes_per_dev")
+    line = (
+        f"{rec['arch']} {rec['shape']} [{rec.get('tag') or 'baseline'} / "
+        f"{rec['strategy']}]\n"
+        f"  compute={t.compute_s:.4f}s memory={t.memory_s:.4f}s "
+        f"collective={t.collective_s:.4f}s dominant={t.dominant}\n"
+        f"  MFU@roofline={t.mfu:.4f} model/HLO={t.model_flops_ratio:.3f} "
+        f"peak={rec['memory']['peak_est_bytes']/1e9:.1f}GB"
+    )
+    if rs is not None:
+        line += f" rs_adj_collective={rs/50e9:.4f}s"
+    if base is not None:
+        tb = terms_from_artifact(base)
+        line += (
+            f"\n  vs baseline: compute x{tb.compute_s/max(t.compute_s,1e-12):.2f} "
+            f"memory x{tb.memory_s/max(t.memory_s,1e-12):.2f} "
+            f"collective x{tb.collective_s/max(t.collective_s,1e-12):.2f} "
+            f"MFU {tb.mfu:.4f} -> {t.mfu:.4f}"
+        )
+    print(line)
+    return t
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--overrides", default="{}")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    overrides = json.loads(args.overrides)
+    rec = dryrun_cell(
+        args.arch, args.shape, strategy=args.strategy,
+        overrides=overrides or None, tag=args.tag, force=args.force,
+        out_dir=os.path.join(os.path.dirname(BENCH_ART), "perf"),
+    )
+    base = artifact(args.arch, args.shape)
+    show(rec, base)
+
+
+if __name__ == "__main__":
+    main()

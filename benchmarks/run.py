@@ -1,0 +1,25 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from .tables import ALL_TABLES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in ALL_TABLES:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{fn.__name__},0.0,ERROR: {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,243 @@
+"""One benchmark per paper table (GSPMD §5, Tables 1-8).
+
+Each ``table*()`` returns rows ``(name, us_per_call, derived)``.  Wall-clock
+entries are measured on CPU for the schedule/kernel benches; distributed
+entries derive roofline terms from compiled dry-runs (this container has no
+TPU — see EXPERIMENTS.md §Roofline for methodology).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .common import BENCH_ART, artifact, dryrun_cell, time_call
+
+
+# --- Table 1: the three 2D sharding configurations -------------------------------
+def table1_2d_sharding():
+    """Paper Table 1/Figure 7: attempt1 vs attempt2 vs finalized on a dense
+    model (paper dims M=8192 H=65536, depth-reduced for compile budget).
+    Derived: per-device peak memory GB | wire GB (lower is better)."""
+    rows = []
+    overrides = {"d_model": 8192, "d_ff": 65536, "num_layers": 8,
+                 "num_heads": 64, "num_kv_heads": 8, "vocab_size": 32000}
+    for strat in ("2d_attempt1", "2d_attempt2", "2d_finalized"):
+        rec = dryrun_cell("command-r-35b", "train_4k", strategy=strat,
+                          overrides=overrides, tag=f"t1_{strat}")
+        mem = rec["memory"]["peak_est_bytes"] / 1e9
+        wire = rec["wire_bytes_per_dev"] / 1e9
+        rows.append((f"table1/{strat}", 0.0, f"peak={mem:.2f}GB wire={wire:.2f}GB"))
+    return rows
+
+
+# --- Table 2: dense Transformer scaling -------------------------------------------
+def table2_dense_scaling():
+    """Paper Table 2: wide dense models at scale (we report roofline MFU for
+    the assigned dense archs' train_4k cells; paper achieved 54-62%)."""
+    from repro.analysis.roofline import terms_from_artifact
+
+    rows = []
+    for arch in ("qwen1.5-0.5b", "phi4-mini-3.8b", "command-r-35b",
+                 "nemotron-4-340b"):
+        rec = artifact(arch, "train_4k")
+        if rec is None:
+            continue
+        t = terms_from_artifact(rec)
+        rows.append((
+            f"table2/{arch}", t.step_time_s * 1e6,
+            f"mfu={t.mfu:.3f} dominant={t.dominant}",
+        ))
+    return rows
+
+
+# --- Table 3: narrow vs wide communication share ----------------------------------
+def table3_narrow():
+    """Paper Table 3: narrow models are communication-bound on wide meshes."""
+    from repro.analysis.roofline import terms_from_artifact
+
+    rows = []
+    for arch in ("qwen1.5-0.5b", "command-r-35b", "nemotron-4-340b"):
+        rec = artifact(arch, "train_4k")
+        if rec is None:
+            continue
+        t = terms_from_artifact(rec)
+        share = t.collective_s / max(t.step_time_s, 1e-12)
+        rows.append((
+            f"table3/{arch}-d{rec['params']['total']:.0e}", 0.0,
+            f"collective_share={share:.2f} (narrow models lose utilization)",
+        ))
+    return rows
+
+
+# --- Table 4/5: pipeline schedules --------------------------------------------------
+def _pipeline_bench(L, R, M):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pipeline import pipeline
+
+    D = 64
+    rng = np.random.default_rng(0)
+    ws = jnp.asarray(rng.standard_normal((L, R, D, D)).astype(np.float32) * 0.1)
+    xs = jnp.asarray(rng.standard_normal((M, 4, D)).astype(np.float32))
+
+    f = jax.jit(lambda w, x: pipeline(
+        lambda wi, xi: jnp.tanh(xi @ wi), w, x, num_stages=L, num_rounds=R))
+    f(ws, xs).block_until_ready()
+    return time_call(lambda: f(ws, xs).block_until_ready(), iters=3)
+
+
+def table4_pipeline():
+    """Paper Table 4: pipeline stages (GPipe) — measured schedule cost on CPU
+    (total stage-executions includes bubble padding, so wall time exposes the
+    bubble exactly as the paper's Raw-FLOPS-vs-bubble accounting)."""
+    from repro.core.pipeline import gpipe_bubble_ratio
+
+    rows = []
+    for L, M in ((2, 16), (4, 16), (8, 32)):
+        us = _pipeline_bench(L, 1, M)
+        rows.append((
+            f"table4/gpipe_L{L}_M{M}", us,
+            f"bubble={gpipe_bubble_ratio(L, M):.3f}",
+        ))
+    return rows
+
+
+def table5_conformer():
+    """Paper Table 5: GPipe vs circular schedule at the same microbatch count.
+    Circular reaches the bubble ratio GPipe needs 4x the microbatches for."""
+    from repro.core.pipeline import circular_bubble_ratio, gpipe_bubble_ratio
+
+    rows = []
+    L, M, R = 8, 16, 4
+    us_g = _pipeline_bench(L, 1, M)
+    us_c = _pipeline_bench(L, R, M)  # R rounds: 4x the layers, same devices
+    rows.append((f"table5/gpipe_L{L}_M{M}", us_g,
+                 f"bubble={gpipe_bubble_ratio(L, M):.3f}"))
+    rows.append((f"table5/circular_L{L}_M{M}_R{R}", us_c,
+                 f"bubble={circular_bubble_ratio(L, M, R):.3f}"))
+    rows.append((f"table5/gpipe_L{L}_M{M*R}", _pipeline_bench(L, 1, M * R),
+                 f"bubble={gpipe_bubble_ratio(L, M*R):.3f} (GPipe needs 4x M)"))
+    return rows
+
+
+# --- Table 6: sparse MoE scaling ----------------------------------------------------
+def table6_moe():
+    """Paper Table 6: MoE with AllToAll dispatch — a2a share of wire bytes."""
+    rows = []
+    for arch in ("granite-moe-1b-a400m", "llama4-maverick-400b-a17b"):
+        rec = artifact(arch, "train_4k")
+        if rec is None:
+            continue
+        c = rec["hlo_collectives_u1"]
+        a2a = c["all-to-all"]["wire_bytes"] / max(c["wire_bytes"], 1)
+        rows.append((
+            f"table6/{arch}", 0.0,
+            f"alltoall_share={a2a:.3f} of per-layer wire (paper: 2-11% of step)",
+        ))
+    return rows
+
+
+# --- Table 7: hybrid sparse+dense ---------------------------------------------------
+def table7_hybrid():
+    from repro.analysis.roofline import terms_from_artifact
+
+    rows = []
+    rec = artifact("jamba-1.5-large-398b", "train_4k")
+    if rec is not None:
+        t = terms_from_artifact(rec)
+        rows.append((
+            "table7/jamba-1.5-large", t.step_time_s * 1e6,
+            f"mfu={t.mfu:.3f} dominant={t.dominant} "
+            f"(hybrid MoE: experts on X, H on Y)",
+        ))
+    return rows
+
+
+# --- Table 8: spatial partitioning (3D U-Net) ---------------------------------------
+def table8_spatial():
+    """Paper Table 8: spatial partitioning of a 3D U-Net — halo-exchange conv
+    numerics measured on 8 fake devices (subprocess), scaling derived."""
+    import subprocess
+    import sys
+    import os
+
+    from .common import ROOT
+
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import STRATEGY_2D_FINALIZED as stf
+import repro.configs.base as cb
+import dataclasses
+st = cb.Strategy("spatial", dict(stf.weight_rules),
+                 {**stf.act_rules, "spatial": ("model",), "batch": ("data",)})
+from repro.models import unet3d
+from repro.models.layers import tree_init, is_param
+import jax.tree_util as jtu
+mesh = jax.make_mesh((1, 8), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+params_t = unet3d.param_tree(base=4, levels=2)
+params = tree_init(params_t, jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 32, 16, 16), jnp.float32)
+batch = {"image": x, "target": jnp.zeros((1, 1, 32, 16, 16))}
+ref = unet3d.loss_fn(params, batch, None)
+with jax.set_mesh(mesh):
+    f = jax.jit(lambda p, b: unet3d.loss_fn(p, b, st))
+    sharded = float(f(params, batch))
+    txt = f.lower(params, batch).compile().as_text()
+print("PARITY", abs(float(ref) - sharded))
+print("CPERM", txt.count("collective-permute"))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    rows = []
+    if proc.returncode == 0:
+        parity = [l for l in proc.stdout.splitlines() if l.startswith("PARITY")]
+        cperm = [l for l in proc.stdout.splitlines() if l.startswith("CPERM")]
+        rows.append((
+            "table8/unet3d_spatial8", 0.0,
+            f"parity_err={float(parity[0].split()[1]):.2e} "
+            f"halo_collective_permutes={cperm[0].split()[1]}",
+        ))
+    else:
+        rows.append(("table8/unet3d_spatial8", 0.0,
+                     f"FAILED: {proc.stderr[-200:]}"))
+    return rows
+
+
+# --- kernels microbench (not a paper table; supports §Perf) -------------------------
+def kernels_micro():
+    import jax.numpy as jnp
+    from repro.kernels.ops import attention
+    from repro.kernels.ref import attention_ref
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    us_k = time_call(lambda: attention(q, k, k, causal=True).block_until_ready())
+    us_r = time_call(lambda: attention_ref(q, k, k, causal=True).block_until_ready())
+    return [
+        ("kernels/flash_attention_interpret", us_k, "pallas interpret mode (CPU)"),
+        ("kernels/attention_ref", us_r, "pure-jnp oracle"),
+    ]
+
+
+ALL_TABLES = [
+    table1_2d_sharding,
+    table2_dense_scaling,
+    table3_narrow,
+    table4_pipeline,
+    table5_conformer,
+    table6_moe,
+    table7_hybrid,
+    table8_spatial,
+    kernels_micro,
+]

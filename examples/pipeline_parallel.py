@@ -1,0 +1,60 @@
+"""Pipeline parallelism as tensor sharding (paper §3.3).
+
+Runs a 4-stage circular pipeline on 8 fake devices with the stage dimension
+sharded, and shows the CollectivePermute GSPMD inserts for the shifting buffer.
+
+    PYTHONPATH=src python examples/pipeline_parallel.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.pipeline import (
+    circular_bubble_ratio, gpipe_bubble_ratio, pipeline,
+)
+
+L, R, M, D = 4, 2, 8, 32
+jmesh = jax.make_mesh((4, 2), ("stage", "data"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+rng = np.random.default_rng(0)
+ws = jnp.asarray(rng.standard_normal((L, R, D, D)).astype(np.float32) * 0.2)
+xs = jnp.asarray(rng.standard_normal((M, 2, D)).astype(np.float32))
+
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+
+# sequential oracle
+ref = np.asarray(xs)
+out = []
+for m in range(M):
+    h = ref[m]
+    for r in range(R):
+        for s in range(L):
+            h = np.tanh(h @ np.asarray(ws)[s, r])
+    out.append(h)
+ref = np.stack(out)
+
+with jax.set_mesh(jmesh):
+    f = jax.jit(lambda w, x: pipeline(
+        stage_fn, w, x, num_stages=L, num_rounds=R, stage_axis="stage"))
+    ws_sharded = jax.device_put(ws, NamedSharding(jmesh, P("stage")))
+    got = f(ws_sharded, xs)
+    txt = f.lower(ws_sharded, xs).compile().as_text()
+
+np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-4, atol=1e-5)
+print("circular pipeline == sequential oracle: OK")
+print("collective-permute ops in compiled HLO:", txt.count("collective-permute"))
+print(f"bubble ratios: gpipe(L={L},M={M}) = {gpipe_bubble_ratio(L, M):.3f}, "
+      f"circular(R={R}) = {circular_bubble_ratio(L, M, R):.3f}")

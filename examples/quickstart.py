@@ -1,0 +1,59 @@
+"""GSPMD quickstart: annotate a single-device program, let propagation complete
+the shardings, and run one SPMD program on 8 (fake) devices.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Mesh, annotate, gspmd_jit, mesh_split, propagate
+from repro.core.partitioner import spmd_partition
+
+# 1. a logical device mesh (paper §3.1)
+jmesh = jax.make_mesh((2, 4), ("x", "y"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = Mesh.create((2, 4), ("x", "y"))
+
+
+# 2. write the model as if for ONE device; add two annotations (paper §3.2):
+#    data-parallel batch on mesh dim x, model-parallel features on y.
+def mlp(x, w1, w2):
+    x = annotate(x, mesh_split(2, mesh, ["x", -1]))     # batch -> x
+    w1 = annotate(w1, mesh_split(2, mesh, [-1, "y"]))   # features -> y
+    h = jax.nn.relu(x @ w1)
+    return h @ w2
+
+
+rng = np.random.default_rng(0)
+x = rng.standard_normal((16, 64)).astype(np.float32)
+w1 = rng.standard_normal((64, 128)).astype(np.float32)
+w2 = rng.standard_normal((128, 32)).astype(np.float32)
+
+# 3. inspect what sharding completion infers for every tensor (paper §3.5)
+closed = jax.make_jaxpr(mlp)(x, w1, w2)
+prop = propagate(closed, mesh)
+print("inferred shardings:")
+for v in closed.jaxpr.invars + closed.jaxpr.outvars:
+    print(f"  {v.aval.shape}: {prop.get(v)}")
+
+# 4a. production path: constraints + jit -> XLA's SPMD partitioner
+f = gspmd_jit(mlp, jmesh, mesh)
+out = f(x, w1, w2)
+print("gspmd_jit out:", out.shape, "sharding:", out.sharding)
+
+# 4b. reference path: our own SPMD partitioner with explicit collectives (§4)
+out_ref = spmd_partition(mlp, jmesh, mesh)(x, w1, w2)
+np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), rtol=1e-4,
+                           atol=1e-4)
+oracle = np.maximum(x @ w1, 0) @ w2
+np.testing.assert_allclose(np.asarray(out), oracle, rtol=1e-4, atol=1e-4)
+print("partitioned == single-device oracle: OK")

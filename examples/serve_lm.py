@@ -1,0 +1,15 @@
+"""Batched serving example: continuous-batching-lite engine with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen1.5-0.5b", "--reduce", "16", "--slots", "4",
+          "--max-len", "64", "--new-tokens", "8", "--requests", "6"])

@@ -1,0 +1,49 @@
+"""Spatial partitioning of a 3D U-Net (paper §5.6, Table 8).
+
+Shards one spatial dim of the input across 8 fake devices; GSPMD propagates the
+sharding through every convolution (annotations only on the input!) and inserts
+halo exchange.
+
+    PYTHONPATH=src python examples/spatial_unet.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs.base as cb
+from repro.models import unet3d
+from repro.models.layers import tree_init
+
+st = cb.Strategy(
+    "spatial",
+    dict(cb.STRATEGY_2D_FINALIZED.weight_rules),
+    {**cb.STRATEGY_2D_FINALIZED.act_rules,
+     "spatial": ("model",), "batch": ("data",)},
+)
+
+jmesh = jax.make_mesh((1, 8), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+params = tree_init(unet3d.param_tree(base=4, levels=2), jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 32, 16, 16), jnp.float32)
+batch = {"image": x, "target": jnp.zeros_like(x)}
+
+ref = float(unet3d.loss_fn(params, batch, None))
+with jax.set_mesh(jmesh):
+    f = jax.jit(lambda p, b: unet3d.loss_fn(p, b, st))
+    sharded = float(f(params, batch))
+    txt = f.lower(params, batch).compile().as_text()
+
+print(f"loss unsharded={ref:.6f} spatially-sharded={sharded:.6f} "
+      f"(err {abs(ref-sharded):.2e})")
+print("halo-exchange collective-permutes in HLO:", txt.count("collective-permute"))
+assert abs(ref - sharded) < 1e-4
+print("spatial partitioning parity: OK")

@@ -1,0 +1,148 @@
+"""Parse collective operators out of compiled HLO text (roofline inputs).
+
+``collective_bytes`` sums, per collective kind, the operand and result bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction in the module (async ``-start`` variants counted once), plus a
+ring-model "wire bytes per device" estimate using each op's replica group size:
+
+  all-gather:   out * (g-1)/g         all-reduce: 2 * in * (g-1)/g
+  reduce-scatter: in * (g-1)/g        all-to-all: in * (g-1)/g
+  collective-permute: in
+
+Scan bodies appear once in the text; callers use the unroll-delta trick
+(analysis/roofline.py) rather than trip-count parsing.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(typestr):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """One record per collective instruction found in the module text."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if re.search(rf"{kind}-done", line):
+            continue
+        # HLO text: `%name = <result type> all-gather(<typed operands>), attrs`
+        after_eq = line.split("=", 1)[1]
+        head, _, rest = after_eq.partition("(")
+        result_bytes = _shape_bytes(head)
+        operand_bytes = _shape_bytes(rest.split("),", 1)[0] if ")," in rest else rest)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        if kind == "all-gather":
+            wire = result_bytes * (g - 1) / max(g, 1)
+        elif kind == "all-reduce":
+            wire = 2 * operand_bytes * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            wire = operand_bytes * (g - 1) / max(g, 1)
+        elif kind == "all-to-all":
+            wire = operand_bytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = operand_bytes
+        out.append(
+            {
+                "kind": kind,
+                "operand_bytes": operand_bytes,
+                "result_bytes": result_bytes,
+                "group_size": g,
+                "wire_bytes": wire,
+            }
+        )
+    return out
+
+
+_AR_NAME_RE = re.compile(r"(%all-reduce[\w.\-]*)\s*=")
+
+
+def rs_adjusted_wire(hlo_text: str) -> float:
+    """Collective wire bytes where AllReduce-feeding-a-slice counts as
+    ReduceScatter (half the cost, §4.2).  XLA's CPU pipeline lacks the
+    ReduceScatterCreator pass that TPU runs, so raw CPU HLO systematically
+    shows AR(+slice) where the TPU executable would run RS."""
+    lines = hlo_text.splitlines()
+    # all-reduce result names consumed by (dynamic-)slice ops
+    ar_names = set(_AR_NAME_RE.findall(hlo_text))
+    sliced = set()
+    for line in lines:
+        if " dynamic-slice(" not in line and " slice(" not in line:
+            continue
+        for tok in re.findall(r"%all-reduce[\w.\-]*", line):
+            sliced.add(tok)
+    sliced &= ar_names
+    total = 0.0
+    for line in lines:
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if re.search(rf"{kind}-done", line):
+            continue
+        recs = parse_collectives(line)
+        if not recs:
+            continue
+        w = recs[0]["wire_bytes"]
+        if kind == "all-reduce":
+            nm = _AR_NAME_RE.search(line)
+            if nm and nm.group(1) in sliced:
+                w *= 0.5
+        total += w
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    recs = parse_collectives(hlo_text)
+    summary = {
+        "count": len(recs),
+        "operand_bytes": sum(r["operand_bytes"] for r in recs),
+        "wire_bytes": sum(r["wire_bytes"] for r in recs),
+        "rs_adjusted_wire_bytes": rs_adjusted_wire(hlo_text),
+    }
+    for kind in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                 "collective-permute"):
+        ks = [r for r in recs if r["kind"] == kind]
+        summary[kind] = {
+            "count": len(ks),
+            "operand_bytes": sum(r["operand_bytes"] for r in ks),
+            "wire_bytes": sum(r["wire_bytes"] for r in ks),
+        }
+    return summary

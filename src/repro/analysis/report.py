@@ -1,0 +1,110 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.analysis.roofline import terms_from_artifact
+from repro.configs.registry import SHAPES, arch_ids
+
+
+def load(dirname: str) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(p))
+        if not r.get("tag"):
+            recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}GB"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | peak mem/dev | compile s | flops/dev | wire/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    order = {a: i for i, a in enumerate(arch_ids())}
+    sorder = {s: i for i, s in enumerate(SHAPES)}
+    recs = sorted(recs, key=lambda r: (order.get(r["arch"], 99),
+                                       sorder.get(r["shape"], 9), r["mesh"]))
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP ({r['reason'][:40]}…) | - | - | - | - |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **ERROR** | - | - | - | - |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {fmt_bytes(r['memory']['peak_est_bytes'])} "
+            f"| {r.get('compile_s_u1', 0):.1f} "
+            f"| {r.get('flops_per_dev', 0):.2e} "
+            f"| {r.get('wire_bytes_per_dev', 0):.2e} |"
+        )
+    return "\n".join(lines)
+
+
+MOVE_HINTS = {
+    "compute": "raise per-device work quality: cut §4.1 padding waste / causal "
+               "overcompute (flash kernel) or lower remat recompute",
+    "memory": "fuse/loop the bandwidth hot spot (chunked loss, smaller "
+              "activation dtypes) or rebalance batch vs model axes",
+    "collective": "reshard to cut gathered bytes: bf16-before-gather norms, "
+                  "ReduceScatter instead of AllReduce, smaller Y for narrow dims",
+}
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | model/HLO | MFU@roofline | what would move it |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {a: i for i, a in enumerate(arch_ids())}
+    sorder = {s: i for i, s in enumerate(SHAPES)}
+    recs = [r for r in recs if r["mesh"] == "pod16x16"]
+    recs = sorted(recs, key=lambda r: (order.get(r["arch"], 99),
+                                       sorder.get(r["shape"], 9)))
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | SKIP | - | - | - | sub-quadratic attention required |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | ERROR | - | - | - | - |")
+            continue
+        t = terms_from_artifact(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t.compute_s:.4f} | {t.memory_s:.4f} "
+            f"| {t.collective_s:.4f} | **{t.dominant}** | {t.model_flops_total:.2e} "
+            f"| {t.model_flops_ratio:.2f} | {t.mfu:.3f} | {MOVE_HINTS[t.dominant]} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## §Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## §Roofline (single pod, 256 chips)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e-class constants).
+
+    compute term    = HLO_FLOPs / (chips × 197e12 FLOP/s)
+    memory term     = HLO_bytes / (chips × 819e9 B/s)
+    collective term = collective_wire_bytes_per_device / 50e9 B/s per link
+
+cost_analysis() counts scan bodies ONCE, so per-cell numbers come from the
+**unroll-delta** trick: lower the step twice with scan unroll u1 < u2; every
+L-proportional quantity q satisfies  q(u2) - q(u1) = (u2-u1)·q_layer, so
+    q_total = q(u1) + (L - u1)·q_layer.
+cost_analysis() is already per-device (SPMD program); collective bytes are parsed
+from the compiled HLO text (hlo_parse.py).
+
+MODEL_FLOPS (the "useful" floor): 6·N·D for training (N = active params, D =
+tokens), 2·N·D for decode forward — the ratio MODEL_FLOPS/HLO_FLOPS exposes
+remat recompute, §4.1 padding waste, and causal-attention overcompute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    model_flops_total: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap model: the dominant term is the step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        hlo_total = self.hlo_flops_per_dev * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        return self.model_flops_total / (
+            self.chips * PEAK_FLOPS * self.step_time_s
+        ) if self.step_time_s else 0.0
+
+    def as_dict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "hlo_bytes_per_dev": self.hlo_bytes_per_dev,
+            "wire_bytes_per_dev": self.wire_bytes_per_dev,
+            "model_flops_total": self.model_flops_total,
+            "model_flops_ratio": self.model_flops_ratio,
+            "mfu": self.mfu,
+            "chips": self.chips,
+        }
+
+
+def extrapolate(u1_val: float, u2_val: float, u1: int, u2: int, L: int) -> float:
+    """q_total from the unroll-delta trick (clamped to be monotone)."""
+    per_layer = max((u2_val - u1_val) / (u2 - u1), 0.0)
+    return u1_val + (L - u1) * per_layer
+
+
+def terms_from_artifact(art: Dict) -> RooflineTerms:
+    chips = art["chips"]
+    return RooflineTerms(
+        compute_s=art["flops_per_dev"] / PEAK_FLOPS,
+        memory_s=art["bytes_per_dev"] / HBM_BW,
+        collective_s=art["wire_bytes_per_dev"] / ICI_BW,
+        hlo_flops_per_dev=art["flops_per_dev"],
+        hlo_bytes_per_dev=art["bytes_per_dev"],
+        wire_bytes_per_dev=art["wire_bytes_per_dev"],
+        model_flops_total=art["model_flops"],
+        chips=chips,
+    )
+
+
+# ---------------------------------------------------------------------------------
+# MODEL_FLOPS
+# ---------------------------------------------------------------------------------
+
+
+def count_params(cfg) -> Dict[str, float]:
+    """Analytic parameter counts (total and active-per-token)."""
+    M, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    embed = V * M
+    total = embed
+    active = embed
+
+    def mlp_p(d_ff, kind):
+        return (3 if kind == "swiglu" else 2) * M * d_ff
+
+    for i in range(L):
+        layer = 0.0
+        active_layer = 0.0
+        is_attn = True
+        if cfg.family in ("ssm",):
+            is_attn = False
+        if cfg.family == "hybrid":
+            sb = cfg.attn_every or 8
+            is_attn = (i % sb) == sb - 1
+        if is_attn and cfg.num_heads:
+            attn = M * cfg.num_heads * cfg.dh + 2 * M * cfg.num_kv_heads * cfg.dh + cfg.num_heads * cfg.dh * M
+            layer += attn
+            active_layer += attn
+        if not is_attn and cfg.ssm:
+            d_in = cfg.ssm_expand * M
+            ssm = 2 * M * d_in + 2 * M * cfg.ssm_state + M * (d_in // cfg.ssm_head_dim) + d_in * M
+            layer += ssm
+            active_layer += ssm
+        is_moe = cfg.moe and ((i % cfg.moe_every) == cfg.moe_every - 1)
+        if is_moe:
+            e = mlp_p(cfg.expert_d_ff, cfg.mlp)
+            layer += cfg.num_experts * e + M * cfg.num_experts
+            active_layer += cfg.top_k * e
+            if cfg.shared_expert:
+                layer += mlp_p(cfg.d_ff, cfg.mlp)
+                active_layer += mlp_p(cfg.d_ff, cfg.mlp)
+        elif cfg.d_ff:
+            layer += mlp_p(cfg.d_ff, cfg.mlp)
+            active_layer += mlp_p(cfg.d_ff, cfg.mlp)
+        total += layer
+        active += active_layer
+    if cfg.family == "encdec":
+        enc = cfg.encoder_layers * (
+            4 * M * M * (cfg.num_heads * cfg.dh) / M + mlp_p(cfg.d_ff, cfg.mlp)
+        )
+        total += enc
+        active += enc
+        # decoder cross-attention
+        x = cfg.num_layers * (2 * M * cfg.num_heads * cfg.dh + 2 * M * cfg.num_kv_heads * cfg.dh)
+        total += x
+        active += x
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, kind: str, global_batch: int, seq_len: int) -> float:
+    p = count_params(cfg)
+    tokens = global_batch * seq_len
+    if kind == "train":
+        return 6.0 * p["active"] * tokens
+    if kind == "prefill":
+        return 2.0 * p["active"] * tokens
+    # decode: one token per sequence + attention over the cache
+    flops = 2.0 * p["active"] * global_batch
+    if cfg.num_heads:
+        n_attn = cfg.num_layers
+        if cfg.family == "hybrid":
+            n_attn = cfg.num_layers // (cfg.attn_every or 8)
+        flops += (
+            4.0 * n_attn * cfg.num_heads * cfg.dh * seq_len * global_batch
+        )
+    return flops

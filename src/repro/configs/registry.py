@@ -1,0 +1,107 @@
+"""Architecture registry, input shapes, and abstract input specs.
+
+10 assigned archs × 4 shapes = 40 dry-run cells.  ``input_specs`` returns
+``ShapeDtypeStruct`` stand-ins (no allocation) for every model input, matching
+the shannon/kernels pattern.  ``long_500k`` is only runnable for sub-quadratic
+archs (ssm/hybrid) — pure full-attention archs report SKIP (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def arch_ids() -> Tuple[str, ...]:
+    return tuple(ARCHS.keys())
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{ARCHS[arch]}", package=__package__)
+    return mod.CONFIG
+
+
+def default_strategy(arch: str) -> str:
+    cfg = get_config(arch)
+    return "moe_2d" if cfg.moe and cfg.family == "moe" else "2d_finalized"
+
+
+ARCHS = {
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "command-r-35b": "command_r_35b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-base": "whisper_base",
+    "internvl2-1b": "internvl2_1b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "mamba2-130m": "mamba2_130m",
+}
+
+# sub-quadratic archs that run long_500k
+LONG_CONTEXT_OK = {"jamba-1.5-large-398b", "mamba2-130m"}
+
+
+def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, "full quadratic attention at 524k context — skipped per spec"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------------
+
+
+def input_specs(arch: str, shape: str, cfg: Optional[ModelConfig] = None):
+    """ShapeDtypeStructs for every model input of the (arch, shape) cell.
+
+    train/prefill: token batches (+ stub frontend embeddings for vlm/audio).
+    decode: one new token + position; the KV cache is built separately by
+    ``launch.dryrun`` (it is state, not input, but is also abstract).
+    """
+    cfg = cfg or get_config(arch)
+    case = SHAPES[shape]
+    B, S = case.global_batch, case.seq_len
+    i32 = jnp.int32
+    if case.kind in ("train", "prefill"):
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "encdec":
+            # stub conv frontend output: frame embeddings at half the text len
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, max(S // 2, 128), cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    # decode: one token per sequence
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+    }

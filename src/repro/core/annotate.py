@@ -1,0 +1,83 @@
+"""User-facing sharding annotation (paper §3.6, TF's ``XlaSharding`` analogue).
+
+``annotate(x, sharding)`` is semantically an identity whose attribute carries a
+``Sharding``.  It is a real jax primitive so that:
+
+* it survives tracing into a jaxpr, where the propagation pass (propagation.py)
+  reads it as a seed;
+* its transpose is a copy of itself — the paper defines the gradient of XlaSharding
+  to be itself, so backward graphs are annotated automatically;
+* it vmaps: a batched annotate inserts an unsharded leading dim (this is what makes
+  the §3.3 pipeline wrapper work under ``vmap``).
+
+``unspecified_dims`` implements the paper's *partial specification* (§3.5): those
+dims may still be refined by propagation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+from jax import core
+from jax.extend import core as excore
+from jax.interpreters import ad, batching, mlir
+
+from .sharding import Sharding
+
+try:  # jax >= 0.4.x moved Primitive around; jax.core still exposes it via extend
+    Primitive = core.Primitive
+except AttributeError:  # pragma: no cover
+    from jax.extend.core import Primitive
+
+annotate_p = Primitive("gspmd_annotate")
+annotate_p.def_impl(lambda x, *, sharding, unspecified_dims: x)
+annotate_p.def_abstract_eval(lambda x, *, sharding, unspecified_dims: x)
+
+# gradient of the annotation is the annotation itself (paper §3.6)
+ad.deflinear2(
+    annotate_p,
+    lambda ct, x, *, sharding, unspecified_dims: [
+        annotate_p.bind(ct, sharding=sharding, unspecified_dims=unspecified_dims)
+        if not isinstance(ct, ad.Zero)
+        else ct
+    ],
+)
+
+
+def _batch_rule(args, dims, *, sharding, unspecified_dims):
+    (x,), (d,) = args, dims
+    if d is batching.not_mapped:
+        return annotate_p.bind(
+            x, sharding=sharding, unspecified_dims=unspecified_dims
+        ), d
+    # insert an unsharded dim at position d
+    dm = list(sharding.dims_mapping)
+    dm.insert(d, ())
+    new = Sharding(sharding.mesh, tuple(dm))
+    shifted = tuple(u + 1 if u >= d else u for u in unspecified_dims) + (d,)
+    return annotate_p.bind(x, sharding=new, unspecified_dims=shifted), d
+
+
+batching.primitive_batchers[annotate_p] = _batch_rule
+
+# Lowering: identity.  Constraints are applied by repro.core.apply / gspmd_jit
+# after propagation, mirroring the paper's two-pass structure (completion pass,
+# then partitioning pass).
+mlir.register_lowering(annotate_p, lambda ctx, x, **_: [x])
+
+
+def annotate(x, sharding: Sharding, unspecified_dims: Sequence[int] = ()):
+    """Annotate ``x`` with a GSPMD sharding.  Identity on the value."""
+    assert sharding.rank == x.ndim, (sharding, x.shape)
+    return annotate_p.bind(
+        x, sharding=sharding, unspecified_dims=tuple(unspecified_dims)
+    )
+
+
+def mesh_split_annotate(x, mesh, dims_mapping, unspecified_dims: Sequence[int] = ()):
+    """The paper's ``mesh_split(tensor, device_mesh, dims_mapping)`` applied to a
+    live value."""
+    from .sharding import mesh_split
+
+    return annotate(x, mesh_split(x.ndim, mesh, dims_mapping), unspecified_dims)

@@ -1,0 +1,205 @@
+"""Partitioned Einsum/Dot (paper §3.2, §4.4) with recursive grouping.
+
+Given operand shardings, classify every mesh axis by the *role* of the dimension
+it shards (Figure 6):
+
+* batch-consistent      — axis shards the same batch dim in both operands (and the
+                          output): handled by *grouping* — the recursive-partitioning
+                          trick: treat each group as a logical partition and recurse
+                          on the remaining dims.  Locally a plain einsum.
+* contracting-matched   — axis shards the same contracting dim of both operands:
+                          local einsum produces a partial sum → AllReduce (or
+                          ReduceScatter when the requested output wants that axis).
+* lhs/rhs non-contracting — result stays sharded on that axis; no comm.
+* mismatched            — axis shards a dim inconsistently: reshard (AllGather) the
+                          smaller operand first (§4.5).
+
+``partitioned_einsum`` executes the local computation + collectives inside a
+shard_map region; ``plan_einsum`` is the pure decision procedure (also used by the
+analysis layer to predict GSPMD's collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .reshard import reshard_local
+from .sharding import Sharding, merge_shardings
+
+# ---------------------------------------------------------------------------------
+
+
+def parse_spec(spec: str):
+    lhs_rhs, out = spec.replace(" ", "").split("->")
+    lhs, rhs = lhs_rhs.split(",")
+    batch = [c for c in lhs if c in rhs and c in out]
+    contract = [c for c in lhs if c in rhs and c not in out]
+    lhs_only = [c for c in lhs if c not in rhs]
+    rhs_only = [c for c in rhs if c not in lhs]
+    return lhs, rhs, out, batch, contract, lhs_only, rhs_only
+
+
+@dataclasses.dataclass
+class EinsumPlan:
+    spec: str
+    lhs_local: Sharding  # sharding the lhs must be in before the local einsum
+    rhs_local: Sharding
+    out_sharding: Sharding  # sharding of the local result
+    psum_axes: Tuple[str, ...]  # AllReduce over these after the local einsum
+    gather_lhs: bool = False  # operands needed resharding (mismatched case)
+    gather_rhs: bool = False
+
+    def collectives(self) -> List[str]:
+        out = []
+        if self.gather_lhs:
+            out.append("all-gather(lhs)")
+        if self.gather_rhs:
+            out.append("all-gather(rhs)")
+        if self.psum_axes:
+            out.append(f"all-reduce({','.join(self.psum_axes)})")
+        return out
+
+
+def plan_einsum(
+    spec: str,
+    lhs_sh: Sharding,
+    rhs_sh: Sharding,
+    out_sh: Optional[Sharding] = None,
+) -> EinsumPlan:
+    lhs, rhs, out, batch, contract, lhs_only, rhs_only = parse_spec(spec)
+    mesh = lhs_sh.mesh
+
+    def axes_of(s: Sharding, labels: str):
+        return {c: s.dims_mapping[i] for i, c in enumerate(labels)}
+
+    l_ax, r_ax = axes_of(lhs_sh, lhs), axes_of(rhs_sh, rhs)
+
+    l_target: Dict[str, Tuple[str, ...]] = {}
+    r_target: Dict[str, Tuple[str, ...]] = {}
+    psum: List[str] = []
+    gather_lhs = gather_rhs = False
+    used: set = set()
+
+    # batch dims: grouping (recursive partitioning).  Keep the merge of both.
+    for c in batch:
+        la, ra = l_ax.get(c, ()), r_ax.get(c, ())
+        if la == ra:
+            tgt = la
+        elif la and not ra:
+            tgt = la
+            gather_rhs = gather_rhs or bool(ra)
+        elif ra and not la:
+            tgt = ra
+        else:  # mismatched sharded-both: keep lhs, reshard rhs
+            tgt = la
+            gather_rhs = True
+        tgt = tuple(a for a in tgt if a not in used)
+        used.update(tgt)
+        l_target[c] = tgt
+        r_target[c] = tgt
+
+    # contracting dims: matched -> partial sum; mismatched -> gather the rhs
+    for c in contract:
+        la, ra = l_ax.get(c, ()), r_ax.get(c, ())
+        if la == ra and la:
+            tgt = tuple(a for a in la if a not in used)
+            if tgt == la:
+                l_target[c] = tgt
+                r_target[c] = tgt
+                used.update(tgt)
+                psum.extend(tgt)
+                continue
+        if la and ra and la != ra:
+            # keep lhs sharding, reshard rhs to match
+            tgt = tuple(a for a in la if a not in used)
+            l_target[c] = tgt
+            r_target[c] = tgt
+            used.update(tgt)
+            psum.extend(tgt)
+            gather_rhs = True
+            continue
+        if la and not ra:
+            tgt = tuple(a for a in la if a not in used)
+            l_target[c] = tgt
+            r_target[c] = tgt
+            used.update(tgt)
+            psum.extend(tgt)
+            gather_rhs = gather_rhs or bool(tgt)
+            continue
+        if ra and not la:
+            tgt = tuple(a for a in ra if a not in used)
+            l_target[c] = tgt
+            r_target[c] = tgt
+            used.update(tgt)
+            psum.extend(tgt)
+            gather_lhs = gather_lhs or bool(tgt)
+            continue
+        l_target[c] = ()
+        r_target[c] = ()
+
+    # non-contracting dims: keep own sharding (no comm)
+    for c in lhs_only:
+        tgt = tuple(a for a in l_ax.get(c, ()) if a not in used)
+        used.update(tgt)
+        l_target[c] = tgt
+    for c in rhs_only:
+        tgt = tuple(a for a in r_ax.get(c, ()) if a not in used)
+        used.update(tgt)
+        r_target[c] = tgt
+
+    lhs_local = Sharding(mesh, tuple(l_target[c] for c in lhs))
+    rhs_local = Sharding(mesh, tuple(r_target[c] for c in rhs))
+    out_map = tuple(
+        l_target.get(c, r_target.get(c, ())) for c in out
+    )
+    out_sharding = Sharding(mesh, out_map)
+    gather_lhs = gather_lhs or (lhs_local.dims_mapping != lhs_sh.dims_mapping)
+    gather_rhs = gather_rhs or (rhs_local.dims_mapping != rhs_sh.dims_mapping)
+    return EinsumPlan(
+        spec, lhs_local, rhs_local, out_sharding, tuple(psum), gather_lhs, gather_rhs
+    )
+
+
+def partitioned_einsum(
+    spec: str,
+    x,
+    y,
+    lhs_sh: Sharding,
+    rhs_sh: Sharding,
+    out_sh: Optional[Sharding] = None,
+    preferred_element_type=None,
+):
+    """Execute a partitioned einsum on *local* shards inside shard_map.
+
+    Returns (local_result, result_sharding).  If ``out_sh`` is given, the result
+    is resharded to it; a pending partial sum combined with a requested sharding
+    on a psum axis becomes a ReduceScatter (§4.2: "half the cost of AllReduce").
+    """
+    plan = plan_einsum(spec, lhs_sh, rhs_sh, out_sh)
+    if plan.lhs_local.dims_mapping != lhs_sh.dims_mapping:
+        x = reshard_local(x, lhs_sh, plan.lhs_local)
+    if plan.rhs_local.dims_mapping != rhs_sh.dims_mapping:
+        y = reshard_local(y, rhs_sh, plan.rhs_local)
+    z = jnp.einsum(spec, x, y, preferred_element_type=preferred_element_type)
+    res_sh = plan.out_sharding
+    if plan.psum_axes:
+        # ReduceScatter optimization: if the requested output shards a psum axis
+        # on some dim, use psum_scatter instead of psum+slice.
+        remaining = list(plan.psum_axes)
+        if out_sh is not None:
+            for d, axes in enumerate(out_sh.dims_mapping):
+                for a in axes:
+                    if a in remaining and not res_sh.dims_mapping[d]:
+                        z = lax.psum_scatter(z, a, scatter_dimension=d, tiled=True)
+                        res_sh = res_sh.with_dim(d, res_sh.dims_mapping[d] + (a,))
+                        remaining.remove(a)
+        if remaining:
+            z = lax.psum(z, tuple(remaining))
+    if out_sh is not None and res_sh.dims_mapping != out_sh.dims_mapping:
+        z = reshard_local(z, res_sh, out_sh)
+        res_sh = out_sh
+    return z, res_sh

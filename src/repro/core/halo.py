@@ -1,0 +1,125 @@
+"""Halo exchange for windowed operators (paper §4.3, Appendix A.2).
+
+Partitioning a convolution along a spatial dimension makes neighboring partitions
+need overlapping input ("halo") regions.  Following the paper:
+
+1. compute per-partition left/right halo sizes — generally *non-constant*
+   (linear functions of the partition id, Fig. 9a);
+2. exchange the **maximum** halo via CollectivePermute (Steps 1-2 of Fig. 9b);
+3. DynamicSlice (offset = f(partition id)) to the region each partition actually
+   needs (Step 3);
+4. mask out-of-range data with the identity value (Step 4 / §4.1) — for
+   convolution that's the zero padding value, handled by explicit edge padding.
+
+Supports arbitrary stride/low/high padding; base/window dilation are not
+implemented (the paper's §A.2 cases 2-3) — callers fall back to AllGather.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _halo_bounds(n_shards, local_in, local_out, stride, pad_lo, kernel):
+    """Max left/right halo over partitions; needs are linear in partition id.
+
+    Partition i owns inputs  [i*local_in, (i+1)*local_in)
+    and computes outputs     [i*local_out, (i+1)*local_out), where output j reads
+    inputs [j*stride - pad_lo, j*stride - pad_lo + kernel).
+    """
+    lefts, rights = [], []
+    for i in range(n_shards):
+        start_need = i * local_out * stride - pad_lo
+        end_need = ((i + 1) * local_out - 1) * stride - pad_lo + kernel
+        lefts.append(i * local_in - start_need)
+        rights.append(end_need - (i + 1) * local_in)
+    return max(0, max(lefts)), max(0, max(rights))
+
+
+def halo_exchange(x, axis_name: str, dim: int, left: int, right: int, fill=0.0):
+    """Concatenate ``left`` elements from the left neighbor and ``right`` from the
+    right neighbor along ``dim``.  Boundary partitions are padded with ``fill``
+    (the identity value — masking per §4.1)."""
+    n = lax.axis_size(axis_name)
+    parts = []
+    if left > 0:
+        # my left halo is the right edge of partition id-1
+        src = lax.slice_in_dim(x, x.shape[dim] - left, x.shape[dim], axis=dim)
+        got = lax.ppermute(src, axis_name, [(j, j + 1) for j in range(n - 1)])
+        idx = lax.axis_index(axis_name)
+        got = jnp.where(
+            _bcast(idx == 0, got.ndim), jnp.full_like(got, fill), got
+        )
+        parts.append(got)
+    parts.append(x)
+    if right > 0:
+        src = lax.slice_in_dim(x, 0, right, axis=dim)
+        got = lax.ppermute(src, axis_name, [(j + 1, j) for j in range(n - 1)])
+        idx = lax.axis_index(axis_name)
+        got = jnp.where(
+            _bcast(idx == n - 1, got.ndim), jnp.full_like(got, fill), got
+        )
+        parts.append(got)
+    return jnp.concatenate(parts, axis=dim) if len(parts) > 1 else x
+
+
+def _bcast(pred, ndim):
+    return pred.reshape((1,) * ndim)
+
+
+def sharded_conv1d_spatial(x, w, *, axis_name, spatial_dim, stride=1, pad_lo=0, pad_hi=0):
+    """Single-sharded-spatial-dim convolution (thin wrapper over sharded_conv_nd)."""
+    nspatial = x.ndim - 2
+    strides = [1] * nspatial
+    pads = [(0, 0)] * nspatial
+    strides[spatial_dim - 2] = stride
+    pads[spatial_dim - 2] = (pad_lo, pad_hi)
+    return sharded_conv_nd(
+        x, w, sharded=[(spatial_dim, axis_name)], window_strides=strides, padding=pads
+    )
+
+
+def sharded_conv_nd(
+    x,
+    w,
+    *,
+    sharded: Sequence[Tuple[int, str]],
+    window_strides: Sequence[int],
+    padding: Sequence[Tuple[int, int]],
+):
+    """Convolution with multiple spatial dims sharded (recursive per-dim halo).
+
+    ``sharded`` is [(spatial_dim_index_into_x, axis_name), ...].  Halo exchange
+    composes per-dim: exchange+slice along each sharded dim, then one local conv
+    with VALID padding on sharded dims and the original padding elsewhere.
+    This is the §4.4 recursive-partitioning structure for Convolution.
+    """
+    nspatial = x.ndim - 2
+    strides = list(window_strides)
+    pads = [tuple(p) for p in padding]
+    sharded_dims = {d: a for d, a in sharded}
+
+    for dim, axis_name in sharded:
+        sd = dim - 2
+        k = w.shape[2 + sd]
+        n = lax.axis_size(axis_name)
+        local_in = x.shape[dim]
+        gl = local_in * n
+        lo, hi = pads[sd]
+        out_len = (gl + lo + hi - k) // strides[sd] + 1
+        assert out_len % n == 0
+        local_out = out_len // n
+        left, right = _halo_bounds(n, local_in, local_out, strides[sd], lo, k)
+        x = halo_exchange(x, axis_name, dim, left, right, fill=0.0)
+        idx = lax.axis_index(axis_name)
+        offset = idx * (local_out * strides[sd] - local_in) + (left - lo)
+        need = (local_out - 1) * strides[sd] + k
+        x = lax.dynamic_slice_in_dim(x, offset, need, axis=dim)
+        pads[sd] = (0, 0)
+
+    return lax.conv_general_dilated(
+        x, w, window_strides=tuple(strides), padding=pads
+    )

@@ -1,0 +1,32 @@
+"""Manually partitioned subgraphs (paper §3.4).
+
+Inside a manual region the user writes shard-sized code; outside, the program is
+partitioned automatically, with conversion nodes at the boundary.  In JAX this is
+exactly ``shard_map`` embedded in a ``jit`` program, so the wrapper is thin — the
+value of this module is (a) making the paper's concept explicit and (b) the
+*subgroup* extension: manual on a subset of mesh axes, automatic on the rest
+(used by GSPMD pipelining to make pipeline stages manual subgroups while GSPMD
+still auto-partitions data/model axes within each stage).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def manual(fn, jmesh, in_specs, out_specs, auto_axes: Sequence[str] = ()):
+    """Enter manual-partitioning mode for ``fn`` (paper §3.4).
+
+    ``auto_axes`` lists mesh axes that stay automatically partitioned *inside*
+    the region — the paper's "manual mode with subgroups": devices within a
+    subgroup (the manual axes) are manually partitioned, across subgroups
+    (auto axes) automatic.
+    """
+    kwargs = {}
+    if auto_axes:
+        kwargs["auto"] = frozenset(auto_axes)
+    return jax.shard_map(
+        fn, mesh=jmesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False, **kwargs
+    )

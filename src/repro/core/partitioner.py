@@ -1,0 +1,369 @@
+"""The reference SPMD partitioner (paper §4).
+
+XLA's SPMD partitioner (production GSPMD) is what ``jax.jit`` invokes; this module
+is our own *reference implementation* of the same transformation, executing a
+jaxpr as a single program over local shards inside one ``shard_map`` region, with
+explicit ``jax.lax`` collectives:
+
+* dot_general  — einsum partitioning with recursive grouping (§4.4) via
+                 ``einsum_rules.partitioned_einsum`` (AllReduce / ReduceScatter /
+                 AllGather as required);
+* elementwise  — operands resharded to the merged sharding, computed locally;
+* reduce       — local reduce + psum over mesh axes sharding reduced dims;
+* conv         — halo exchange on sharded spatial dims (§4.3);
+* formatting   — pad/slice/concatenate fall back to AllGather + op + DynamicSlice
+                 (§4.5 resharding; GSPMD's optimized halo versions exist in
+                 halo.py and are used by the model layer directly);
+* annotate     — explicit resharding to the user's annotation.
+
+It is validated numerically against the unpartitioned program — GSPMD's
+"mathematically equivalent" guarantee — in tests/multidev/.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import core, lax
+from jax.extend import core as excore
+
+from .annotate import annotate_p
+from .einsum_rules import partitioned_einsum
+from .propagation import Propagation, propagate
+from .reshard import reshard_local, shard_shape
+from .rules import ELEMENTWISE
+from .sharding import Mesh, Sharding, merge_shardings, replicated, to_partition_spec
+
+
+class SpmdPartitioner:
+    """Evaluates a jaxpr on local shards, inserting collectives per §4."""
+
+    def __init__(self, prop: Propagation, mesh: Mesh):
+        self.prop = prop
+        self.mesh = mesh
+        # local values + their current shardings
+        self.vals: Dict[excore.Var, object] = {}
+        self.shardings: Dict[excore.Var, Sharding] = {}
+
+    # -- var access -------------------------------------------------------------
+    def read(self, v):
+        if isinstance(v, excore.Literal):
+            return v.val, replicated(self.mesh, np.ndim(v.val))
+        return self.vals[v], self.shardings[v]
+
+    def write(self, v, val, sh: Sharding):
+        if isinstance(v, core.DropVar):
+            return
+        self.vals[v] = val
+        self.shardings[v] = sh
+
+    def _to(self, val, cur: Sharding, tgt: Sharding):
+        if cur.dims_mapping == tgt.dims_mapping:
+            return val
+        return reshard_local(val, cur, tgt)
+
+    # -- the partitioning pass ----------------------------------------------------
+    def run(self, jaxpr: excore.Jaxpr, consts, *args):
+        for v, c in zip(jaxpr.constvars, consts):
+            self.write(v, c, replicated(self.mesh, np.ndim(c)))
+        for v, a in zip(jaxpr.invars, args):
+            sh = self.prop.get(v) or replicated(self.mesh, np.ndim(a))
+            self.write(v, a, sh)
+        for eqn in jaxpr.eqns:
+            self.eqn(eqn)
+        outs = []
+        for v in jaxpr.outvars:
+            val, sh = self.read(v)
+            want = self.prop.get(v) or replicated(self.mesh, np.ndim(val))
+            outs.append(self._to(val, sh, want))
+        return tuple(outs)
+
+    def eqn(self, eqn):
+        prim = eqn.primitive
+        name = prim.name
+        if prim is annotate_p:
+            val, sh = self.read(eqn.invars[0])
+            tgt = eqn.params["sharding"]
+            self.write(eqn.outvars[0], self._to(val, sh, tgt), tgt)
+            return
+        if name == "dot_general":
+            self._dot(eqn)
+            return
+        if name in ELEMENTWISE or name in ("select_n", "convert_element_type"):
+            self._elementwise(eqn)
+            return
+        if name.startswith("reduce_") and "window" not in name:
+            self._reduce(eqn)
+            return
+        if name == "transpose":
+            self._transpose(eqn)
+            return
+        if name == "broadcast_in_dim":
+            self._broadcast(eqn)
+            return
+        if name == "reshape":
+            self._reshape(eqn)
+            return
+        if name == "conv_general_dilated":
+            self._conv(eqn)
+            return
+        if name == "pjit":
+            self._pjit(eqn)
+            return
+        if name == "scan":
+            self._scan(eqn)
+            return
+        if name in ("iota",):
+            out = prim.bind(**eqn.params)
+            self.write(eqn.outvars[0], out, replicated(self.mesh, out.ndim))
+            return
+        # fallback: gather everything, run globally, re-slice to inferred sharding
+        self._fallback(eqn)
+
+    # -- op handlers ----------------------------------------------------------------
+    def _dot(self, eqn):
+        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+        lv, ls = self.read(eqn.invars[0])
+        rv, rs = self.read(eqn.invars[1])
+        # express the dot as an einsum spec
+        import string
+
+        letters = iter(string.ascii_lowercase)
+        l_names = [next(letters) for _ in range(lv.ndim if hasattr(lv, "ndim") else 0)]
+        r_names = [None] * np.ndim(rv)
+        for i, j in zip(lb, rb):
+            r_names[j] = l_names[i]
+        for i, j in zip(lc, rc):
+            r_names[j] = l_names[i]
+        for j in range(len(r_names)):
+            if r_names[j] is None:
+                r_names[j] = next(letters)
+        l_nc = [i for i in range(len(l_names)) if i not in lc and i not in lb]
+        r_nc = [j for j in range(len(r_names)) if j not in rc and j not in rb]
+        out_names = (
+            [l_names[i] for i in lb] + [l_names[i] for i in l_nc] + [r_names[j] for j in r_nc]
+        )
+        spec = f"{''.join(l_names)},{''.join(r_names)}->{''.join(out_names)}"
+        want = self.prop.get(eqn.outvars[0])
+        out, osh = partitioned_einsum(
+            spec, lv, rv, ls, rs, want,
+            preferred_element_type=eqn.params.get("preferred_element_type"),
+        )
+        self.write(eqn.outvars[0], out, osh)
+
+    def _elementwise(self, eqn):
+        vals, shs = zip(*(self.read(v) for v in eqn.invars))
+        rank = eqn.outvars[0].aval.ndim
+        tgt = None
+        for s, v in zip(shs, vals):
+            if np.ndim(v) == rank:
+                tgt = s if tgt is None else (merge_shardings(tgt, s) or tgt)
+        if tgt is None:
+            tgt = replicated(self.mesh, rank)
+        new_vals = [
+            self._to(v, s, tgt) if np.ndim(v) == rank else v
+            for v, s in zip(vals, shs)
+        ]
+        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+        out = eqn.primitive.bind(*subfuns, *new_vals, **bind_params)
+        outs = out if eqn.primitive.multiple_results else [out]
+        for v, o in zip(eqn.outvars, outs):
+            self.write(v, o, tgt)
+
+    def _reduce(self, eqn):
+        val, sh = self.read(eqn.invars[0])
+        axes = eqn.params["axes"]
+        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+        out = eqn.primitive.bind(*subfuns, val, **bind_params)
+        psum_axes = tuple(a for d in axes for a in sh.dims_mapping[d])
+        if psum_axes:
+            if eqn.primitive.name == "reduce_sum":
+                out = lax.psum(out, psum_axes)
+            elif eqn.primitive.name == "reduce_max":
+                out = lax.pmax(out, psum_axes)
+            elif eqn.primitive.name == "reduce_min":
+                out = lax.pmin(out, psum_axes)
+            else:  # prod/and/or: gather first instead
+                val = self._to(val, sh, replicated(self.mesh, sh.rank))
+                out = eqn.primitive.bind(*subfuns, val, **bind_params)
+        kept = [i for i in range(sh.rank) if i not in axes]
+        osh = Sharding(self.mesh, tuple(sh.dims_mapping[i] for i in kept))
+        self.write(eqn.outvars[0], out, osh)
+
+    def _transpose(self, eqn):
+        val, sh = self.read(eqn.invars[0])
+        perm = eqn.params["permutation"]
+        out = lax.transpose(val, perm)
+        osh = Sharding(self.mesh, tuple(sh.dims_mapping[i] for i in perm))
+        self.write(eqn.outvars[0], out, osh)
+
+    def _broadcast(self, eqn):
+        val, sh = self.read(eqn.invars[0])
+        bcast = eqn.params["broadcast_dimensions"]
+        gshape = eqn.params["shape"]
+        out_rank = len(gshape)
+        dm = [() for _ in range(out_rank)]
+        in_aval = eqn.invars[0].aval
+        for i, j in enumerate(bcast):
+            if in_aval.shape[i] == gshape[j]:
+                dm[j] = sh.dims_mapping[i]
+        osh = Sharding(self.mesh, tuple(dm))
+        local_shape = shard_shape(tuple(gshape), osh)
+        out = lax.broadcast_in_dim(val, local_shape, bcast)
+        self.write(eqn.outvars[0], out, osh)
+
+    def _reshape(self, eqn):
+        val, sh = self.read(eqn.invars[0])
+        want = self.prop.get(eqn.outvars[0])
+        gshape = eqn.params["new_sizes"]
+        if want is not None:
+            # try the local reshape: valid when each sharded output dim's shard
+            # count divides its size and the factor layout matches (propagation
+            # only proposes such mappings)
+            local = shard_shape(tuple(gshape), want)
+            try:
+                out = lax.reshape(val, local, eqn.params.get("dimensions"))
+                self.write(eqn.outvars[0], out, want)
+                return
+            except TypeError:
+                pass
+        # fallback: gather, reshape, re-slice
+        val = self._to(val, sh, replicated(self.mesh, sh.rank))
+        out = lax.reshape(val, gshape, eqn.params.get("dimensions"))
+        osh = want or replicated(self.mesh, len(gshape))
+        out = self._to(out, replicated(self.mesh, len(gshape)), osh)
+        self.write(eqn.outvars[0], out, osh)
+
+    def _conv(self, eqn):
+        from .halo import sharded_conv_nd
+
+        lv, ls = self.read(eqn.invars[0])
+        rv, rs = self.read(eqn.invars[1])
+        # kernel replicated; lhs may be sharded on batch and/or spatial dims
+        rv = self._to(rv, rs, replicated(self.mesh, rs.rank))
+        dn = eqn.params["dimension_numbers"]
+        assert dn.lhs_spec[0] == 0 and dn.lhs_spec[1] == 1, "NC*spatial layout only"
+        sharded = [
+            (d, ls.dims_mapping[d][0])
+            for d in range(2, ls.rank)
+            if ls.dims_mapping[d]
+        ]
+        if ls.dims_mapping[1]:
+            # feature-dim sharded: contract locally then psum (Megatron-style)
+            ax = ls.dims_mapping[1]
+            idx = lax.axis_index(ax[0])
+            n = self.mesh.axis_size(ax[0])
+            size = rv.shape[1] // n
+            rv_local = lax.dynamic_slice_in_dim(rv, idx * size, size, axis=1)
+            out = lax.conv_general_dilated(
+                lv, rv_local,
+                window_strides=eqn.params["window_strides"],
+                padding=eqn.params["padding"],
+            )
+            out = lax.psum(out, ax)
+            osh = Sharding(self.mesh, (ls.dims_mapping[0], ()) + ((),) * (ls.rank - 2))
+            self.write(eqn.outvars[0], out, osh)
+            return
+        out = sharded_conv_nd(
+            lv, rv,
+            sharded=sharded,
+            window_strides=eqn.params["window_strides"],
+            padding=eqn.params["padding"],
+        )
+        dm = list(ls.dims_mapping)
+        osh = Sharding(self.mesh, tuple(dm))
+        self.write(eqn.outvars[0], out, osh)
+
+    def _pjit(self, eqn):
+        sub = eqn.params["jaxpr"]
+        inner_prop = self.prop.sub.get(id(eqn)) or Propagation(sub.jaxpr, self.mesh)
+        inner = SpmdPartitioner(inner_prop, self.mesh)
+        # seed inner input shardings from our current ones
+        vals, shs = zip(*(self.read(v) for v in eqn.invars)) if eqn.invars else ((), ())
+        for iv, s in zip(sub.jaxpr.invars, shs):
+            if inner_prop.get(iv) is None:
+                inner_prop.env[iv] = s
+        outs = inner.run(sub.jaxpr, sub.consts, *vals)
+        for ov, iv, o in zip(eqn.outvars, sub.jaxpr.outvars, outs):
+            osh = inner_prop.get(iv) or replicated(self.mesh, np.ndim(o))
+            self.write(ov, o, osh)
+
+    def _scan(self, eqn):
+        p = eqn.params
+        nc, nk = p["num_consts"], p["num_carry"]
+        closed = p["jaxpr"]
+        inner_prop = self.prop.sub.get(id(eqn)) or Propagation(closed.jaxpr, self.mesh)
+        vals_shs = [self.read(v) for v in eqn.invars]
+        consts = [v for v, _ in vals_shs[:nc]]
+        init = [v for v, _ in vals_shs[nc : nc + nk]]
+        xs = [v for v, _ in vals_shs[nc + nk :]]
+
+        def body(carry, x):
+            inner = SpmdPartitioner(inner_prop, self.mesh)
+            outs = inner.run(closed.jaxpr, closed.consts, *consts, *carry, *x)
+            return tuple(outs[:nk]), tuple(outs[nk:])
+
+        carry, ys = lax.scan(body, tuple(init), tuple(xs), length=p.get("length"))
+        outs = list(carry) + list(ys)
+        for ov, bodyv, o in zip(
+            eqn.outvars, closed.jaxpr.outvars, outs
+        ):
+            osh = inner_prop.get(bodyv)
+            if osh is None:
+                osh = replicated(self.mesh, np.ndim(o))
+            elif ov in eqn.outvars[nk:]:
+                osh = Sharding(self.mesh, ((),) + osh.dims_mapping)
+            self.write(ov, o, osh)
+
+    def _fallback(self, eqn):
+        """Gather → global op → reshard to the propagated sharding (§4.5)."""
+        vals = []
+        for v in eqn.invars:
+            val, sh = self.read(v)
+            vals.append(self._to(val, sh, replicated(self.mesh, sh.rank)))
+        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+        out = eqn.primitive.bind(*subfuns, *vals, **bind_params)
+        outs = out if eqn.primitive.multiple_results else [out]
+        for v, o in zip(eqn.outvars, outs):
+            want = self.prop.get(v) or replicated(self.mesh, np.ndim(o))
+            o2 = self._to(o, replicated(self.mesh, np.ndim(o)), want)
+            self.write(v, o2, want)
+
+
+def spmd_partition(fn, jmesh, mesh: Mesh):
+    """Partition ``fn`` with the reference partitioner and return a callable that
+    runs the SPMD program over ``jmesh`` via shard_map.
+
+    The user writes ``fn`` against global shapes with ``annotate`` hints; we trace,
+    complete shardings (propagation pass), then execute the partitioned program.
+    """
+
+    def runner(*args):
+        closed = jax.make_jaxpr(fn)(*args)
+        prop = propagate(closed, mesh)
+        in_specs = tuple(
+            to_partition_spec(prop.get(v) or replicated(mesh, v.aval.ndim))
+            for v in closed.jaxpr.invars
+        )
+        out_specs = tuple(
+            to_partition_spec(prop.get(v) or replicated(mesh, v.aval.ndim))
+            for v in closed.jaxpr.outvars
+        )
+
+        def local_fn(*local_args):
+            part = SpmdPartitioner(prop, mesh)
+            outs = part.run(closed.jaxpr, closed.consts, *local_args)
+            return outs if len(outs) > 1 else outs[0]
+
+        shmapped = jax.shard_map(
+            local_fn,
+            mesh=jmesh,
+            in_specs=in_specs,
+            out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+            check_vma=False,
+        )
+        return shmapped(*args)
+
+    return runner

@@ -1,0 +1,173 @@
+"""Pipeline parallelism reduced to tensor sharding (paper §3.3).
+
+The layer computation is vectorized over a leading stage dimension L (``vmap``),
+data flows between stages through a *shifting buffer*: each step the state rolls
+one stage to the right, stage 0 picks up a fresh microbatch.  Distribution is then
+just a sharding annotation on the L dimension — GSPMD lowers the roll into
+CollectivePermute (verified in tests on the compiled HLO).
+
+Both schedules from the paper are implemented:
+
+* **GPipe** (R=1): stage s holds layers [s*R_layers, ...) contiguously; total steps
+  = M + L - 1; bubble ratio (L-1)/(M+L-1).
+* **Circular** (R>1): stage s holds layers {s, s+L, s+2L, ...} round-robin; work
+  item (group g, round r, microbatch m) enters stage 0 at step (g*R + r)*L + m and
+  the buffer *wraps around* (a ring roll) from the last stage back to stage 0.
+  Total steps = M*R + L - 1 when L | M; bubble ratio (L-1)/(M*R+L-1) — this
+  reproduces the paper's Table 5 bubble numbers (e.g. L=8, M=16, R=4 → 9.8%).
+
+The wrapper takes a legacy single-stage function (OneStageCompute) and returns the
+pipelined computation over all microbatches; it is differentiable (scan+vmap+roll)
+so it slots directly into a training step, and remat can be applied to the stage
+function (the paper's recompute configuration, Table 4).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .annotate import annotate
+from .sharding import Mesh, Sharding, mesh_split
+
+
+def _shift_right_ring(state, wrap: bool):
+    """Shift the stage dim by one: state[s] <- state[s-1].
+
+    ``wrap=True`` rolls the last stage's output back to stage 0 (circular
+    schedule); GSPMD turns this into CollectivePermute when dim 0 is sharded.
+    """
+    rolled = jnp.roll(state, 1, axis=0)
+    if wrap:
+        return rolled
+    zero = jnp.zeros_like(rolled[:1])
+    return jnp.concatenate([zero, rolled[1:]], axis=0)
+
+
+def pipeline(
+    stage_fn: Callable,
+    stage_params,
+    microbatches,
+    *,
+    num_stages: int,
+    num_rounds: int = 1,
+    mesh: Optional[Mesh] = None,
+    stage_axis: Optional[str] = None,
+    remat: bool = False,
+):
+    """Run ``stage_fn(params_slice, x) -> y`` as an L-stage pipeline.
+
+    Args:
+      stage_fn: single-stage computation; same shapes for input/output (stages
+        are homogeneous — the paper's stated constraint).
+      stage_params: pytree with leading dims (L, R, ...) — per (stage, round)
+        parameter slices.  For GPipe pass R=1 (layers stacked contiguously is the
+        caller's choice of ordering).
+      microbatches: array (M, ...) of microbatch inputs.
+      num_stages: L.  num_rounds: R (circular schedule when > 1).
+      mesh/stage_axis: if given, annotate the shifting buffer's stage dim so the
+        propagation pass (and XLA) shard it — pipelining *as* sharding.
+      remat: apply jax.checkpoint to the stage function (paper Table 4).
+
+    Returns (M, ...) stacked outputs of the final layer per microbatch.
+    """
+    L, R = num_stages, num_rounds
+    M = microbatches.shape[0]
+    assert M % L == 0 or R == 1, "circular schedule expects L | M"
+    total_steps = M * R + L - 1 if R > 1 else M + L - 1
+
+    fn = jax.checkpoint(stage_fn) if remat else stage_fn
+    vfn = jax.vmap(fn, in_axes=(0, 0))
+
+    stage_ids = jnp.arange(L)
+    state0 = jnp.zeros((L,) + microbatches.shape[1:], microbatches.dtype)
+    # collected outputs, one slot per microbatch
+    out0 = jnp.zeros_like(microbatches)
+
+    def maybe_annotate(x):
+        if stage_axis is not None:
+            am = jax.sharding.get_abstract_mesh()
+            if am is not None and not am.empty and stage_axis in am.axis_names:
+                from jax.sharding import PartitionSpec as P
+
+                return jax.lax.with_sharding_constraint(
+                    x, P(stage_axis, *([None] * (x.ndim - 1)))
+                )
+        if mesh is not None and stage_axis is not None:
+            dm = [stage_axis] + [-1] * (x.ndim - 1)
+            return annotate(x, mesh_split(x.ndim, mesh, dm))
+        return x
+
+    def step(carry, t):
+        state, outs = carry
+        state = maybe_annotate(state)
+        shifted = _shift_right_ring(state, wrap=(R > 1))
+
+        # --- stage-0 injection -------------------------------------------------
+        # work item entering stage 0 at step t: m = t mod L (grouped) for R>1,
+        # round r = (t//L) % R, group g = (t//L)//R; fresh data only when r == 0.
+        if R > 1:
+            m_in = (t // L) // R * L + t % L
+            fresh = (t // L) % R == 0
+        else:
+            m_in = t
+            fresh = True
+        inp = lax.dynamic_index_in_dim(
+            microbatches, jnp.clip(m_in, 0, M - 1), axis=0, keepdims=False
+        )
+        use_fresh = jnp.logical_and(fresh, m_in < M)
+        # stage 0 takes fresh data when starting round 0; otherwise the wrapped
+        # value rolled around from the last stage (circular) / zeros (GPipe).
+        stage0_val = jnp.where(use_fresh, inp, shifted[0])
+        sel = jnp.concatenate([stage0_val[None], shifted[1:]], axis=0)
+
+        # --- per-stage round index & params ------------------------------------
+        # stage s at step t runs round r_s = ((t - s) // L) % R
+        k = t - stage_ids
+        r_s = jnp.where(k >= 0, (k // L) % R, 0)
+        params_t = jax.tree_util.tree_map(
+            lambda p: jax.vmap(lambda ps, r: lax.dynamic_index_in_dim(ps, r, 0, False))(
+                p, r_s
+            ),
+            stage_params,
+        )
+
+        new_state = vfn(params_t, sel)
+        new_state = maybe_annotate(new_state)
+
+        # --- collect final-layer outputs ----------------------------------------
+        # stage L-1 finishes item (g, r=R-1, m) at t = (g*R + R-1)*L + m + L - 1
+        k_last = t - (L - 1)
+        if R > 1:
+            m_out = (k_last // L) // R * L + k_last % L
+            done = jnp.logical_and(k_last >= 0, (k_last // L) % R == R - 1)
+        else:
+            m_out = k_last
+            done = k_last >= 0
+        done = jnp.logical_and(done, m_out < M)
+        outs = lax.cond(
+            done,
+            lambda o: lax.dynamic_update_index_in_dim(o, new_state[-1], jnp.clip(m_out, 0, M - 1), 0),
+            lambda o: o,
+            outs,
+        )
+        return (new_state, outs), None
+
+    # stage_params leading dims are (L, R, ...): move R next to select-by-round
+    (state, outs), _ = lax.scan(step, (state0, out0), jnp.arange(total_steps))
+    return outs
+
+
+def _expand(pred, ndim):
+    return pred.reshape(pred.shape + (1,) * (ndim - 1))
+
+
+def gpipe_bubble_ratio(num_stages: int, num_micro: int) -> float:
+    return (num_stages - 1) / (num_micro + num_stages - 1)
+
+
+def circular_bubble_ratio(num_stages: int, num_micro: int, num_rounds: int) -> float:
+    return (num_stages - 1) / (num_micro * num_rounds + num_stages - 1)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..models.ssm import ssd_scan_ref  # noqa: F401  (shared SSD oracle)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, group_size: int = 1):
+    """Naive attention oracle.  q (B,Hq,S,D); k,v (B,Hkv,T,D)."""
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    if group_size > 1:
+        k = jnp.repeat(k, group_size, axis=1)
+        v = jnp.repeat(v, group_size, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Mamba2 SSD (state space duality) Pallas TPU kernel.
+
+Grid (B, H, nc) with the chunk dim innermost/sequential: the inter-chunk SSM
+state (head_dim × d_state, f32) is carried in VMEM scratch across grid steps,
+while each chunk's quadratic intra-chunk part runs on the MXU:
+
+    G     = C · Bᵀ                        (Q × Q)
+    W     = tril(exp(l_t − l_s)) ⊙ G ⊙ dt (Q × Q)
+    y     = W · x  +  exp(l) ⊙ (C · Sᵀ)   (Q × hd)
+    S_new = exp(l_Q) S + (decay ⊙ dt ⊙ x)ᵀ · B
+
+Block sizes: chunk Q=128 (lane aligned), head_dim 64, d_state 128 —
+the working set (x,B,C blocks + two QxQ f32 + state 64×128 f32) is ~0.4 MB,
+well inside VMEM.  The pure-jnp oracle is models/ssm.ssd_scan_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash_attention import pl_scratch
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_ref, *, Q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)     # (Q, hd)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (Q,)
+    B = b_ref[0].astype(jnp.float32)               # (Q, ds)
+    C = c_ref[0].astype(jnp.float32)               # (Q, ds)
+    A = a_ref[0]                                    # scalar (negative)
+
+    loga = dt * A                                   # (Q,)
+    l = jnp.cumsum(loga)                            # (Q,)
+
+    # intra-chunk quadratic part
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q,Q)
+    diff = l[:, None] - l[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    W = jnp.where(rows >= cols, jnp.exp(diff), 0.0) * G * dt[None, :]
+    y_intra = jax.lax.dot(W, x, preferred_element_type=jnp.float32)  # (Q,hd)
+
+    # inter-chunk contribution from the carried state
+    s_prev = state_ref[...]                          # (hd, ds)
+    y_inter = jax.lax.dot_general(
+        C, s_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(l)[:, None]                          # (Q, hd)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: S = exp(l_Q) S + sum_s exp(l_Q - l_s) dt_s x_s (x) B_s
+    decay_end = jnp.exp(l[-1] - l) * dt              # (Q,)
+    upd = jax.lax.dot_general(
+        x * decay_end[:, None], B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # (hd, ds)
+    state_ref[...] = jnp.exp(l[-1]) * s_prev + upd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, B, C, A, *, chunk: int = 128, interpret: bool = True):
+    """x: (Bb,S,H,hd); dt: (Bb,S,H); B,C: (Bb,S,ds); A: (H,) negative.
+
+    Returns y (Bb,S,H,hd).  S % chunk == 0 required (§4.1: callers pad).
+    """
+    Bb, S, H, hd = x.shape
+    ds = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    grid = (Bb, H, nc)
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, Q, ds), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, ds), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, hd), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pl_scratch((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A)

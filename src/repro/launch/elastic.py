@@ -1,0 +1,26 @@
+"""Elastic scaling: restore a checkpoint onto a *different* mesh.
+
+On node failure/addition the coordinator rebuilds the mesh from the surviving
+device set and the job restores the last checkpoint with the new shardings —
+``checkpoint.restore`` device_puts every leaf with the target NamedSharding, so
+the reshard is a plain host-mediated load (on a real cluster, a distributed
+read where each host loads its shard slice).  This module provides the mesh
+re-derivation helper and is exercised in tests/test_checkpoint.py by saving on
+one mesh shape and restoring on another.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def derive_mesh(n_devices: int, model_parallel: int = None):
+    """Largest (data, model) mesh for the surviving device count."""
+    mp = model_parallel or min(16, n_devices)
+    while n_devices % mp:
+        mp -= 1
+    return jax.make_mesh(
+        (n_devices // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

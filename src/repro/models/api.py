@@ -1,0 +1,107 @@
+"""Family dispatch: one uniform interface over all model families.
+
+Every family exposes:
+  param_tree(cfg, st)            declarative param tree (shapes + specs)
+  loss_fn(cfg, st, params, batch)  scalar training loss
+  decode_step(cfg, st, params, token, cache, pos) -> (logits, new_cache)
+  cache_shapes(cfg, st, batch, max_len) -> dict of cache array shapes
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, Strategy
+from . import attention as attn_mod
+from . import encdec, hybrid, ssm_lm, transformer, vlm
+
+
+def family_module(cfg: ModelConfig):
+    return {
+        "dense": transformer,
+        "moe": transformer,  # MoE FFN handled inside the transformer layer
+        "hybrid": hybrid,
+        "ssm": ssm_lm,
+        "encdec": encdec,
+        "vlm": vlm,
+    }[cfg.family]
+
+
+def param_tree(cfg: ModelConfig, st: Strategy):
+    return family_module(cfg).param_tree(cfg, st)
+
+
+def loss_fn(cfg: ModelConfig, st: Strategy, params, batch):
+    return family_module(cfg).loss_fn(cfg, st, params, batch)
+
+
+def decode_step(cfg: ModelConfig, st: Strategy, params, token, cache, pos):
+    return family_module(cfg).decode_step(cfg, st, params, token, cache, pos)
+
+
+def cache_shapes(cfg: ModelConfig, st: Strategy, batch: int, max_len: int) -> Dict[str, tuple]:
+    mod = family_module(cfg)
+    if hasattr(mod, "cache_shapes"):
+        if cfg.family == "encdec":
+            return mod.cache_shapes(cfg, st, batch, max_len, enc_len=1500)
+        return mod.cache_shapes(cfg, st, batch, max_len)
+    # dense/moe/vlm transformers: plain kv cache (superblocked when moe_every>1)
+    from .transformer import superblock
+
+    K, G, r, Gp, KR = attn_mod.head_layout(cfg, st)
+    sb = superblock(cfg)
+    if sb == 1:
+        return {
+            "k": (cfg.num_layers, batch, max_len, KR, cfg.dh),
+            "v": (cfg.num_layers, batch, max_len, KR, cfg.dh),
+        }
+    nb = cfg.num_layers // sb
+    return {
+        "k": (nb, sb, batch, max_len, KR, cfg.dh),
+        "v": (nb, sb, batch, max_len, KR, cfg.dh),
+    }
+
+
+def cache_specs(cfg: ModelConfig, st: Strategy) -> Dict[str, Any]:
+    """PartitionSpec per cache entry (leading layer dim unsharded)."""
+    from jax.sharding import PartitionSpec as P
+
+    def with_lead(spec):
+        return P(*((None,) + tuple(spec)))
+
+    seq_ax = "kv_seq" if cfg.shard_kv_seq else None
+
+    def padded(spec_logical, shape):
+        """NB: build at full rank — PartitionSpec trims trailing Nones, so lead
+        padding must come from the SHAPE rank, never len(spec)."""
+        lead = (None,) * (len(shape) - len(spec_logical))
+        return st.a(*(lead + spec_logical))
+
+    out = {}
+    for name, shape in cache_shapes(cfg, st, 1, 2).items():
+        if name in ("k", "v", "ek", "ev"):
+            out[name] = padded(("batch", seq_ax, "kv", None), shape)
+        elif name == "s":
+            out[name] = padded(("batch", "heads", None, None), shape)
+        elif name == "conv":
+            out[name] = padded(("batch", None, "heads", None), shape)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, st: Strategy, batch: int, max_len: int, sharding_for=None):
+    from .base_filter import filter_for_shape
+
+    shapes = cache_shapes(cfg, st, batch, max_len)
+    specs = cache_specs(cfg, st)
+    dt = jnp.bfloat16
+
+    def mk(name, shape):
+        dtype = jnp.float32 if name in ("s",) else dt
+        if sharding_for is None:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        spec = filter_for_shape(specs[name], shape)
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding_for(spec))
+
+    return {name: mk(name, shape) for name, shape in shapes.items()}

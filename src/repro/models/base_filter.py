@@ -1,0 +1,11 @@
+"""Spec filtering against the active mesh (divisibility fallback, §4.1)."""
+import jax
+
+from ..configs.base import filter_spec_by_shape
+
+
+def filter_for_shape(spec, shape):
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return spec
+    return filter_spec_by_shape(spec, shape, mesh)

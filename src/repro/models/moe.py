@@ -1,0 +1,131 @@
+"""Mixture-of-Experts layer (paper §5.4/§5.5, GShard-style token-choice routing).
+
+Sharding follows the paper's hybrid configuration: the expert dim E is sharded on
+X (data axis); per-expert H on Y.  Tokens enter batch-sharded on X; the dispatched
+(B, E, C, M) tensor is re-annotated with E on X, which GSPMD lowers to the
+characteristic **AllToAll** (Figure 8) — asserted in tests on compiled HLO.
+
+Dispatch is scatter-based (positions via a cumulative sum over expert one-hots)
+rather than the GShard dispatch-einsum, so the (tokens × E × C) one-hot tensor is
+never materialized in float — the production-memory-sane formulation.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, Strategy
+from .layers import Params, mlp_params, mlp_forward, pspec
+
+
+def capacity(cfg: ModelConfig, tokens_per_batch: int) -> int:
+    c = int(
+        tokens_per_batch * cfg.top_k * cfg.capacity_factor / cfg.num_experts
+    )
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_params(cfg: ModelConfig, st: Strategy):
+    E = cfg.num_experts
+    return {
+        "router": pspec((cfg.d_model, E), st.w("embed_vec"), fan_in=cfg.d_model),
+        "experts": mlp_params(cfg, st, d_ff=cfg.expert_d_ff, expert_dims=(E,)),
+    }
+
+
+def moe_forward(cfg: ModelConfig, st: Strategy, p: Params, x):
+    """x: (B, S, M) -> (B, S, M).
+
+    Routing groups are batch rows when S is large (GShard-style); for short
+    sequences (decode: S=1) tokens are POOLED across the batch so the capacity
+    floor doesn't multiply into E×C dead slots per token."""
+    B0, S0, M = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    pooled = S0 * K < 2 * E and B0 > 1
+    if pooled:
+        x = x.reshape(1, B0 * S0, M)
+        x = st.constrain(x, None, "batch", "embed")  # tokens stay data-sharded
+    B, S, M = x.shape
+    C = capacity(cfg, S)
+    dt = x.dtype
+
+    # --- routing (fp32) ---------------------------------------------------------
+    gates = jnp.einsum("bsm,me->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(gates, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (B,S,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (GShard): mean fraction * mean prob per expert
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(top_e[..., 0], E).mean(axis=(0, 1))
+    aux_loss = E * jnp.sum(me * ce)
+
+    # --- dispatch positions (sort-based) --------------------------------------
+    # position-within-expert via a stable argsort over (SK,) int vectors — the
+    # (SK x E) one-hot/cumsum tensors of the GShard formulation never
+    # materialize (§Perf B4: they dominated HLO bytes for high-top-k MoEs).
+    flat_e = top_e.reshape(B, S * K)
+    perm = jnp.argsort(flat_e, axis=1, stable=True)  # (B, SK)
+    sorted_e = jnp.take_along_axis(flat_e, perm, axis=1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E), side="left")
+    )(sorted_e)  # (B, E)
+    pos_sorted = jnp.arange(S * K)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1
+    )
+    inv = jnp.argsort(perm, axis=1)
+    mypos = jnp.take_along_axis(pos_sorted, inv, axis=1)  # (B, SK)
+    keep = mypos < C
+
+    # --- scatter tokens into (B, E, C, M) -----------------------------------------
+    xk = jnp.reshape(
+        jnp.broadcast_to(x[:, :, None, :], (B, S, K, M)), (B, S * K, M)
+    )
+    w = (top_p.reshape(B, S * K) * keep).astype(dt)
+
+    def scatter_one(tok, e_idx, pos, kp):
+        buf = jnp.zeros((E, C, M), dt)
+        return buf.at[e_idx, jnp.where(kp, pos, 0)].add(
+            tok * kp[:, None].astype(dt), mode="drop"
+        )
+
+    disp = jax.vmap(scatter_one)(xk, flat_e, mypos, keep)  # (B,E,C,M)
+    disp = st.constrain(disp, "batch", None, None, "embed")
+    # re-annotate with E sharded -> GSPMD inserts AllToAll (Figure 8a); the
+    # batch dim (now full per device group) picks up the pod axis on multi-pod.
+    # When the strategy does not shard experts (replicated-expert data parallel,
+    # e.g. fsdp_1d) the dispatch stays batch-sharded: NO AllToAll at all.
+    expert_sharded = st.axis_size("expert", "act") > 1
+    if expert_sharded:
+        disp = st.constrain(disp, "moe_batch", "expert", None, "embed")
+
+    # --- expert computation (per-expert batched einsums) ---------------------------
+    ep = p["experts"]
+    if "wi_gate" in ep:
+        g = jnp.einsum("becm,emh->bech", disp, ep["wi_gate"].astype(dt))
+        u = jnp.einsum("becm,emh->bech", disp, ep["wi_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        g = jnp.einsum("becm,emh->bech", disp, ep["wi"].astype(dt))
+        h = jnp.square(jax.nn.relu(g)) if cfg.mlp == "relu2" else jax.nn.gelu(g)
+    if expert_sharded:
+        h = st.constrain(h, "moe_batch", "expert", None, "expert_mlp")
+    h = jnp.einsum("bech,ehm->becm", h, ep["wo"].astype(dt))
+    if expert_sharded:
+        h = st.constrain(h, "moe_batch", "expert", None, "embed")
+    # AllToAll back to batch sharding
+    h = st.constrain(h, "batch", None, None, "embed")
+
+    # --- combine -------------------------------------------------------------------
+    def gather_one(buf, e_idx, pos):
+        return buf[e_idx, pos]  # (SK, M)
+
+    out_tok = jax.vmap(gather_one)(h, flat_e, jnp.where(keep, mypos, 0))
+    out_tok = out_tok * w[..., None]
+    out = out_tok.reshape(B, S, K, M).sum(axis=2)
+    if pooled:
+        out = out.reshape(B0, S0, M)
+    out = st.constrain(out, "batch", "seq", "embed")
+    return out, aux_loss

@@ -1,0 +1,220 @@
+"""Mamba2 (SSD — state space duality, arXiv:2405.21060) block and LM.
+
+The paper's technique (GSPMD annotation+propagation) is dimension-agnostic, so the
+SSM shards exactly like an MLP: projections sharded on (embed->X, inner->Y); the
+per-head scan dims use the same §4.1 pad-to-multiple trick as attention heads
+(mamba2-130m has 24 heads on a 16-wide model axis -> padded to 32, zero-dt padded
+heads contribute exactly zero state).
+
+Chunked SSD: within-chunk quadratic (attention-like einsums with a decay mask),
+across-chunk sequential state scan — states only materialize at chunk boundaries.
+This pure-jnp implementation is also the oracle for kernels/ssd_scan.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, Strategy
+from ..core.sharding import pad_to_multiple
+from .layers import Params, pspec, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig, st: Strategy):
+    d_in = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    H = d_in // hd
+    tp = st.axis_size("heads")
+    Hp = pad_to_multiple(H, max(tp, 1))
+    return d_in, hd, H, Hp
+
+
+def ssm_params(cfg: ModelConfig, st: Strategy):
+    M, ds = cfg.d_model, cfg.ssm_state
+    d_in, hd, H, Hp = ssm_dims(cfg, st)
+    # shard true head dims only when divisible; else ride head_dim on Y (§4.1:
+    # padding is applied in-graph, the stored params stay faithful)
+    h = st.w_div("heads", H)
+    hdx = None if h else "mlp"
+    return {
+        "wz": pspec((M, H, hd), st.w("embed", h, hdx), fan_in=M),
+        "wx": pspec((M, H, hd), st.w("embed", h, hdx), fan_in=M),
+        "wB": pspec((M, ds), st.w("embed", "mlp"), fan_in=M),
+        "wC": pspec((M, ds), st.w("embed", "mlp"), fan_in=M),
+        "wdt": pspec((M, H), st.w("embed", h), fan_in=M),
+        "dt_bias": pspec((H,), st.w(h), init="zeros"),
+        "A_log": pspec((H,), st.w(h), init="zeros"),
+        "D": pspec((H,), st.w(h), init="ones"),
+        "conv_w": pspec((cfg.ssm_conv, H, hd), st.w(None, h, hdx), fan_in=cfg.ssm_conv),
+        "norm": pspec((H, hd), st.w(h, hdx), init="ones"),
+        "wo": pspec((H, hd, M), st.w(h, hdx, "embed"), fan_in=d_in),
+    }
+
+
+def _pad_heads(x, H, Hp, axis):
+    if Hp == H:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, Hp - H)
+    return jnp.pad(x, pads)
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B,S,Hp,hd), w (K,Hp,hd)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        shift = K - 1 - k
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs * w[k]
+    return out
+
+
+def ssd_scan_ref(x, dt, B, C, A, chunk: int):
+    """Chunked SSD.  x (B,S,Hp,hd), dt (B,S,Hp), B/C (B,S,ds), A (Hp,) negative.
+
+    Returns y (B,S,Hp,hd).  Pure-jnp oracle shared with the Pallas kernel.
+    """
+    Bb, S, Hp, hd = x.shape
+    ds = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    xc = x.reshape(Bb, nc, Q, Hp, hd)
+    dtc = dt.reshape(Bb, nc, Q, Hp)
+    Bc = B.reshape(Bb, nc, Q, ds)
+    Cc = C.reshape(Bb, nc, Q, ds)
+
+    loga = dtc * A  # (B,nc,Q,Hp), negative
+    l = jnp.cumsum(loga, axis=2)  # within-chunk cumulative log decay
+
+    # intra-chunk: y[t] += sum_{s<=t} exp(l_t - l_s) dt_s (C_t . B_s) x_s
+    G = jnp.einsum("bnqd,bnsd->bnqs", Cc, Bc)  # (B,nc,Q,Q)
+    diff = l[:, :, :, None, :] - l[:, :, None, :, :]  # (B,nc,Q,S,Hp) t,s
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    W = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    W = W * G[..., None] * dtc[:, :, None, :, :]  # (B,nc,Q,Q,Hp) [t,s]
+    y_intra = jnp.einsum("bnqsh,bnshp->bnqhp", W, xc)
+
+    # chunk-end states: S_n = sum_s exp(l_Q - l_s) dt_s B_s (x) x_s
+    decay_end = jnp.exp(l[:, :, -1:, :] - l)  # (B,nc,Q,Hp)
+    Sc = jnp.einsum(
+        "bnsh,bnsd,bnshp->bnhpd", decay_end * dtc, Bc, xc
+    )  # (B,nc,Hp,hd,ds)
+
+    # inter-chunk scan (sequential over nc chunks)
+    A_chunk = jnp.exp(l[:, :, -1, :])  # (B,nc,Hp) total chunk decay
+
+    def step(s_prev, inp):
+        a_n, s_n = inp
+        s_new = a_n[:, :, None, None] * s_prev + s_n
+        return s_new, s_prev  # emit state BEFORE this chunk
+
+    s0 = jnp.zeros((Bb, Hp, hd, ds), x.dtype)
+    _, S_prev = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(A_chunk, 1, 0), jnp.moveaxis(Sc, 1, 0)),
+    )
+    S_prev = jnp.moveaxis(S_prev, 0, 1)  # (B,nc,Hp,hd,ds)
+
+    y_inter = jnp.einsum("bnqd,bnhpd->bnqhp", Cc, S_prev) * jnp.exp(l)[..., None]
+    y = (y_intra + y_inter).reshape(Bb, S, Hp, hd)
+    return y
+
+
+def ssm_forward(cfg: ModelConfig, st: Strategy, p: Params, x, chunk: int = 128):
+    """x (B,S,M) -> (B,S,M)."""
+    dt_ = jnp.dtype(cfg.dtype)
+    Bb, S, M = x.shape
+    d_in, hd, H, Hp = ssm_dims(cfg, st)
+    ds = cfg.ssm_state
+
+    z = jnp.einsum("bsm,mhp->bshp", x, p["wz"].astype(dt_))
+    xr = jnp.einsum("bsm,mhp->bshp", x, p["wx"].astype(dt_))
+    Bm = jnp.einsum("bsm,md->bsd", x, p["wB"].astype(dt_)).astype(jnp.float32)
+    Cm = jnp.einsum("bsm,md->bsd", x, p["wC"].astype(dt_)).astype(jnp.float32)
+    dt_raw = jnp.einsum("bsm,mh->bsh", x, p["wdt"].astype(dt_))
+
+    # pad heads to the shardable multiple; padded heads get dt=0 -> zero state
+    z = _pad_heads(z, H, Hp, 2)
+    xr = _pad_heads(xr, H, Hp, 2)
+    dt_raw = _pad_heads(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32), H, Hp, 2)
+    conv_w = _pad_heads(p["conv_w"].astype(dt_), H, Hp, 1)
+    A = _pad_heads(-jnp.exp(p["A_log"].astype(jnp.float32)), H, Hp, 0)
+    D = _pad_heads(p["D"].astype(jnp.float32), H, Hp, 0)
+
+    z = st.constrain(z, "batch", "seq", "heads", None)
+    xr = st.constrain(xr, "batch", "seq", "heads", None)
+
+    xr = jax.nn.silu(_causal_conv(xr, conv_w))
+    dt = jax.nn.softplus(dt_raw) * (jnp.arange(Hp) < H)  # mask padded heads
+
+    y = ssd_scan_ref(
+        xr.astype(jnp.float32), dt, Bm, Cm, A, chunk
+    )
+    y = y + D[None, None, :, None] * xr.astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    norm = _pad_heads(p["norm"].astype(jnp.float32), H, Hp, 0)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * norm).astype(dt_)
+    y = st.constrain(y, "batch", "seq", "heads", None)
+
+    wo = _pad_heads(p["wo"].astype(dt_), H, Hp, 0)  # zero rows: mask padded heads
+    out = jnp.einsum("bshp,hpm->bsm", y, wo)
+    return st.constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------------
+# decode: recurrent state update
+# ---------------------------------------------------------------------------------
+
+
+def ssm_state_shapes(cfg: ModelConfig, st: Strategy, batch: int):
+    d_in, hd, H, Hp = ssm_dims(cfg, st)
+    return {
+        "s": (batch, Hp, hd, cfg.ssm_state),
+        "conv": (batch, cfg.ssm_conv - 1, Hp, hd),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, st: Strategy, p: Params, x, state):
+    """x (B,1,M); state {"s": (B,Hp,hd,ds), "conv": (B,K-1,Hp,hd)}."""
+    dt_ = jnp.dtype(cfg.dtype)
+    Bb = x.shape[0]
+    d_in, hd, H, Hp = ssm_dims(cfg, st)
+
+    z = jnp.einsum("bsm,mhp->bshp", x, p["wz"].astype(dt_))[:, 0]
+    xr = jnp.einsum("bsm,mhp->bshp", x, p["wx"].astype(dt_))[:, 0]
+    Bm = jnp.einsum("bsm,md->bsd", x, p["wB"].astype(dt_))[:, 0].astype(jnp.float32)
+    Cm = jnp.einsum("bsm,md->bsd", x, p["wC"].astype(dt_))[:, 0].astype(jnp.float32)
+    dt_raw = jnp.einsum("bsm,mh->bsh", x, p["wdt"].astype(dt_))[:, 0]
+
+    z = _pad_heads(z, H, Hp, 1)
+    xr = _pad_heads(xr, H, Hp, 1)
+    dt_raw = _pad_heads(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32), H, Hp, 1)
+    conv_w = _pad_heads(p["conv_w"].astype(dt_), H, Hp, 1)
+    A = _pad_heads(-jnp.exp(p["A_log"].astype(jnp.float32)), H, Hp, 0)
+    D = _pad_heads(p["D"].astype(jnp.float32), H, Hp, 0)
+
+    # conv over the buffered last K-1 inputs + current
+    buf = jnp.concatenate([state["conv"], xr[:, None]], axis=1)  # (B,K,Hp,hd)
+    xr = jax.nn.silu(jnp.einsum("bkhp,khp->bhp", buf, conv_w))
+    new_conv = buf[:, 1:]
+
+    dt = jax.nn.softplus(dt_raw) * (jnp.arange(Hp) < H)
+    a = jnp.exp(dt * A)  # (B,Hp)
+    s = state["s"] * a[..., None, None] + (dt[..., None] * xr.astype(jnp.float32))[
+        ..., None
+    ] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpd,bd->bhp", s, Cm) + D[None, :, None] * xr.astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    norm = _pad_heads(p["norm"].astype(jnp.float32), H, Hp, 0)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * norm).astype(dt_)
+    wo = _pad_heads(p["wo"].astype(dt_), H, Hp, 0)
+    out = jnp.einsum("bhp,hpm->bm", y, wo)[:, None]
+    return out, {"s": s, "conv": new_conv}

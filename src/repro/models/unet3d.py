@@ -1,0 +1,80 @@
+"""3D U-Net for the spatial-partitioning case study (paper §5.6, Table 8).
+
+Sharding annotations are required *only on the model input* (the paper's point):
+spatial dims propagate through every conv layer.  Convolutions partitioned on a
+spatial dim lower to halo exchange (core/halo.py in the reference partitioner;
+XLA's own halo pass in the jit path).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig, Strategy
+from .layers import Params, pspec, tree_init
+
+
+def conv_param(cin, cout, k=3):
+    return pspec((cout, cin, k, k, k), None, fan_in=cin * k * k * k)
+
+
+def param_tree(base: int = 8, levels: int = 2):
+    p = {}
+    c = 1
+    for i in range(levels):
+        cout = base * (2 ** i)
+        p[f"down{i}_a"] = conv_param(c, cout)
+        p[f"down{i}_b"] = conv_param(cout, cout)
+        c = cout
+    p["mid"] = conv_param(c, c * 2)
+    c = c * 2
+    for i in reversed(range(levels)):
+        cout = base * (2 ** i)
+        p[f"up{i}_a"] = conv_param(c + cout, cout)
+        p[f"up{i}_b"] = conv_param(cout, cout)
+        c = cout
+    p["out"] = conv_param(c, 1, k=1)
+    return p
+
+
+def _conv(x, w, stride=1):
+    return lax.conv_general_dilated(
+        x, w, (stride,) * 3, [(w.shape[-1] // 2,) * 2] * 3
+    )
+
+
+def forward(params: Params, x, st: Strategy = None):
+    """x: (N, 1, D, H, W); spatial dim 2 annotated for sharding."""
+
+    def cs(v):
+        if st is None:
+            return v
+        return st.constrain(v, "batch", None, "spatial", None, None)
+
+    x = cs(x)
+    skips = []
+    levels = sum(1 for k in params if k.startswith("down") and k.endswith("_a"))
+    for i in range(levels):
+        x = jax.nn.relu(_conv(x, params[f"down{i}_a"]))
+        x = cs(jax.nn.relu(_conv(x, params[f"down{i}_b"])))
+        skips.append(x)
+        x = lax.reduce_window(
+            x, -jnp.inf, lax.max, (1, 1, 2, 2, 2), (1, 1, 2, 2, 2), "VALID"
+        )
+    x = cs(jax.nn.relu(_conv(x, params["mid"])))
+    for i in reversed(range(levels)):
+        # nearest-neighbor 2x upsample
+        for d in (2, 3, 4):
+            x = jnp.repeat(x, 2, axis=d)
+        x = jnp.concatenate([x, skips[i]], axis=1)
+        x = jax.nn.relu(_conv(x, params[f"up{i}_a"]))
+        x = cs(jax.nn.relu(_conv(x, params[f"up{i}_b"])))
+    return _conv(x, params["out"])
+
+
+def loss_fn(params, batch, st: Strategy = None):
+    pred = forward(params, batch["image"], st)
+    return jnp.mean((pred - batch["target"]) ** 2)

@@ -1,0 +1,205 @@
+"""Optimizers with sharded state (weight-update/optimizer-state sharding, §2.1/§3.2).
+
+Adafactor (Shazeer & Stern) is the paper's optimizer (§5.1); AdamW and SGD are
+provided for the smaller examples.  Optimizer state inherits the parameter's
+sharding (the ZeRO-equivalence the paper describes: annotate the weight on both
+mesh axes and the sharded optimizer update falls out of GSPMD automatically).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+    state_spec: Callable  # (param_spec_leaf, shape) -> state spec pytree for leaf
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+# ---------------------------------------------------------------------------------
+# Adafactor (factored second moments for >=2D params)
+# ---------------------------------------------------------------------------------
+
+
+def make_adafactor(
+    lr: float = 1e-2,
+    min_dim_factored: int = 2,
+    decay_pow: float = 0.8,
+    clip_threshold: float = 1.0,
+    eps: float = 1e-30,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def factored(shape) -> bool:
+        return len(shape) >= min_dim_factored and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def mk(p):
+            if factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"mu": jax.tree_util.tree_map(mk, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_pow)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if factored(p.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., None]
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)[..., None]
+                ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)
+            scale = lr * jnp.maximum(_rms(p.astype(jnp.float32)), 1e-3)
+            newp = p.astype(jnp.float32) - scale * u
+            if weight_decay:
+                newp = newp - lr * weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), ns
+
+        flat_g, td = jax.tree_util.tree_flatten(grads)
+        flat_s = td.flatten_up_to(state["mu"])
+        flat_p = td.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        newp = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+        news = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+        return newp, {"mu": news}
+
+    def state_spec(spec, shape):
+        from jax.sharding import PartitionSpec as P
+
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        if factored(shape):
+            return {"vr": P(*entries[:-1]), "vc": P(*(entries[:-2] + entries[-1:]))}
+        return {"v": P(*entries)}
+
+    return Optimizer("adafactor", init, update, state_spec)
+
+
+# ---------------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------------
+
+
+def make_adamw(
+    lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            newp = p.astype(jnp.float32) - lr * (
+                mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            )
+            return newp.astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        newp = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"m": m, "v": v}
+
+    def state_spec(spec, shape):
+        from jax.sharding import PartitionSpec as P
+
+        return {"m": P(*spec), "v": P(*spec)}
+
+    return Optimizer("adamw", init, update, state_spec)
+
+
+def make_sgd(lr: float = 0.1, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if not momentum:
+            return {}
+        return {"m": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if not momentum:
+            newp = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads,
+            )
+            return newp, state
+        m = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["m"], grads
+        )
+        newp = jax.tree_util.tree_map(
+            lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype), params, m
+        )
+        return newp, {"m": m}
+
+    def state_spec(spec, shape):
+        from jax.sharding import PartitionSpec as P
+
+        return {"m": P(*spec)} if momentum else {}
+
+    return Optimizer("sgd", init, update, state_spec)
+
+
+OPTIMIZERS = {"adafactor": make_adafactor, "adamw": make_adamw, "sgd": make_sgd}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)
+
+
+def opt_state_specs(opt: Optimizer, param_specs, param_shapes):
+    """Pytree of PartitionSpecs for the optimizer state (sharded like params)."""
+    flat_spec, td = jax.tree_util.tree_flatten(param_specs)
+    flat_shape = td.flatten_up_to(param_shapes)
+    mapped = [
+        opt.state_spec(sp, sh.shape if hasattr(sh, "shape") else sh)
+        for sp, sh in zip(flat_spec, flat_shape)
+    ]
+    inner = jax.tree_util.tree_unflatten(td, mapped)
+    if opt.name == "adafactor":
+        return {"mu": inner}
+    if opt.name == "adamw":
+        # restructure {leaf: {m,v}} -> {m: tree, v: tree}
+        m = jax.tree_util.tree_map(lambda d: d["m"], inner, is_leaf=lambda x: isinstance(x, dict) and "m" in x)
+        v = jax.tree_util.tree_map(lambda d: d["v"], inner, is_leaf=lambda x: isinstance(x, dict) and "m" in x)
+        return {"m": m, "v": v}
+    if opt.name == "sgd":
+        try:
+            m = jax.tree_util.tree_map(lambda d: d["m"], inner, is_leaf=lambda x: isinstance(x, dict) and "m" in x)
+            return {"m": m}
+        except Exception:
+            return {}
+    return inner

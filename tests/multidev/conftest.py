@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+# These tests need 8 fake devices (XLA_FLAGS set before jax init); when not
+# launched through test_multidev_launcher.py, collect nothing.
+if os.environ.get("REPRO_MULTIDEV") != "1":
+    collect_ignore_glob = ["*"]

@@ -1,0 +1,71 @@
+"""Property tests: halo-exchange conv == global conv over random window configs
+(paper §4.3/A.2 — including non-constant per-partition halos)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as hs
+from jax.sharding import PartitionSpec as P
+
+from repro.core.halo import _halo_bounds, sharded_conv_nd
+
+jmesh = jax.make_mesh((2, 4), ("x", "y"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rng = np.random.default_rng(0)
+
+
+@given(
+    kernel=hs.integers(2, 7),
+    stride=hs.integers(1, 3),
+    pad_lo=hs.integers(0, 4),
+    pad_hi=hs.integers(0, 4),
+)
+@settings(max_examples=30, deadline=None)
+def test_halo_conv_matches_global(kernel, stride, pad_lo, pad_hi):
+    n = 4  # shards on "y"
+    glen = 48
+    out_len = (glen + pad_lo + pad_hi - kernel) // stride + 1
+    if out_len % n or out_len <= 0:
+        return  # only evenly-partitioned outputs (§4.1 padding handled upstream)
+    x = rng.standard_normal((1, 2, glen)).astype(np.float32)
+    w = rng.standard_normal((3, 2, kernel)).astype(np.float32)
+    ref = jax.lax.conv_general_dilated(x, w, (stride,), [(pad_lo, pad_hi)])
+
+    def local(xl, wl):
+        return sharded_conv_nd(
+            xl, wl, sharded=[(2, "y")], window_strides=(stride,),
+            padding=[(pad_lo, pad_hi)],
+        )
+
+    got = jax.shard_map(
+        local, mesh=jmesh, in_specs=(P(None, None, "y"), P(None, None, None)),
+        out_specs=P(None, None, "y"), check_vma=False,
+    )(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(
+    kernel=hs.integers(1, 9),
+    stride=hs.integers(1, 4),
+    pad_lo=hs.integers(0, 8),
+    n=hs.sampled_from([2, 4, 8]),
+)
+@settings(max_examples=200, deadline=None)
+def test_halo_bounds_cover_needs(kernel, stride, pad_lo, n):
+    """The max-halo computation (Fig. 9) covers every partition's true need."""
+    local_in = 16
+    glen = local_in * n
+    out_len = (glen + pad_lo + pad_lo - kernel) // stride + 1
+    if out_len % n or out_len <= 0:
+        return
+    local_out = out_len // n
+    left, right = _halo_bounds(n, local_in, local_out, stride, pad_lo, kernel)
+    for i in range(n):
+        start_need = i * local_out * stride - pad_lo
+        end_need = ((i + 1) * local_out - 1) * stride - pad_lo + kernel
+        assert i * local_in - left <= start_need
+        assert (i + 1) * local_in + right >= end_need
+        # and the dynamic-slice offset is within the exchanged buffer
+        offset = i * (local_out * stride - local_in) + (left - pad_lo)
+        assert offset >= 0
+        assert offset + (local_out - 1) * stride + kernel <= local_in + left + right

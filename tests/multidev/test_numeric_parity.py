@@ -1,0 +1,110 @@
+"""GSPMD's core guarantee: partitioned (multi-device) == single-device numerics,
+for real model training steps across strategies; elastic checkpoint restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, get_strategy
+from repro.models import api
+from repro.models.layers import tree_init
+from repro.train import checkpoint as ckpt
+
+jmesh = jax.make_mesh((2, 4), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+CFG = ModelConfig(
+    name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+    num_kv_heads=2, d_ff=64, vocab_size=64, attn_chunk=16, remat="none",
+    qkv_bias=True,
+)
+
+
+@pytest.mark.parametrize("strategy", ["2d_attempt1", "2d_attempt2", "2d_finalized"])
+def test_sharded_loss_matches_unsharded(strategy):
+    st = get_strategy(strategy)
+    rng = jax.random.PRNGKey(0)
+    tok = jax.random.randint(rng, (8, 16), 0, CFG.vocab_size, jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+
+    # single-device oracle (no mesh context -> constraints are no-ops)
+    params = tree_init(api.param_tree(CFG, st), rng)
+    loss_ref = float(api.loss_fn(CFG, st, params, batch))
+
+    with jax.set_mesh(jmesh):
+        params_s = jax.tree_util.tree_map(jnp.asarray, params)
+        loss_sharded = float(
+            jax.jit(lambda p, b: api.loss_fn(CFG, st, p, b))(params_s, batch)
+        )
+    assert abs(loss_sharded - loss_ref) < 5e-2, (loss_sharded, loss_ref)
+
+
+def test_sharded_gqa_padded_heads_match():
+    """kv=2 heads on a 4-wide model axis exercises the replica/padded layout."""
+    st = get_strategy("2d_finalized")
+    rng = jax.random.PRNGKey(1)
+    cfg = CFG.with_(num_heads=6, num_kv_heads=2, head_dim=8)  # G=3, r=2 -> Gp=4
+    params = tree_init(api.param_tree(cfg, st), rng)
+    tok = jax.random.randint(rng, (8, 16), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    loss_ref = float(api.loss_fn(cfg, st, params, batch))
+    with jax.set_mesh(jmesh):
+        loss_sharded = float(
+            jax.jit(lambda p, b: api.loss_fn(cfg, st, p, b))(params, batch)
+        )
+    assert abs(loss_sharded - loss_ref) < 5e-2
+
+
+def test_moe_sharded_parity():
+    st = get_strategy("moe_2d")
+    cfg = CFG.with_(moe=True, num_experts=4, top_k=2, moe_every=1,
+                    capacity_factor=4.0)  # high capacity: no dropped tokens
+    rng = jax.random.PRNGKey(2)
+    params = tree_init(api.param_tree(cfg, st), rng)
+    tok = jax.random.randint(rng, (8, 16), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    loss_ref = float(api.loss_fn(cfg, st, params, batch))
+    with jax.set_mesh(jmesh):
+        loss_sharded = float(
+            jax.jit(lambda p, b: api.loss_fn(cfg, st, p, b))(params, batch)
+        )
+    assert abs(loss_sharded - loss_ref) < 5e-2
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Save sharded on (2,4); restore onto (4,2) and (8,1) — values identical
+    (the elastic-scaling path: mesh changes, checkpoint doesn't)."""
+    st = get_strategy("2d_finalized")
+    params = tree_init(api.param_tree(CFG, st), jax.random.PRNGKey(0))
+    d = str(tmp_path / "ck")
+    with jax.set_mesh(jmesh):
+        sharded = jax.jit(lambda p: p)(params)
+        ckpt.save(d, 1, sharded)
+    flat_ref = jax.tree_util.tree_leaves(params)
+    for shape in [(4, 2), (8, 1)]:
+        m2 = jax.make_mesh(shape, ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with jax.set_mesh(m2):
+            restored, _ = ckpt.restore(d, params)
+            flat_new = jax.tree_util.tree_leaves(restored)
+            for a, b in zip(flat_ref, flat_new):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manual_mode_subgroups():
+    """§3.4: manual subgraph on one mesh axis, automatic on the other."""
+    from repro.core.manual import manual
+
+    def local_fn(x):
+        # manual on "model": x arrives model-sharded, we psum manually
+        return jax.lax.psum(x, "model")
+
+    f = manual(local_fn, jmesh, in_specs=P(None, "model"), out_specs=P(None))
+    x = np.arange(32.0, dtype=np.float32).reshape(4, 8)
+    got = np.asarray(f(x))
+    # model axis = 4 shards of size 2 along dim 1; psum sums the shards
+    ref = x.reshape(4, 4, 2).sum(axis=1)
+    np.testing.assert_allclose(got, ref, rtol=1e-5)

@@ -1,0 +1,89 @@
+"""HLO parsing + roofline math tests."""
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_parse import collective_bytes, parse_collectives
+from repro.analysis.roofline import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms, count_params, extrapolate,
+    model_flops, terms_from_artifact,
+)
+from repro.configs.registry import get_config
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p = bf16[16,512]{1,0} parameter(0)
+  %ag = bf16[16,8192]{1,0} all-gather(bf16[16,512]{1,0} %p), replica_groups={{0,1,2,3}}, dimensions={1}
+  %ar = f32[128,64]{1,0} all-reduce(f32[128,64]{1,0} %x), replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = f32[8,64]{1,0} reduce-scatter(f32[128,64]{1,0} %y), replica_groups={{0,1}}, dimensions={0}
+  %a2a = bf16[4,32]{1,0} all-to-all(bf16[4,32]{1,0} %z), replica_groups={{0,1,2,3}}
+  %cp = bf16[4,32]{1,0} collective-permute(bf16[4,32]{1,0} %w), source_target_pairs={{0,1}}
+  %ags = bf16[16,8192]{1,0} all-gather-start(bf16[16,512]{1,0} %p2), replica_groups={{0,1,2,3}}
+}
+"""
+
+
+def test_parse_collectives():
+    recs = parse_collectives(HLO)
+    kinds = [r["kind"] for r in recs]
+    assert kinds.count("all-gather") == 2  # includes the -start variant
+    assert kinds.count("all-reduce") == 1
+    ag = next(r for r in recs if r["kind"] == "all-gather")
+    assert ag["result_bytes"] == 16 * 8192 * 2
+    assert ag["operand_bytes"] == 16 * 512 * 2
+    assert ag["group_size"] == 4
+    assert abs(ag["wire_bytes"] - 16 * 8192 * 2 * 3 / 4) < 1
+    ar = next(r for r in recs if r["kind"] == "all-reduce")
+    assert ar["group_size"] == 16  # iota format [16,16]<=[256]
+    assert abs(ar["wire_bytes"] - 2 * 128 * 64 * 4 * 15 / 16) < 1
+    summary = collective_bytes(HLO)
+    assert summary["count"] == len(recs)
+    assert summary["wire_bytes"] > 0
+
+
+def test_extrapolate_delta_trick():
+    # per-layer cost 7, base 3, L=24: q(1)=10, q(2)=17 -> total 3+24*7=171
+    assert extrapolate(10, 17, 1, 2, 24) == pytest.approx(171)
+    # flat (no scan contribution)
+    assert extrapolate(10, 10, 1, 2, 24) == pytest.approx(10)
+
+
+def test_roofline_terms():
+    t = RooflineTerms(
+        compute_s=0.1, memory_s=0.02, collective_s=0.3,
+        hlo_flops_per_dev=0.1 * PEAK_FLOPS, hlo_bytes_per_dev=0.02 * HBM_BW,
+        wire_bytes_per_dev=0.3 * ICI_BW, model_flops_total=0.05 * PEAK_FLOPS * 256,
+        chips=256,
+    )
+    assert t.dominant == "collective"
+    assert t.step_time_s == pytest.approx(0.3)
+    assert 0 < t.mfu < 1
+
+
+def test_param_counts_sane():
+    # qwen 0.5b: total params in [0.4B, 0.8B]
+    p = count_params(get_config("qwen1.5-0.5b"))
+    assert 3e8 < p["total"] < 8e8
+    # nemotron 340b within 25%
+    p = count_params(get_config("nemotron-4-340b"))
+    assert 2.6e11 < p["total"] < 4.3e11
+    # llama4 maverick: ~400B total, ~17B active
+    p = count_params(get_config("llama4-maverick-400b-a17b"))
+    assert 2.5e11 < p["total"] < 5.5e11
+    assert 0.8e10 < p["active"] < 3e10
+    # granite: ~1.3B total ~400M active
+    p = count_params(get_config("granite-moe-1b-a400m"))
+    assert 0.6e9 < p["total"] < 2.5e9
+    assert p["active"] < 0.9e9
+    # jamba 398B
+    p = count_params(get_config("jamba-1.5-large-398b"))
+    assert 2.5e11 < p["total"] < 5.5e11
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen1.5-0.5b")
+    f_train = model_flops(cfg, "train", 256, 4096)
+    f_dec = model_flops(cfg, "decode", 128, 32768)
+    assert f_train > f_dec
+    p = count_params(cfg)
+    assert f_train == pytest.approx(6 * p["active"] * 256 * 4096)

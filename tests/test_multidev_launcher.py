@@ -1,0 +1,28 @@
+"""Run tests/multidev/ in a subprocess with 8 fake CPU devices.
+
+The main test session must see exactly 1 device (smoke tests, benches), so the
+multi-device suite gets its own interpreter with XLA_FLAGS set before jax
+initializes."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.mark.timeout(1200)
+def test_multidev_suite():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["REPRO_MULTIDEV"] = "1"
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(HERE, "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", os.path.join(HERE, "multidev"),
+         "-x", "-q", "--no-header", "-p", "no:cacheprovider"],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0, "multidev suite failed (see output above)"

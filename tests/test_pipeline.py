@@ -1,0 +1,67 @@
+"""Pipeline-as-sharding tests (paper §3.3, Tables 4-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (
+    circular_bubble_ratio, gpipe_bubble_ratio, pipeline,
+)
+
+rng = np.random.default_rng(0)
+
+
+def _seq_ref(ws, xs, L, R):
+    out = []
+    for m in range(xs.shape[0]):
+        h = xs[m]
+        for r in range(R):
+            for s in range(L):
+                h = np.tanh(h @ ws[s, r])
+        out.append(h)
+    return np.stack(out)
+
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+
+@pytest.mark.parametrize("L,R,M", [(4, 1, 8), (4, 2, 8), (2, 3, 6), (8, 4, 16)])
+def test_pipeline_matches_sequential(L, R, M):
+    D = 8
+    ws = rng.standard_normal((L, R, D, D)).astype(np.float32) * 0.2
+    xs = rng.standard_normal((M, 2, D)).astype(np.float32)
+    got = pipeline(stage_fn, jnp.asarray(ws), jnp.asarray(xs),
+                   num_stages=L, num_rounds=R)
+    np.testing.assert_allclose(np.asarray(got), _seq_ref(ws, xs, L, R),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_pipeline_differentiable_with_remat():
+    L, R, M, D = 2, 2, 4, 8
+    ws = jnp.asarray(rng.standard_normal((L, R, D, D)).astype(np.float32) * 0.2)
+    xs = jnp.asarray(rng.standard_normal((M, 2, D)).astype(np.float32))
+
+    def loss(ws):
+        out = pipeline(stage_fn, ws, xs, num_stages=L, num_rounds=R, remat=True)
+        return jnp.sum(out ** 2)
+
+    g = jax.grad(loss)(ws)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).sum()) > 0
+
+
+def test_bubble_ratios_match_paper_table5():
+    """Conformer Table 5: L=8 stages. GPipe M=64 -> 9.6%; GPipe M=16 -> 29.9%;
+    circular M=16, R=4 (32 layers / 8 stages) -> 9.0%. Our closed forms give
+    9.9% / 30.4% / 9.9% — within ~1.5 points (the paper measures step-time
+    shares, we count schedule slots)."""
+    assert abs(gpipe_bubble_ratio(8, 64) - 0.096) < 0.015
+    assert abs(gpipe_bubble_ratio(8, 16) - 0.299) < 0.02
+    assert abs(circular_bubble_ratio(8, 16, 4) - 0.090) < 0.015
+
+
+def test_circular_beats_gpipe_at_same_microbatches():
+    """The paper's point: circular reaches GPipe-with-4x-microbatches bubbles."""
+    assert circular_bubble_ratio(8, 16, 4) < gpipe_bubble_ratio(8, 16) / 2
+    assert abs(circular_bubble_ratio(8, 16, 4) - gpipe_bubble_ratio(8, 64)) < 0.01

@@ -1,0 +1,122 @@
+"""Unit + property tests for the sharding representation (paper §3.1/§3.5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hs
+
+from repro.core.sharding import (
+    Mesh, Sharding, ShardingType, is_refinement, merge_shardings, mesh_split,
+    pad_to_multiple, padded_waste, replicated, to_partition_spec,
+)
+
+mesh = Mesh.create((2, 4), ("x", "y"))
+
+
+def test_three_types():
+    assert mesh_split(2, mesh, [-1, -1]).type == ShardingType.REPLICATED
+    assert mesh_split(2, mesh, ["x", "y"]).type == ShardingType.TILED
+    assert mesh_split(2, mesh, ["x", -1]).type == ShardingType.PARTIAL
+
+
+def test_device_assignment_figure1():
+    """Figure 1: tiled [[0,2],[1,3]] via device order; partial tiling subgroup."""
+    m = Mesh(np.array([[0, 2], [1, 3]]), ("a", "b"))  # user-chosen order (§3.1)
+    s = mesh_split(2, m, ["a", "b"])
+    assert s.device_assignment().tolist() == [[0, 2], [1, 3]]
+    s2 = mesh_split(2, Mesh.create((2, 2), ("a", "b")), [-1, "a"])
+    da = s2.device_assignment()
+    assert da.shape == (1, 2, 2)  # one tile dim=1, sharded dim=2, subgroup=2
+
+
+def test_offsets():
+    s = mesh_split(2, mesh, ["x", "y"])
+    # device 0 at (0,0); device 7 at (1,3) in the (2,4) mesh
+    assert s.offset(0, 0, 8) == 0
+    assert s.offset(7, 0, 8) == 4
+    assert s.offset(7, 1, 16) == 12
+
+
+def test_merge_compatible_orthogonal():
+    a = mesh_split(2, mesh, ["x", -1])
+    b = mesh_split(2, mesh, [-1, "y"])
+    m = merge_shardings(a, b)
+    assert m is not None and m.dims_mapping == (("x",), ("y",))
+
+
+def test_merge_incompatible():
+    a = mesh_split(2, mesh, ["x", -1])
+    b = mesh_split(2, mesh, ["y", "x"])  # x used on a different dim
+    assert merge_shardings(a, b) is None or merge_shardings(a, b).dims_mapping[0] == ("x",)
+
+
+def test_merge_same_axis_different_dims():
+    a = mesh_split(2, mesh, ["x", -1])
+    b = mesh_split(2, mesh, [-1, "x"])
+    assert merge_shardings(a, b) is None
+
+
+def test_refinement():
+    a = mesh_split(2, mesh, ["x", -1])
+    b = mesh_split(2, mesh, ["x", "y"])
+    assert is_refinement(b, a)
+    assert not is_refinement(a, b)
+
+
+def test_partition_spec_bridge():
+    s = mesh_split(3, mesh, ["x", -1, "y"])
+    spec = to_partition_spec(s)
+    assert tuple(spec) == ("x", None, "y")
+
+
+def test_padding():
+    assert pad_to_multiple(24, 16) == 32
+    assert pad_to_multiple(32, 16) == 32
+    assert abs(padded_waste(24, 16) - 8 / 24) < 1e-9
+
+
+# ---------------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------------
+
+axes_strategy = hs.lists(
+    hs.sampled_from([(), ("x",), ("y",), ("x", "y"), ("y", "x")]),
+    min_size=1, max_size=3,
+)
+
+
+def _valid(dm):
+    used = [a for axes in dm for a in axes]
+    return len(used) == len(set(used))
+
+
+@given(axes_strategy)
+@settings(max_examples=50, deadline=None)
+def test_merge_idempotent(dm):
+    if not _valid(dm):
+        return
+    s = Sharding(mesh, tuple(dm))
+    m = merge_shardings(s, s)
+    assert m is not None and m.dims_mapping == s.dims_mapping
+
+
+@given(axes_strategy, axes_strategy)
+@settings(max_examples=100, deadline=None)
+def test_merge_is_refinement_of_both(dm1, dm2):
+    if not (_valid(dm1) and _valid(dm2)) or len(dm1) != len(dm2):
+        return
+    a, b = Sharding(mesh, tuple(dm1)), Sharding(mesh, tuple(dm2))
+    m = merge_shardings(a, b)
+    if m is not None:
+        assert is_refinement(m, a)
+        assert is_refinement(m, b)
+
+
+@given(axes_strategy)
+@settings(max_examples=50, deadline=None)
+def test_device_assignment_is_permutation(dm):
+    """Every device appears exactly once in the assignment (zero duplication
+    for tiled dims; subgroups partition the mesh)."""
+    if not _valid(dm):
+        return
+    s = Sharding(mesh, tuple(dm))
+    da = s.device_assignment()
+    assert sorted(da.reshape(-1).tolist()) == list(range(mesh.size))
