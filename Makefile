@@ -1,0 +1,23 @@
+# Single entry point for CI / pre-merge verification.
+#
+#   make check        tier-1 tests + plan-layer smoke benchmark
+#   make test         tier-1 pytest only
+#   make bench-smoke  planned-collective counts + plan-cache hit rate
+#                     -> artifacts/bench/BENCH_plan.json
+#   make report       regenerate the dry-run / roofline / plan report tables
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: check test bench-smoke report
+
+check: test bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke
+
+report:
+	$(PY) -m repro.analysis.report

@@ -1,0 +1,167 @@
+"""Plan-layer smoke benchmark → ``artifacts/bench/BENCH_plan.json``.
+
+Records, per reshard benchmark cell, the planner's chosen collective sequence
+and its modeled wire bytes against the greedy AllGather-first baseline, plus
+the plan-cache hit rate of a repeated ``spmd_partition`` call and the
+planned-collective counts of a compiled plan.  Future PRs diff this artifact
+to track the perf trajectory (run via ``python -m benchmarks.run --smoke`` or
+``make bench-smoke``).
+
+Everything here is *pure planning* except the cache cell, which executes a
+tiny program on a 1×1 mesh — so the smoke target runs in seconds on a single
+CPU device.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import BENCH_ART
+
+# benchmark mesh for modeled-byte cells: a pod-like 4×8 (planning is pure, no
+# devices needed, so the mesh can be bigger than the host)
+_MESH_SHAPE = (4, 8)
+
+
+def _reshard_cells():
+    from repro.core.collective_planner import (
+        _candidate_gather_all, _candidate_legacy, plan_reshard, simulate,
+    )
+    from repro.core.sharding import Mesh, mesh_split
+
+    mesh = Mesh.create(_MESH_SHAPE, ("x", "y"))
+    # (name, src, dst, local shape under src) — a dim-move, a slice-before-
+    # gather, and a stacked-axes drop, on a 4 MiB fp32 operand
+    cases = [
+        ("dim_move_a2a",
+         mesh_split(2, mesh, ["y", -1]), mesh_split(2, mesh, [-1, "y"]),
+         (128, 1024)),
+        ("slice_before_gather",
+         mesh_split(2, mesh, ["x", -1]), mesh_split(2, mesh, [-1, "y"]),
+         (256, 1024)),
+        ("stacked_drop_inner_first",
+         mesh_split(2, mesh, [("x", "y"), -1]), mesh_split(2, mesh, ["x", -1]),
+         (32, 1024)),
+    ]
+    cells = []
+    for name, src, dst, local in cases:
+        prog = plan_reshard(src, dst, local, dtype_bytes=4)
+
+        def price(gen):
+            steps = gen(src, dst, local)
+            return simulate(src, dst, steps, local, 4) if steps is not None else None
+
+        # two reference points, both reported: the AllGather-first expression
+        # of the move, and the pre-planner greedy schedule (which already used
+        # AllToAll when the moving axis was innermost)
+        allgather_bytes = price(_candidate_gather_all)
+        legacy_bytes = price(_candidate_legacy)
+        cells.append({
+            "name": name,
+            "src": repr(src),
+            "dst": repr(dst),
+            "local_shape": list(local),
+            "planned": prog.collectives(),
+            "strategy": prog.strategy,
+            "planned_bytes": prog.cost_bytes,
+            "allgather_bytes": allgather_bytes,
+            "legacy_bytes": legacy_bytes,
+            "ratio_vs_allgather": (
+                prog.cost_bytes / allgather_bytes if allgather_bytes else 1.0
+            ),
+            "ratio_vs_legacy": (
+                prog.cost_bytes / legacy_bytes if legacy_bytes else 1.0
+            ),
+        })
+    return cells
+
+
+def _einsum_cell():
+    from repro.core.einsum_rules import compile_einsum
+    from repro.core.sharding import Mesh, mesh_split
+    from repro.analysis.roofline import collective_wire_bytes
+
+    mesh = Mesh.create(_MESH_SHAPE, ("x", "y"))
+    lhs = mesh_split(2, mesh, [-1, "y"])
+    rhs = mesh_split(2, mesh, ["y", -1])
+    out = mesh_split(2, mesh, ["y", -1])
+    plan = compile_einsum("bd,df->bf", lhs, rhs, out, (1024, 128), (128, 1024))
+    n = mesh.axis_size("y")
+    z_bytes = 1024 * 1024 * 4
+    # the pre-planner path also had the psum_scatter optimization, so here the
+    # AllReduce(+slice) expression is the only meaningful reference
+    ar = collective_wire_bytes("all-reduce", n, z_bytes)
+    return {
+        "name": "einsum_reduce_scatter",
+        "planned": plan.collectives(),
+        "planned_bytes": plan.cost_bytes,
+        "allgather_bytes": ar,
+        "legacy_bytes": plan.cost_bytes,
+        "ratio_vs_allgather": plan.cost_bytes / ar,
+        "ratio_vs_legacy": 1.0,
+    }
+
+
+def _cache_cell():
+    import jax.numpy as jnp
+
+    from repro.core import annotate, mesh_split
+    from repro.core.compat import make_jax_mesh
+    from repro.core.partitioner import spmd_partition
+    from repro.core.sharding import Mesh
+
+    jmesh = make_jax_mesh((1, 1), ("x", "y"))
+    mesh = Mesh.create((1, 1), ("x", "y"))
+
+    def f(a, b):
+        a = annotate(a, mesh_split(2, mesh, ["x", -1]))
+        b = annotate(b, mesh_split(2, mesh, [-1, "y"]))
+        return jnp.tanh(a @ b)
+
+    runner = spmd_partition(f, jmesh, mesh)
+    x = np.ones((8, 8), np.float32)
+    for _ in range(5):
+        runner(x, x)
+    (entry,) = runner.plans.values()
+    return {
+        "plan_cache": runner.cache_stats.as_dict(),
+        "plan_stats": entry.plan.stats.as_dict(),
+    }
+
+
+def smoke_record() -> dict:
+    rec = {
+        "cells": _reshard_cells() + [_einsum_cell()],
+    }
+    rec.update(_cache_cell())
+    return rec
+
+
+def write_artifact(rec: dict = None, out_dir: str = None) -> str:
+    rec = rec if rec is not None else smoke_record()
+    out_dir = out_dir or BENCH_ART
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_plan.json")
+    json.dump(rec, open(path, "w"), indent=1)
+    return path
+
+
+def rows(rec: dict = None):
+    """CSV rows for benchmarks.run (pass ``rec`` to avoid recomputing)."""
+    rec = rec if rec is not None else smoke_record()
+    out = []
+    for cell in rec["cells"]:
+        out.append((
+            f"plan/{cell['name']}", 0.0,
+            f"planned={cell['planned_bytes']:.3e}B "
+            f"vs_allgather={cell['ratio_vs_allgather']:.3f} "
+            f"vs_legacy={cell['ratio_vs_legacy']:.3f}",
+        ))
+    pc = rec["plan_cache"]
+    out.append((
+        "plan/cache", 0.0,
+        f"hit_rate={pc['hit_rate']:.2f} ({pc['hits']}h/{pc['misses']}m)",
+    ))
+    return out

@@ -1,14 +1,29 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   python -m benchmarks.run            all paper tables
+#   python -m benchmarks.run --smoke    plan-layer smoke only: planned-collective
+#                                       counts + plan-cache hit rate, written to
+#                                       artifacts/bench/BENCH_plan.json
 import sys
 import traceback
 
 
 def main() -> None:
-    from .tables import ALL_TABLES
+    smoke = "--smoke" in sys.argv[1:]
+    smoke_rec = None
+    if smoke:
+        from . import plan_smoke
+
+        smoke_rec = plan_smoke.smoke_record()
+        tables = [lambda: plan_smoke.rows(smoke_rec)]
+    else:
+        from .tables import ALL_TABLES
+
+        tables = ALL_TABLES
 
     print("name,us_per_call,derived")
     failures = 0
-    for fn in ALL_TABLES:
+    for fn in tables:
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")
@@ -17,6 +32,11 @@ def main() -> None:
             failures += 1
             print(f"{fn.__name__},0.0,ERROR: {type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+    if smoke and not failures:
+        from . import plan_smoke
+
+        path = plan_smoke.write_artifact(smoke_rec)
+        print(f"# artifact: {path}")
     if failures:
         sys.exit(1)
 

@@ -14,6 +14,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+
+from repro.core.compat import make_jax_mesh, set_mesh
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -23,8 +25,7 @@ from repro.core.pipeline import (
 )
 
 L, R, M, D = 4, 2, 8, 32
-jmesh = jax.make_mesh((4, 2), ("stage", "data"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+jmesh = make_jax_mesh((4, 2), ("stage", "data"))
 
 rng = np.random.default_rng(0)
 ws = jnp.asarray(rng.standard_normal((L, R, D, D)).astype(np.float32) * 0.2)
@@ -46,7 +47,7 @@ for m in range(M):
     out.append(h)
 ref = np.stack(out)
 
-with jax.set_mesh(jmesh):
+with set_mesh(jmesh):
     f = jax.jit(lambda w, x: pipeline(
         stage_fn, w, x, num_stages=L, num_rounds=R, stage_axis="stage"))
     ws_sharded = jax.device_put(ws, NamedSharding(jmesh, P("stage")))

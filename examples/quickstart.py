@@ -12,6 +12,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+
+from repro.core.compat import make_jax_mesh, set_mesh
 import jax.numpy as jnp
 import numpy as np
 
@@ -19,8 +21,7 @@ from repro.core import Mesh, annotate, gspmd_jit, mesh_split, propagate
 from repro.core.partitioner import spmd_partition
 
 # 1. a logical device mesh (paper §3.1)
-jmesh = jax.make_mesh((2, 4), ("x", "y"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+jmesh = make_jax_mesh((2, 4), ("x", "y"))
 mesh = Mesh.create((2, 4), ("x", "y"))
 
 

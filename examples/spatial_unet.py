@@ -15,6 +15,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+
+from repro.core.compat import make_jax_mesh, set_mesh
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,15 +31,14 @@ st = cb.Strategy(
      "spatial": ("model",), "batch": ("data",)},
 )
 
-jmesh = jax.make_mesh((1, 8), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+jmesh = make_jax_mesh((1, 8), ("data", "model"))
 
 params = tree_init(unet3d.param_tree(base=4, levels=2), jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 32, 16, 16), jnp.float32)
 batch = {"image": x, "target": jnp.zeros_like(x)}
 
 ref = float(unet3d.loss_fn(params, batch, None))
-with jax.set_mesh(jmesh):
+with set_mesh(jmesh):
     f = jax.jit(lambda p, b: unet3d.loss_fn(p, b, st))
     sharded = float(f(params, batch))
     txt = f.lower(params, batch).compile().as_text()

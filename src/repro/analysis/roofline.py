@@ -25,6 +25,46 @@ HBM_BW = 819e9  # B/s / chip
 ICI_BW = 50e9  # B/s / link
 
 
+# ---------------------------------------------------------------------------------
+# Per-collective wire-byte model (ring algorithms, per-device).
+#
+# This is the cost model the reshard planner (core/collective_planner.py)
+# minimizes: given the per-device *input* bytes B of a collective over a group
+# of n devices,
+#
+#   AllGather      (n-1)·B        output is n·B per device; each device
+#                                  forwards every remote shard once
+#   AllToAll       (n-1)/n·B      only the remote-destined fraction moves
+#   AllReduce      2·(n-1)/n·B    reduce-scatter + all-gather phases
+#   ReduceScatter  (n-1)/n·B      half of AllReduce — §4.2's key saving
+#   DynamicSlice   0              local addressing, no wire traffic
+#
+# hlo_parse.py applies the same per-kind formulas when parsing compiled HLO
+# (its wire_bytes fields are already post-formula); launch/dryrun.py then just
+# divides those wire bytes by ICI_BW for modeled seconds per kind.
+# ---------------------------------------------------------------------------------
+
+
+def collective_wire_bytes(kind: str, group_size: int, in_bytes: float) -> float:
+    """Modeled per-device wire bytes for one collective (ring algorithm)."""
+    n = int(group_size)
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return (n - 1) * in_bytes
+    if kind == "all-to-all":
+        return (n - 1) / n * in_bytes
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * in_bytes
+    if kind == "reduce-scatter":
+        return (n - 1) / n * in_bytes
+    if kind == "collective-permute":
+        return in_bytes
+    if kind == "dynamic-slice":
+        return 0.0
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
 @dataclasses.dataclass
 class RooflineTerms:
     compute_s: float

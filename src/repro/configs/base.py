@@ -16,6 +16,8 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax
+
+from repro.core.compat import get_abstract_mesh as _get_abstract_mesh
 from jax.sharding import PartitionSpec as P
 
 # X / Y in the paper's terms:
@@ -101,7 +103,7 @@ class Strategy:
     act_rules: Rules
 
     def _spec(self, rules: Rules, logical: Tuple[Optional[str], ...]) -> P:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = _get_abstract_mesh()
         have = set(mesh.axis_names) if mesh is not None and not mesh.empty else None
         entries = []
         for name in logical:
@@ -129,7 +131,7 @@ class Strategy:
         """Annotate an activation (no-op outside a mesh context).  Axes that do
         not divide the dim size are dropped (§4.1 fallback: replicate rather
         than fail — in-graph padding is used where sharding matters)."""
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = _get_abstract_mesh()
         if mesh is None or mesh.empty:
             return x
         spec = self._spec(self.act_rules, logical)
@@ -148,7 +150,7 @@ class Strategy:
     def axis_size(self, logical_name: str, kind: str = "act") -> int:
         """Product of mesh-axis sizes a logical dim is sharded over (1 if none or
         no active mesh) — used for padded-head layouts etc."""
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = _get_abstract_mesh()
         if mesh is None or mesh.empty:
             return 1
         rules = self.act_rules if kind == "act" else self.weight_rules

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .compat import axis_size as _axis_size
+
 
 def _halo_bounds(n_shards, local_in, local_out, stride, pad_lo, kernel):
     """Max left/right halo over partitions; needs are linear in partition id.
@@ -43,7 +45,7 @@ def halo_exchange(x, axis_name: str, dim: int, left: int, right: int, fill=0.0):
     """Concatenate ``left`` elements from the left neighbor and ``right`` from the
     right neighbor along ``dim``.  Boundary partitions are padded with ``fill``
     (the identity value — masking per §4.1)."""
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     parts = []
     if left > 0:
         # my left halo is the right edge of partition id-1
@@ -105,7 +107,7 @@ def sharded_conv_nd(
     for dim, axis_name in sharded:
         sd = dim - 2
         k = w.shape[2 + sd]
-        n = lax.axis_size(axis_name)
+        n = _axis_size(axis_name)
         local_in = x.shape[dim]
         gl = local_in * n
         lo, hi = pads[sd]

@@ -23,10 +23,19 @@ def manual(fn, jmesh, in_specs, out_specs, auto_axes: Sequence[str] = ()):
     subgroup (the manual axes) are manually partitioned, across subgroups
     (auto axes) automatic.
     """
-    kwargs = {}
     if auto_axes:
-        kwargs["auto"] = frozenset(auto_axes)
-    return jax.shard_map(
-        fn, mesh=jmesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False, **kwargs
-    )
+        kwargs = {"auto": frozenset(auto_axes)}
+        if hasattr(jax, "shard_map"):
+            return jax.shard_map(
+                fn, mesh=jmesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False, **kwargs
+            )
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        return _shard_map(
+            fn, mesh=jmesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False, **kwargs
+        )
+    from .compat import shard_map
+
+    return shard_map(fn, mesh=jmesh, in_specs=in_specs, out_specs=out_specs)

@@ -18,9 +18,22 @@ explicit ``jax.lax`` collectives:
 
 It is validated numerically against the unpartitioned program — GSPMD's
 "mathematically equivalent" guarantee — in tests/multidev/.
+
+Two execution paths share these semantics:
+
+* the **compiled-plan path** (default): ``spmd_partition`` lowers the
+  propagated jaxpr once into a ``plan.PartitionPlan`` (resolved per-equation
+  steps, cost-model-chosen reshard programs) and caches it keyed by input
+  avals + mesh — steady-state calls skip tracing, propagation, and all
+  per-equation Python dispatch;
+* the **dynamic reference path** (``SpmdPartitioner``, or
+  ``spmd_partition(..., compile_plans=False)``): re-decides everything while
+  tracing.  Kept as the executable specification the plan compiler must
+  match, and for differential testing.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List
 
 import jax
@@ -30,6 +43,7 @@ from jax import core, lax
 from jax.extend import core as excore
 
 from .annotate import annotate_p
+from .compat import shard_map
 from .einsum_rules import partitioned_einsum
 from .propagation import Propagation, propagate
 from .reshard import reshard_local, shard_shape
@@ -188,6 +202,13 @@ class SpmdPartitioner:
             else:  # prod/and/or: gather first instead
                 val = self._to(val, sh, replicated(self.mesh, sh.rank))
                 out = eqn.primitive.bind(*subfuns, val, **bind_params)
+                # the gathered reduce produced a *global* result — its sharding
+                # is replicated, not the kept slice of the input's sharding
+                self.write(
+                    eqn.outvars[0], out,
+                    replicated(self.mesh, sh.rank - len(axes)),
+                )
+                return
         kept = [i for i in range(sh.rank) if i not in axes]
         osh = Sharding(self.mesh, tuple(sh.dims_mapping[i] for i in kept))
         self.write(eqn.outvars[0], out, osh)
@@ -307,21 +328,60 @@ class SpmdPartitioner:
 
         carry, ys = lax.scan(body, tuple(init), tuple(xs), length=p.get("length"))
         outs = list(carry) + list(ys)
-        for ov, bodyv, o in zip(
-            eqn.outvars, closed.jaxpr.outvars, outs
+        # index-based classification: outputs [0, nk) are carries, the rest are
+        # stacked ys that grow a leading (unsharded) scan dim.  (A membership
+        # test against eqn.outvars[nk:] is O(n) per output and miscounts when
+        # the same var object appears twice.)
+        for i, (ov, bodyv, o) in enumerate(
+            zip(eqn.outvars, closed.jaxpr.outvars, outs)
         ):
             osh = inner_prop.get(bodyv)
             if osh is None:
                 osh = replicated(self.mesh, np.ndim(o))
-            elif ov in eqn.outvars[nk:]:
+            elif i >= nk:
                 osh = Sharding(self.mesh, ((),) + osh.dims_mapping)
             self.write(ov, o, osh)
 
     def _fallback(self, eqn):
-        """Gather → global op → reshard to the propagated sharding (§4.5)."""
+        """Gather → op → reshard to the propagated sharding (§4.5).
+
+        For formatting ops whose touched dims are known (pad / slice /
+        concatenate / rev), only the mesh axes on *modified* dims are
+        gathered; unmodified dims keep their sharding and the op runs locally
+        (with params rewritten to local extents where needed).  Unknown ops
+        still fully replicate.
+        """
+        from .plan import fallback_keep_sharding
+
+        vals_shs = [self.read(v) for v in eqn.invars]
+        keep = fallback_keep_sharding(
+            eqn, [sh for _, sh in vals_shs], self.mesh
+        )
+        if keep is not None:
+            kept_sh, params = keep
+            rank = kept_sh.rank
+            vals = [
+                self._to(val, sh, kept_sh)
+                if sh.rank == rank
+                else self._to(val, sh, replicated(self.mesh, sh.rank))
+                for val, sh in vals_shs
+            ]
+            subfuns, bind_params = eqn.primitive.get_bind_params(params)
+            out = eqn.primitive.bind(*subfuns, *vals, **bind_params)
+            outs = out if eqn.primitive.multiple_results else [out]
+            for v, o in zip(eqn.outvars, outs):
+                osh = Sharding(
+                    self.mesh,
+                    tuple(
+                        kept_sh.dims_mapping[d] if d < rank else ()
+                        for d in range(np.ndim(o))
+                    ),
+                )
+                want = self.prop.get(v) or osh
+                self.write(v, self._to(o, osh, want), want)
+            return
         vals = []
-        for v in eqn.invars:
-            val, sh = self.read(v)
+        for (val, sh) in vals_shs:
             vals.append(self._to(val, sh, replicated(self.mesh, sh.rank)))
         subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
         out = eqn.primitive.bind(*subfuns, *vals, **bind_params)
@@ -332,15 +392,59 @@ class SpmdPartitioner:
             self.write(v, o2, want)
 
 
-def spmd_partition(fn, jmesh, mesh: Mesh):
+@dataclasses.dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self):
+        return {"hits": self.hits, "misses": self.misses, "hit_rate": self.hit_rate}
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    call: object  # jitted shard_map over the compiled plan
+    plan: object  # PartitionPlan (for stats/reporting)
+
+
+def _aval_key(a):
+    dt = getattr(a, "dtype", None)
+    # Python scalars trace as weak types and can promote differently than
+    # strong-typed arrays of the same dtype — key them separately, as jit does.
+    weak = dt is None or bool(getattr(a, "weak_type", False))
+    if dt is None:
+        dt = np.result_type(type(a))
+    return (tuple(np.shape(a)), np.dtype(dt).str, weak)
+
+
+def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True):
     """Partition ``fn`` with the reference partitioner and return a callable that
     runs the SPMD program over ``jmesh`` via shard_map.
 
-    The user writes ``fn`` against global shapes with ``annotate`` hints; we trace,
-    complete shardings (propagation pass), then execute the partitioned program.
-    """
+    The user writes ``fn`` against global shapes with ``annotate`` hints; we
+    trace, complete shardings (propagation pass), then lower the result into a
+    :class:`~repro.core.plan.PartitionPlan` — a flat list of resolved
+    per-equation steps with cost-model-chosen reshard programs.  Plans are
+    cached keyed by (input avals, mesh): steady-state calls skip
+    ``make_jaxpr``, propagation, and all per-equation dispatch, going straight
+    to the jitted partitioned program.
 
-    def runner(*args):
+    ``compile_plans=False`` selects the dynamic reference path
+    (``SpmdPartitioner``), which re-decides everything per trace — kept for
+    differential testing and benchmarking against the compiled path.
+
+    The returned runner exposes ``runner.cache_stats`` (hits/misses) and
+    ``runner.plans`` (cache-key → PartitionPlan) for tests and reporting.
+    """
+    cache: Dict[tuple, _CacheEntry] = {}
+    stats = PlanCacheStats()
+
+    def _build(args):
         closed = jax.make_jaxpr(fn)(*args)
         prop = propagate(closed, mesh)
         in_specs = tuple(
@@ -351,19 +455,42 @@ def spmd_partition(fn, jmesh, mesh: Mesh):
             to_partition_spec(prop.get(v) or replicated(mesh, v.aval.ndim))
             for v in closed.jaxpr.outvars
         )
+        plan = None
+        if compile_plans:
+            from .plan import compile_plan
 
-        def local_fn(*local_args):
-            part = SpmdPartitioner(prop, mesh)
-            outs = part.run(closed.jaxpr, closed.consts, *local_args)
-            return outs if len(outs) > 1 else outs[0]
+            plan = compile_plan(closed, prop.result(), mesh)
 
-        shmapped = jax.shard_map(
+            def local_fn(*local_args):
+                outs = plan.execute(*local_args)
+                return outs if len(outs) > 1 else outs[0]
+
+        else:
+
+            def local_fn(*local_args):
+                part = SpmdPartitioner(prop, mesh)
+                outs = part.run(closed.jaxpr, closed.consts, *local_args)
+                return outs if len(outs) > 1 else outs[0]
+
+        shmapped = shard_map(
             local_fn,
             mesh=jmesh,
             in_specs=in_specs,
             out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
-            check_vma=False,
         )
-        return shmapped(*args)
+        return _CacheEntry(jax.jit(shmapped), plan)
 
+    def runner(*args):
+        key = (mesh.structural_key(), tuple(_aval_key(a) for a in args))
+        entry = cache.get(key)
+        if entry is None:
+            stats.misses += 1
+            entry = _build(args)
+            cache[key] = entry
+        else:
+            stats.hits += 1
+        return entry.call(*args)
+
+    runner.cache_stats = stats
+    runner.plans = cache
     return runner

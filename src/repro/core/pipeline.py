@@ -89,7 +89,8 @@ def pipeline(
 
     def maybe_annotate(x):
         if stage_axis is not None:
-            am = jax.sharding.get_abstract_mesh()
+            from .compat import get_abstract_mesh
+            am = get_abstract_mesh()
             if am is not None and not am.empty and stage_axis in am.axis_names:
                 from jax.sharding import PartitionSpec as P
 

@@ -1,0 +1,859 @@
+"""Compiled partition plans: plan-once / execute-many for the reference
+partitioner (paper §4, PartIR-style decision/execution split).
+
+The dynamic reference path (``SpmdPartitioner``) re-dispatches every equation
+through Python on every trace: read shardings, classify the op, decide the
+reshard, emit collectives.  All of those decisions depend only on the jaxpr,
+the mesh, and the propagated shardings — never on data — so they can be made
+exactly once.  This module lowers a propagated jaxpr into a
+:class:`PartitionPlan`: a flat list of per-equation *steps*, each a closure
+over pre-resolved decisions —
+
+* the handler for the op (einsum / elementwise / reduce / conv / …),
+* operand reshard **programs** (cost-model-chosen collective sequences from
+  ``collective_planner.plan_reshard``),
+* the ReduceScatter-vs-AllReduce choice for partial sums
+  (``einsum_rules.compile_einsum``),
+* the output sharding.
+
+Executing a plan is a straight walk of the step list with a dict environment;
+no propagation, no per-op classification, no reshard search.
+``spmd_partition`` (partitioner.py) caches plans keyed by input avals + mesh,
+so steady-state calls skip ``make_jaxpr``, ``propagate``, and all per-equation
+dispatch.
+
+The plan also carries :class:`PlanStats` — planned-collective counts and the
+modeled reshard wire bytes — consumed by the analysis/benchmark layer
+(``benchmarks/plan_smoke.py`` → ``BENCH_plan.json``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+from jax import core, lax
+from jax.extend import core as excore
+
+from .annotate import annotate_p
+from .collective_planner import (
+    PlanError, ReshardProgram, execute_program, plan_reshard,
+)
+from .einsum_rules import compile_einsum, execute_einsum
+from .propagation import Propagation, PropagationResult
+from .reshard import shard_shape
+from .rules import ELEMENTWISE
+from .sharding import Mesh, Sharding, merge_shardings, replicated
+
+Env = Dict[excore.Var, object]
+Step = Callable[[Env], None]
+
+
+# ---------------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PlanStats:
+    """Planned-collective accounting for one compiled plan."""
+
+    collectives: Dict[str, int] = dataclasses.field(default_factory=dict)
+    reshard_bytes: float = 0.0  # modeled wire bytes of planned reshards
+    baseline_bytes: float = 0.0  # same reshards as AllGather-first (replicate+slice)
+    legacy_bytes: float = 0.0  # same reshards under the pre-planner greedy schedule
+    eqns: int = 0
+    steps: int = 0
+
+    def count(self, kind: str, n: int = 1) -> None:
+        self.collectives[kind] = self.collectives.get(kind, 0) + n
+
+    def add_program(self, prog: Optional[ReshardProgram]) -> None:
+        if prog is None or prog.is_identity:
+            return
+        for s in prog.steps:
+            self.count(s.op.replace("_", "-"))
+        self.reshard_bytes += prog.cost_bytes
+
+    def as_dict(self) -> Dict:
+        return {
+            "collectives": dict(self.collectives),
+            "reshard_bytes": self.reshard_bytes,
+            "baseline_bytes": self.baseline_bytes,
+            "legacy_bytes": self.legacy_bytes,
+            "eqns": self.eqns,
+            "steps": self.steps,
+        }
+
+
+# ---------------------------------------------------------------------------------
+# the compiled plan
+# ---------------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PartitionPlan:
+    """A fully resolved partitioning of one jaxpr over one mesh."""
+
+    jaxpr: excore.Jaxpr
+    consts: Tuple
+    mesh: Mesh
+    steps: List[Step]
+    in_shardings: List[Sharding]
+    out_shardings: List[Sharding]
+    out_programs: List[Optional[ReshardProgram]]
+    stats: PlanStats
+
+    def execute(self, *args):
+        """Run the plan on local shards (inside a shard_map region)."""
+        env: Env = {}
+        for v, c in zip(self.jaxpr.constvars, self.consts):
+            env[v] = c
+        for v, a in zip(self.jaxpr.invars, args):
+            env[v] = a
+        for step in self.steps:
+            step(env)
+        outs = []
+        for v, prog in zip(self.jaxpr.outvars, self.out_programs):
+            val = _read(env, v)
+            outs.append(execute_program(val, prog) if prog is not None else val)
+        return tuple(outs)
+
+
+def _read(env: Env, v):
+    if isinstance(v, excore.Literal):
+        return v.val
+    return env[v]
+
+
+def _write(env: Env, v, val) -> None:
+    if isinstance(v, core.DropVar):
+        return
+    env[v] = val
+
+
+# ---------------------------------------------------------------------------------
+# fallback analysis: which dims does a formatting op actually modify?
+# ---------------------------------------------------------------------------------
+#
+# §4.5: pad/slice/concatenate/rev only rewrite data along *some* dims; every
+# other dim is elementwise, so its sharding can be kept.  The fallback then
+# gathers only the mesh axes on modified dims instead of fully replicating.
+
+
+@dataclasses.dataclass
+class FallbackSpec:
+    modified_dims: Tuple[int, ...]
+    params: Dict  # possibly rewritten for local execution
+
+
+def _slice_fallback(eqn, in_shapes) -> Optional[FallbackSpec]:
+    start = tuple(eqn.params["start_indices"])
+    limit = tuple(eqn.params["limit_indices"])
+    strides = eqn.params.get("strides")
+    strides = tuple(strides) if strides is not None else (1,) * len(start)
+    shape = in_shapes[0]
+    modified = tuple(
+        d for d in range(len(start))
+        if not (start[d] == 0 and limit[d] == shape[d] and strides[d] == 1)
+    )
+    return FallbackSpec(modified, dict(eqn.params))
+
+
+_FALLBACK_DIMS: Dict[str, Callable] = {
+    "concatenate": lambda eqn, shp: FallbackSpec(
+        (eqn.params["dimension"],), dict(eqn.params)
+    ),
+    "rev": lambda eqn, shp: FallbackSpec(
+        tuple(eqn.params["dimensions"]), dict(eqn.params)
+    ),
+    "pad": lambda eqn, shp: FallbackSpec(
+        tuple(
+            d for d, (lo, hi, interior) in enumerate(eqn.params["padding_config"])
+            if lo or hi or interior
+        ),
+        dict(eqn.params),
+    ),
+    "slice": _slice_fallback,
+}
+
+
+def fallback_keep_sharding(eqn, in_shardings, mesh: Mesh) -> Optional[Tuple[Sharding, Dict]]:
+    """If the op only modifies some dims, return (operand target sharding with
+    unmodified dims kept, locally-rewritten params); else None (gather all).
+
+    Only applies when every same-rank operand can agree on the kept dims (the
+    merged sharding) and any rewritten params stay exact under sharding.
+    """
+    name = eqn.primitive.name
+    fn = _FALLBACK_DIMS.get(name)
+    if fn is None:
+        return None
+    rank = getattr(eqn.outvars[0].aval, "ndim", None)
+    if rank is None or rank == 0:
+        return None
+    in_shapes = [getattr(v.aval, "shape", ()) for v in eqn.invars]
+    spec = fn(eqn, in_shapes)
+    if spec is None:
+        return None
+    modified = set(spec.modified_dims)
+    # merge operand shardings on the kept dims
+    kept: Optional[Sharding] = None
+    for v, s in zip(eqn.invars, in_shardings):
+        if getattr(v.aval, "ndim", None) != rank:
+            continue
+        masked = Sharding(
+            mesh,
+            tuple(
+                () if d in modified else s.dims_mapping[d] for d in range(rank)
+            ),
+        )
+        if kept is None:
+            kept = masked
+        else:
+            m = merge_shardings(kept, masked)
+            kept = m if m is not None else kept
+    if kept is None or kept.is_fully_replicated():
+        return None  # nothing to keep; plain gather-all is equivalent
+    params = spec.params
+    if name == "slice":
+        # rewrite full-dim slices to local extents on kept sharded dims
+        start = list(params["start_indices"])
+        limit = list(params["limit_indices"])
+        for d in range(rank):
+            n = kept.num_shards(d)
+            if d not in modified and n > 1:
+                if in_shapes[0][d] % n:
+                    return None
+                limit[d] = in_shapes[0][d] // n
+        params = dict(params, start_indices=tuple(start), limit_indices=tuple(limit))
+    return kept, params
+
+
+# ---------------------------------------------------------------------------------
+# the builder: abstract interpretation over shardings, emitting steps
+# ---------------------------------------------------------------------------------
+
+
+class PlanBuilder:
+    """Walks a propagated jaxpr once and emits resolved execution steps.
+
+    Mirrors ``SpmdPartitioner``'s per-op semantics, but every decision that
+    the dynamic path makes while tracing (merge targets, reshard sequences,
+    psum-vs-scatter, fallback gathers) is made here, at plan time, from
+    shardings and static shapes alone.
+    """
+
+    def __init__(
+        self,
+        jaxpr: excore.Jaxpr,
+        consts,
+        prop: PropagationResult,
+        mesh: Mesh,
+        stats: Optional[PlanStats] = None,
+    ):
+        self.jaxpr = jaxpr
+        self.consts = tuple(consts)
+        self.prop = prop
+        self.mesh = mesh
+        self.sh: Dict[excore.Var, Sharding] = {}
+        self.steps: List[Step] = []
+        self.stats = stats if stats is not None else PlanStats()
+
+    # -- sharding/shape bookkeeping ---------------------------------------------
+    def sharding_of(self, v) -> Sharding:
+        if isinstance(v, excore.Literal):
+            return replicated(self.mesh, np.ndim(v.val))
+        return self.sh[v]
+
+    def _gshape(self, v) -> Tuple[int, ...]:
+        if isinstance(v, excore.Literal):
+            return tuple(np.shape(v.val))
+        return tuple(v.aval.shape)
+
+    def _lshape(self, v) -> Tuple[int, ...]:
+        return shard_shape(self._gshape(v), self.sharding_of(v))
+
+    def _dbytes(self, v) -> int:
+        if isinstance(v, excore.Literal):
+            return int(np.asarray(v.val).dtype.itemsize)
+        return int(np.dtype(v.aval.dtype).itemsize)
+
+    def set_sharding(self, v, s: Sharding) -> None:
+        if isinstance(v, core.DropVar):
+            return
+        self.sh[v] = s
+
+    def _reshard_prog(self, v, tgt: Sharding) -> Optional[ReshardProgram]:
+        cur = self.sharding_of(v)
+        if cur.dims_mapping == tgt.dims_mapping:
+            return None
+        prog = plan_reshard(cur, tgt, self._lshape(v), self._dbytes(v))
+        self._account(prog, self._lshape(v), self._dbytes(v))
+        return prog
+
+    def _account(self, prog, lshape, dbytes) -> None:
+        self.stats.add_program(prog)
+        # price the same move under both reference schedules so
+        # BENCH_plan.json can track honest deltas: the AllGather-first
+        # expression (replicate, then re-slice) and the pre-planner greedy
+        # schedule (which already used AllToAll for innermost moves)
+        from .collective_planner import (
+            _candidate_gather_all, _candidate_legacy, simulate,
+        )
+
+        for attr, gen in (
+            ("baseline_bytes", _candidate_gather_all),
+            ("legacy_bytes", _candidate_legacy),
+        ):
+            cost = prog.cost_bytes  # candidate inexpressible: no claimed saving
+            try:
+                steps = gen(prog.src, prog.dst, lshape)
+                if steps is not None:
+                    cost = simulate(prog.src, prog.dst, steps, lshape, dbytes)
+            except PlanError:
+                pass
+            setattr(self.stats, attr, getattr(self.stats, attr) + cost)
+
+    # -- driver -------------------------------------------------------------------
+    def build(self) -> PartitionPlan:
+        for v, c in zip(self.jaxpr.constvars, self.consts):
+            self.set_sharding(v, replicated(self.mesh, np.ndim(c)))
+        for v in self.jaxpr.invars:
+            sh = self.prop.get(v) or replicated(self.mesh, v.aval.ndim)
+            self.set_sharding(v, sh)
+        in_shardings = [self.sh[v] for v in self.jaxpr.invars]
+        for idx, eqn in enumerate(self.jaxpr.eqns):
+            self.stats.eqns += 1
+            self.eqn(idx, eqn)
+        out_shardings, out_programs = [], []
+        for v in self.jaxpr.outvars:
+            cur = self.sharding_of(v)
+            want = self.prop.get(v) or replicated(self.mesh, len(self._gshape(v)))
+            prog = None
+            if not isinstance(v, excore.Literal):
+                prog = self._reshard_prog(v, want)
+            out_programs.append(prog)
+            out_shardings.append(want)
+        self.stats.steps = len(self.steps)
+        return PartitionPlan(
+            self.jaxpr, self.consts, self.mesh, self.steps,
+            in_shardings, out_shardings, out_programs, self.stats,
+        )
+
+    def emit(self, step: Step) -> None:
+        self.steps.append(step)
+
+    # -- per-equation lowering ----------------------------------------------------
+    def eqn(self, idx: int, eqn) -> None:
+        prim = eqn.primitive
+        name = prim.name
+        if prim is annotate_p:
+            self._annotate(eqn)
+        elif name == "dot_general":
+            self._dot(eqn)
+        elif name in ELEMENTWISE or name in ("select_n", "convert_element_type"):
+            self._elementwise(eqn)
+        elif name.startswith("reduce_") and "window" not in name:
+            self._reduce(eqn)
+        elif name == "transpose":
+            self._transpose(eqn)
+        elif name == "broadcast_in_dim":
+            self._broadcast(eqn)
+        elif name == "reshape":
+            self._reshape(eqn)
+        elif name == "conv_general_dilated":
+            self._conv(eqn)
+        elif name == "pjit":
+            self._pjit(idx, eqn)
+        elif name == "scan":
+            self._scan(idx, eqn)
+        elif name == "iota":
+            self._iota(eqn)
+        else:
+            self._fallback(eqn)
+
+    def _annotate(self, eqn) -> None:
+        iv, ov = eqn.invars[0], eqn.outvars[0]
+        tgt = eqn.params["sharding"]
+        prog = self._reshard_prog(iv, tgt)
+        self.set_sharding(ov, tgt)
+        if prog is None:
+            self.emit(lambda env, iv=iv, ov=ov: _write(env, ov, _read(env, iv)))
+        else:
+            self.emit(
+                lambda env, iv=iv, ov=ov, prog=prog: _write(
+                    env, ov, execute_program(_read(env, iv), prog)
+                )
+            )
+
+    def _dot(self, eqn) -> None:
+        import string
+
+        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+        lv, rv = eqn.invars[0], eqn.invars[1]
+        ls, rs = self.sharding_of(lv), self.sharding_of(rv)
+        lrank, rrank = len(self._gshape(lv)), len(self._gshape(rv))
+        letters = iter(string.ascii_lowercase)
+        l_names = [next(letters) for _ in range(lrank)]
+        r_names: List[Optional[str]] = [None] * rrank
+        for i, j in zip(lb, rb):
+            r_names[j] = l_names[i]
+        for i, j in zip(lc, rc):
+            r_names[j] = l_names[i]
+        for j in range(len(r_names)):
+            if r_names[j] is None:
+                r_names[j] = next(letters)
+        l_nc = [i for i in range(len(l_names)) if i not in lc and i not in lb]
+        r_nc = [j for j in range(len(r_names)) if j not in rc and j not in rb]
+        out_names = (
+            [l_names[i] for i in lb] + [l_names[i] for i in l_nc] + [r_names[j] for j in r_nc]
+        )
+        spec = f"{''.join(l_names)},{''.join(r_names)}->{''.join(out_names)}"
+        want = self.prop.get(eqn.outvars[0])
+        eplan = compile_einsum(
+            spec, ls, rs, want, self._lshape(lv), self._lshape(rv), self._dbytes(lv)
+        )
+        for prog in (eplan.lhs_program, eplan.rhs_program, eplan.out_program):
+            self.stats.add_program(prog)
+        for _ in eplan.scatter:
+            self.stats.count("reduce-scatter")
+        for _ in eplan.reduce_axes:
+            self.stats.count("all-reduce")
+        pet = eqn.params.get("preferred_element_type")
+        ov = eqn.outvars[0]
+        self.set_sharding(ov, eplan.final_sharding)
+
+        def step(env, lv=lv, rv=rv, ov=ov, eplan=eplan, pet=pet):
+            z, _ = execute_einsum(eplan, _read(env, lv), _read(env, rv), pet)
+            _write(env, ov, z)
+
+        self.emit(step)
+
+    def _elementwise(self, eqn) -> None:
+        rank = eqn.outvars[0].aval.ndim
+        tgt: Optional[Sharding] = None
+        for v in eqn.invars:
+            if len(self._gshape(v)) == rank:
+                s = self.sharding_of(v)
+                tgt = s if tgt is None else (merge_shardings(tgt, s) or tgt)
+        if tgt is None:
+            tgt = replicated(self.mesh, rank)
+        progs = [
+            self._reshard_prog(v, tgt) if len(self._gshape(v)) == rank else None
+            for v in eqn.invars
+        ]
+        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+        prim, invars, outvars = eqn.primitive, list(eqn.invars), list(eqn.outvars)
+        for ov in outvars:
+            self.set_sharding(ov, tgt)
+
+        def step(env):
+            vals = [
+                execute_program(_read(env, v), p) if p is not None else _read(env, v)
+                for v, p in zip(invars, progs)
+            ]
+            out = prim.bind(*subfuns, *vals, **bind_params)
+            outs = out if prim.multiple_results else [out]
+            for ov, o in zip(outvars, outs):
+                _write(env, ov, o)
+
+        self.emit(step)
+
+    def _reduce(self, eqn) -> None:
+        iv, ov = eqn.invars[0], eqn.outvars[0]
+        sh = self.sharding_of(iv)
+        axes = eqn.params["axes"]
+        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+        prim = eqn.primitive
+        psum_axes = tuple(a for d in axes for a in sh.dims_mapping[d])
+        kept = [i for i in range(sh.rank) if i not in axes]
+        osh = Sharding(self.mesh, tuple(sh.dims_mapping[i] for i in kept))
+        name = prim.name
+        gather_prog = None
+        if psum_axes and name not in ("reduce_sum", "reduce_max", "reduce_min"):
+            # prod/and/or: gather the reduced axes first, reduce locally
+            gather_prog = self._reshard_prog(iv, replicated(self.mesh, sh.rank))
+        elif psum_axes:
+            self.stats.count("all-reduce", len(psum_axes))
+        self.set_sharding(ov, replicated(self.mesh, len(kept)) if gather_prog is not None else osh)
+        if gather_prog is not None:
+
+            def step(env, iv=iv, ov=ov, prog=gather_prog):
+                val = execute_program(_read(env, iv), prog)
+                _write(env, ov, prim.bind(*subfuns, val, **bind_params))
+
+        else:
+
+            def step(env, iv=iv, ov=ov, psum_axes=psum_axes, name=name):
+                out = prim.bind(*subfuns, _read(env, iv), **bind_params)
+                if psum_axes:
+                    if name == "reduce_sum":
+                        out = lax.psum(out, psum_axes)
+                    elif name == "reduce_max":
+                        out = lax.pmax(out, psum_axes)
+                    else:
+                        out = lax.pmin(out, psum_axes)
+                _write(env, ov, out)
+
+        self.emit(step)
+
+    def _transpose(self, eqn) -> None:
+        iv, ov = eqn.invars[0], eqn.outvars[0]
+        perm = eqn.params["permutation"]
+        sh = self.sharding_of(iv)
+        osh = Sharding(self.mesh, tuple(sh.dims_mapping[i] for i in perm))
+        self.set_sharding(ov, osh)
+        self.emit(
+            lambda env, iv=iv, ov=ov, perm=perm: _write(
+                env, ov, lax.transpose(_read(env, iv), perm)
+            )
+        )
+
+    def _broadcast(self, eqn) -> None:
+        iv, ov = eqn.invars[0], eqn.outvars[0]
+        sh = self.sharding_of(iv)
+        bcast = eqn.params["broadcast_dimensions"]
+        gshape = eqn.params["shape"]
+        out_rank = len(gshape)
+        dm: List[Tuple[str, ...]] = [() for _ in range(out_rank)]
+        in_shape = self._gshape(iv)
+        for i, j in enumerate(bcast):
+            if in_shape[i] == gshape[j]:
+                dm[j] = sh.dims_mapping[i]
+        osh = Sharding(self.mesh, tuple(dm))
+        local_shape = shard_shape(tuple(gshape), osh)
+        self.set_sharding(ov, osh)
+        self.emit(
+            lambda env, iv=iv, ov=ov, local_shape=local_shape, bcast=bcast: _write(
+                env, ov, lax.broadcast_in_dim(_read(env, iv), local_shape, bcast)
+            )
+        )
+
+    def _reshape(self, eqn) -> None:
+        iv, ov = eqn.invars[0], eqn.outvars[0]
+        sh = self.sharding_of(iv)
+        want = self.prop.get(ov)
+        gshape = tuple(eqn.params["new_sizes"])
+        dims = eqn.params.get("dimensions")
+        if want is not None:
+            local = shard_shape(gshape, want)
+            if int(np.prod(self._lshape(iv) or (1,))) == int(np.prod(local or (1,))):
+                self.set_sharding(ov, want)
+                self.emit(
+                    lambda env, iv=iv, ov=ov, local=local, dims=dims: _write(
+                        env, ov, lax.reshape(_read(env, iv), local, dims)
+                    )
+                )
+                return
+        # fallback: gather, reshape globally, re-slice
+        gather = self._reshard_prog(iv, replicated(self.mesh, sh.rank))
+        osh = want or replicated(self.mesh, len(gshape))
+        slice_prog = None
+        if osh.dims_mapping != replicated(self.mesh, len(gshape)).dims_mapping:
+            slice_prog = plan_reshard(
+                replicated(self.mesh, len(gshape)), osh, gshape, self._dbytes(iv)
+            )
+            self.stats.add_program(slice_prog)
+        self.set_sharding(ov, osh)
+
+        def step(env, iv=iv, ov=ov, gather=gather, gshape=gshape, dims=dims,
+                 slice_prog=slice_prog):
+            val = _read(env, iv)
+            if gather is not None:
+                val = execute_program(val, gather)
+            out = lax.reshape(val, gshape, dims)
+            if slice_prog is not None:
+                out = execute_program(out, slice_prog)
+            _write(env, ov, out)
+
+        self.emit(step)
+
+    def _conv(self, eqn) -> None:
+        lv, rv = eqn.invars[0], eqn.invars[1]
+        ov = eqn.outvars[0]
+        ls, rs = self.sharding_of(lv), self.sharding_of(rv)
+        rhs_gather = self._reshard_prog(rv, replicated(self.mesh, rs.rank))
+        dn = eqn.params["dimension_numbers"]
+        assert dn.lhs_spec[0] == 0 and dn.lhs_spec[1] == 1, "NC*spatial layout only"
+        strides = eqn.params["window_strides"]
+        padding = eqn.params["padding"]
+        if ls.dims_mapping[1]:
+            # feature-dim sharded: contract locally then psum (Megatron-style)
+            ax = ls.dims_mapping[1]
+            n = self.mesh.axis_size(ax[0])
+            osh = Sharding(
+                self.mesh, (ls.dims_mapping[0], ()) + ((),) * (ls.rank - 2)
+            )
+            self.stats.count("all-reduce")
+            self.set_sharding(ov, osh)
+
+            def step(env, lv=lv, rv=rv, ov=ov, ax=ax, n=n):
+                lval, rval = _read(env, lv), _read(env, rv)
+                if rhs_gather is not None:
+                    rval = execute_program(rval, rhs_gather)
+                idx = lax.axis_index(ax[0])
+                size = rval.shape[1] // n
+                rv_local = lax.dynamic_slice_in_dim(rval, idx * size, size, axis=1)
+                out = lax.conv_general_dilated(
+                    lval, rv_local, window_strides=strides, padding=padding
+                )
+                _write(env, ov, lax.psum(out, ax))
+
+            self.emit(step)
+            return
+        sharded = [
+            (d, ls.dims_mapping[d][0]) for d in range(2, ls.rank) if ls.dims_mapping[d]
+        ]
+        self.set_sharding(ov, Sharding(self.mesh, tuple(ls.dims_mapping)))
+
+        def step(env, lv=lv, rv=rv, ov=ov, sharded=sharded):
+            from .halo import sharded_conv_nd
+
+            lval, rval = _read(env, lv), _read(env, rv)
+            if rhs_gather is not None:
+                rval = execute_program(rval, rhs_gather)
+            _write(
+                env, ov,
+                sharded_conv_nd(
+                    lval, rval, sharded=sharded,
+                    window_strides=strides, padding=padding,
+                ),
+            )
+
+        self.emit(step)
+
+    def _iota(self, eqn) -> None:
+        prim, params, ov = eqn.primitive, eqn.params, eqn.outvars[0]
+        self.set_sharding(ov, replicated(self.mesh, len(params["shape"])))
+        self.emit(lambda env, ov=ov: _write(env, ov, prim.bind(**params)))
+
+    # -- calls ---------------------------------------------------------------------
+    def _inner_result(self, idx: int, closed) -> PropagationResult:
+        res = self.prop.sub.get(idx)
+        if res is None:
+            p = Propagation(closed.jaxpr, self.mesh)
+            p.seed_annotations()
+            res = p.result()
+        return res
+
+    def _pjit(self, idx: int, eqn) -> None:
+        sub = eqn.params["jaxpr"]
+        inner_res = self._inner_result(idx, sub)
+        # seed inner input shardings from ours where propagation left them open
+        env = dict(inner_res.env)
+        boundary: List[Optional[ReshardProgram]] = []
+        for outer_v, iv in zip(eqn.invars, sub.jaxpr.invars):
+            declared = inner_res.get(iv)
+            if declared is None:
+                env[iv] = self.sharding_of(outer_v)
+                boundary.append(None)
+            else:
+                boundary.append(self._reshard_prog(outer_v, declared))
+        inner_res = PropagationResult(inner_res.jaxpr, self.mesh, env, inner_res.sub)
+        builder = PlanBuilder(
+            sub.jaxpr, sub.consts, inner_res, self.mesh, stats=self.stats
+        )
+        inner_plan = builder.build()
+        for ov, osh in zip(eqn.outvars, inner_plan.out_shardings):
+            self.set_sharding(ov, osh)
+        invars, outvars = list(eqn.invars), list(eqn.outvars)
+
+        def step(env, invars=invars, outvars=outvars, plan=inner_plan, boundary=boundary):
+            vals = [
+                execute_program(_read(env, v), p) if p is not None else _read(env, v)
+                for v, p in zip(invars, boundary)
+            ]
+            outs = plan.execute(*vals)
+            for ov, o in zip(outvars, outs):
+                _write(env, ov, o)
+
+        self.emit(step)
+
+    def _scan(self, idx: int, eqn) -> None:
+        p = eqn.params
+        nc, nk = p["num_consts"], p["num_carry"]
+        closed = p["jaxpr"]
+        body = closed.jaxpr
+        inner_res = self._inner_result(idx, closed)
+
+        def drop0(s: Optional[Sharding]) -> Optional[Sharding]:
+            if s is None or s.rank == 0:
+                return None
+            return Sharding(self.mesh, s.dims_mapping[1:])
+
+        # body input shardings: propagation's answer, else derived from ours
+        env = dict(inner_res.env)
+        boundary: List[Optional[ReshardProgram]] = []
+        for i, (outer_v, bv) in enumerate(zip(eqn.invars, body.invars)):
+            declared = inner_res.get(bv)
+            ours = self.sharding_of(outer_v)
+            if i >= nc + nk:
+                ours = drop0(ours) or replicated(self.mesh, max(ours.rank - 1, 0))
+            if declared is None:
+                env[bv] = ours
+                boundary.append(None)
+            else:
+                # reshard the outer operand to the body's declared sharding
+                # (xs get the leading scan dim re-attached)
+                tgt = declared
+                if i >= nc + nk:
+                    tgt = Sharding(self.mesh, ((),) + declared.dims_mapping)
+                elif i >= nc:
+                    tgt = declared
+                boundary.append(self._reshard_prog(outer_v, tgt))
+        inner_res = PropagationResult(inner_res.jaxpr, self.mesh, env, inner_res.sub)
+        builder = PlanBuilder(body, closed.consts, inner_res, self.mesh, stats=self.stats)
+        inner_plan = builder.build()
+        # carry consistency: carry-out must leave the body in the carry-in
+        # sharding, or iteration 2 would misread it.  PlanBuilder.build already
+        # reshards body outputs to the body's *propagated* shardings; propagate's
+        # carry fixed point makes those match the carry-in side.
+        carry_fix: List[Optional[ReshardProgram]] = []
+        for i in range(nk):
+            cin_sh = inner_plan.in_shardings[nc + i]
+            cout_sh = inner_plan.out_shardings[i]
+            if cin_sh.dims_mapping != cout_sh.dims_mapping:
+                gshape = tuple(body.outvars[i].aval.shape)
+                prog = plan_reshard(
+                    cout_sh, cin_sh, shard_shape(gshape, cout_sh),
+                    int(np.dtype(body.outvars[i].aval.dtype).itemsize),
+                )
+                self.stats.add_program(prog)
+                carry_fix.append(prog)
+            else:
+                carry_fix.append(None)
+        # outer output shardings: index-based (ys get a leading unsharded dim)
+        outvars = list(eqn.outvars)
+        out_shardings: List[Sharding] = []
+        for i, ov in enumerate(outvars):
+            if i < nk:
+                osh = inner_plan.in_shardings[nc + i]
+            else:
+                ysh = inner_plan.out_shardings[i]
+                osh = Sharding(self.mesh, ((),) + ysh.dims_mapping)
+            self.set_sharding(ov, osh)
+            out_shardings.append(osh)
+        invars = list(eqn.invars)
+        length = p.get("length")
+
+        def step(env, invars=invars, outvars=outvars, plan=inner_plan,
+                 boundary=boundary, carry_fix=carry_fix, nc=nc, nk=nk, length=length):
+            vals = [
+                execute_program(_read(env, v), b) if b is not None else _read(env, v)
+                for v, b in zip(invars, boundary)
+            ]
+            consts = vals[:nc]
+            init = tuple(vals[nc : nc + nk])
+            xs = tuple(vals[nc + nk :])
+
+            def body_fn(carry, x):
+                outs = plan.execute(*consts, *carry, *x)
+                new_carry = tuple(
+                    execute_program(o, f) if f is not None else o
+                    for o, f in zip(outs[:nk], carry_fix)
+                )
+                return new_carry, tuple(outs[nk:])
+
+            carry, ys = lax.scan(body_fn, init, xs, length=length)
+            for ov, o in zip(outvars, list(carry) + list(ys)):
+                _write(env, ov, o)
+
+        self.emit(step)
+
+    # -- fallback --------------------------------------------------------------------
+    def _fallback(self, eqn) -> None:
+        """Gather → op → reshard (§4.5), but only gathering the dims the op
+        actually modifies when the primitive's touched-dims are known."""
+        in_shardings = [self.sharding_of(v) for v in eqn.invars]
+        keep = fallback_keep_sharding(eqn, in_shardings, self.mesh)
+        prim = eqn.primitive
+        invars, outvars = list(eqn.invars), list(eqn.outvars)
+        if keep is not None:
+            kept_sh, params = keep
+            rank = kept_sh.rank
+            progs = [
+                self._reshard_prog(v, kept_sh)
+                if len(self._gshape(v)) == rank
+                else self._reshard_prog(v, replicated(self.mesh, len(self._gshape(v))))
+                for v in invars
+            ]
+            subfuns, bind_params = prim.get_bind_params(params)
+            want_progs: List[Optional[ReshardProgram]] = []
+            for ov in outvars:
+                osh = Sharding(
+                    self.mesh,
+                    tuple(
+                        kept_sh.dims_mapping[d] if d < rank else ()
+                        for d in range(getattr(ov.aval, "ndim", 0))
+                    ),
+                )
+                want = self.prop.get(ov) or osh
+                self.set_sharding(ov, osh)
+                if osh.dims_mapping != want.dims_mapping:
+                    gshape = tuple(ov.aval.shape)
+                    prog = plan_reshard(
+                        osh, want, shard_shape(gshape, osh),
+                        int(np.dtype(ov.aval.dtype).itemsize),
+                    )
+                    self.stats.add_program(prog)
+                    want_progs.append(prog)
+                    self.set_sharding(ov, want)
+                else:
+                    want_progs.append(None)
+
+            def step(env):
+                vals = [
+                    execute_program(_read(env, v), pr) if pr is not None else _read(env, v)
+                    for v, pr in zip(invars, progs)
+                ]
+                out = prim.bind(*subfuns, *vals, **bind_params)
+                outs = out if prim.multiple_results else [out]
+                for ov, o, pr in zip(outvars, outs, want_progs):
+                    _write(env, ov, execute_program(o, pr) if pr is not None else o)
+
+            self.emit(step)
+            return
+        # unknown op: full gather, global op, re-slice to the propagated sharding
+        progs = [
+            self._reshard_prog(v, replicated(self.mesh, len(self._gshape(v))))
+            for v in invars
+        ]
+        subfuns, bind_params = prim.get_bind_params(eqn.params)
+        want_progs = []
+        for ov in outvars:
+            rank = getattr(ov.aval, "ndim", 0)
+            want = self.prop.get(ov) or replicated(self.mesh, rank)
+            self.set_sharding(ov, want)
+            if want.is_fully_replicated():
+                want_progs.append(None)
+            else:
+                prog = plan_reshard(
+                    replicated(self.mesh, rank), want, tuple(ov.aval.shape),
+                    int(np.dtype(ov.aval.dtype).itemsize),
+                )
+                self.stats.add_program(prog)
+                want_progs.append(prog)
+
+        def step(env):
+            vals = [
+                execute_program(_read(env, v), pr) if pr is not None else _read(env, v)
+                for v, pr in zip(invars, progs)
+            ]
+            out = prim.bind(*subfuns, *vals, **bind_params)
+            outs = out if prim.multiple_results else [out]
+            for ov, o, pr in zip(outvars, outs, want_progs):
+                _write(env, ov, execute_program(o, pr) if pr is not None else o)
+
+        self.emit(step)
+
+
+# ---------------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------------
+
+
+def compile_plan(closed: excore.ClosedJaxpr, prop: PropagationResult, mesh: Mesh) -> PartitionPlan:
+    """Lower a propagated (closed) jaxpr into an executable PartitionPlan."""
+    builder = PlanBuilder(closed.jaxpr, closed.consts, prop, mesh)
+    return builder.build()

@@ -17,6 +17,7 @@ into ``with_sharding_constraint``s for XLA (the partitioning pass).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -202,14 +203,21 @@ class Propagation:
             inner.seed_io(in_seed, out_seed)
             inner.changed = False
             inner.run(max_rounds=4)
-            # feed carry-out back to carry-in
+            # feed carry-out back to carry-in; converged when the carry-in
+            # *mapping* stops changing (refine may rebuild an equal Sharding
+            # object, so identity comparison would never converge early)
             moved = False
             for i in range(nk):
                 cin, cout = body.invars[nc + i], body.outvars[i]
                 before = inner.get(cin)
                 inner.refine(cin, inner.get(cout))
                 inner.refine(cout, inner.get(cin))
-                if inner.get(cin) is not before:
+                after = inner.get(cin)
+                if (before is None) != (after is None) or (
+                    after is not None
+                    and before is not None
+                    and after.dims_mapping != before.dims_mapping
+                ):
                     moved = True
             if not moved and not inner.changed:
                 break
@@ -250,6 +258,42 @@ class Propagation:
         if _subjaxpr(eqn.params) is not None:
             return 2
         return PRIORITY.get(eqn.primitive.name, MAX_PRIORITY)
+
+    # -- stable post-run handle -------------------------------------------------
+    def result(self) -> "PropagationResult":
+        """Freeze this propagation into a :class:`PropagationResult`.
+
+        The live ``Propagation`` keys sub-problems by ``id(eqn)`` — fine while
+        the object graph is alive, but useless as a cache artifact.  The result
+        re-keys them by equation *index*, which is stable for the lifetime of
+        the (retained) jaxpr, so the partition-plan compiler can look up inner
+        propagations without holding the mutable pass object.
+        """
+        sub = {}
+        for i, eqn in enumerate(self.jaxpr.eqns):
+            p = self.sub.get(id(eqn))
+            if p is not None:
+                sub[i] = p.result()
+        return PropagationResult(self.jaxpr, self.mesh, dict(self.env), sub)
+
+
+@dataclasses.dataclass(frozen=True)
+class PropagationResult:
+    """Immutable view of a finished propagation: the plan compiler's input.
+
+    ``sub`` maps *equation index* (not ``id``) to the inner result for
+    scan/pjit/remat bodies.
+    """
+
+    jaxpr: excore.Jaxpr
+    mesh: Mesh
+    env: Dict[excore.Var, Sharding]
+    sub: Dict[int, "PropagationResult"]
+
+    def get(self, v) -> MaybeS:
+        if isinstance(v, excore.Literal):
+            return None
+        return self.env.get(v)
 
 
 def propagate(

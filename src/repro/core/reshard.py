@@ -8,78 +8,38 @@ match an op's supported cases it inserts resharding:
 * DynamicSlice— shard a replicated dimension (offset = f(partition id)),
 * CollectivePermute — change device order (not needed here: one canonical mesh).
 
-``reshard_local(x, cur, tgt)`` composes these steps to move a local shard from
-sharding ``cur`` to ``tgt``.  All dims are assumed evenly divisible (uneven dims
-are padded to multiples beforehand, §4.1 — see sharding.pad_to_multiple).
+Which sequence of those steps to use is no longer decided greedily here: the
+cost-model planner (``collective_planner.plan_reshard``) enumerates candidate
+sequences, prices them with the roofline wire-byte model, and returns the
+cheapest valid :class:`~repro.core.collective_planner.ReshardProgram`.  In
+particular a mesh axis moving between dims lowers to a direct AllToAll at
+(n-1)/n of the operand bytes instead of AllGather + DynamicSlice at (n-1)×,
+and DynamicSlices run before AllGathers so gathered operands are as small as
+possible.
+
+``reshard_local(x, cur, tgt)`` is the plan-then-execute convenience used by
+the dynamic reference partitioner; the compiled-plan path
+(``core/plan.py``) calls ``plan_reshard`` once at plan time and replays the
+program on every execution.  All dims are assumed evenly divisible (uneven
+dims are padded to multiples beforehand, §4.1 — see sharding.pad_to_multiple).
 """
 from __future__ import annotations
 
 from typing import Tuple
 
-import jax
-from jax import lax
-
+from .collective_planner import execute_program, plan_reshard
 from .sharding import Sharding
-
-
-def _axis_dim_map(s: Sharding):
-    """mesh axis name -> (dim, position-within-dim-axes)."""
-    out = {}
-    for d, axes in enumerate(s.dims_mapping):
-        for k, a in enumerate(axes):
-            out[a] = (d, k)
-    return out
 
 
 def reshard_local(x, cur: Sharding, tgt: Sharding):
     """Transform local shard ``x`` from sharding ``cur`` to ``tgt``.
 
-    Runs under shard_map; uses collective ops over mesh axis names.
+    Runs under shard_map; uses collective ops over mesh axis names.  The
+    collective sequence is chosen by the cost-model planner.
     """
     assert cur.rank == tgt.rank == x.ndim, (cur, tgt, x.shape)
-    cur_map = _axis_dim_map(cur)
-    tgt_map = _axis_dim_map(tgt)
-    work = Sharding(cur.mesh, cur.dims_mapping)
-
-    # Step 1: AllToAll for axes that move between dims.
-    for a, (di, _) in sorted(cur_map.items()):
-        if a in tgt_map and tgt_map[a][0] != di:
-            dj = tgt_map[a][0]
-            # gather innermost axes stacked after `a` on dim di first, so `a` is
-            # the innermost (last) sharding of di (required for clean a2a tiling)
-            while work.dims_mapping[di] and work.dims_mapping[di][-1] != a:
-                inner = work.dims_mapping[di][-1]
-                x = lax.all_gather(x, inner, axis=di, tiled=True)
-                work = work.with_dim(di, work.dims_mapping[di][:-1])
-                cur_map = _axis_dim_map(work)
-            x = lax.all_to_all(x, a, split_axis=dj, concat_axis=di, tiled=True)
-            work = work.with_dim(di, work.dims_mapping[di][:-1])
-            work = work.with_dim(dj, work.dims_mapping[dj] + (a,))
-            cur_map = _axis_dim_map(work)
-
-    # Step 2: AllGather axes sharded in cur but absent in tgt.
-    for a, (di, _) in sorted(_axis_dim_map(work).items()):
-        if a not in tgt_map:
-            # gather anything stacked inside first
-            while work.dims_mapping[di][-1] != a:
-                inner = work.dims_mapping[di][-1]
-                x = lax.all_gather(x, inner, axis=di, tiled=True)
-                work = work.with_dim(di, work.dims_mapping[di][:-1])
-            x = lax.all_gather(x, a, axis=di, tiled=True)
-            work = work.with_dim(di, work.dims_mapping[di][:-1])
-
-    # Step 3: DynamicSlice for axes newly sharded in tgt (offset from axis_index).
-    for d in range(tgt.rank):
-        for a in tgt.dims_mapping[d]:
-            if a not in _axis_dim_map(work):
-                n = work.mesh.axis_size(a)
-                size = x.shape[d] // n
-                idx = lax.axis_index(a)
-                x = lax.dynamic_slice_in_dim(x, idx * size, size, axis=d)
-                work = work.with_dim(d, work.dims_mapping[d] + (a,))
-
-    assert _axis_dim_map(work) == tgt_map, (work, tgt)
-    return x
+    prog = plan_reshard(cur, tgt, tuple(x.shape), dtype_bytes=x.dtype.itemsize)
+    return execute_program(x, prog)
 
 
 def shard_shape(global_shape: Tuple[int, ...], s: Sharding) -> Tuple[int, ...]:

@@ -51,8 +51,22 @@ class Mesh:
         )
 
     # jaxpr params must be hashable; hash by content (device order matters, §3.1)
+    # The digest is cached: meshes are hashed on every plan-cache lookup, and
+    # ``tobytes`` on a 512-device mesh is measurable on the hot path.
     def __hash__(self):
-        return hash((self.devices.tobytes(), self.devices.shape, self.axis_names))
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.devices.tobytes(), self.devices.shape, self.axis_names))
+            object.__setattr__(self, "_hash", h)
+        return h
+
+    def structural_key(self):
+        """Cheap hashable identity for plan-cache keys (content digest, cached)."""
+        k = self.__dict__.get("_skey")
+        if k is None:
+            k = (self.devices.shape, self.axis_names, hash(self))
+            object.__setattr__(self, "_skey", k)
+        return k
 
     def __eq__(self, other):
         return (
@@ -172,6 +186,11 @@ class Sharding:
         return int(idx) * self.shard_size(global_dim_size, dim)
 
     # ---- helpers ----------------------------------------------------------------
+    def structural_key(self):
+        """Hashable identity used by the partition-plan cache: mesh digest +
+        dims_mapping, avoiding the full array comparison of ``__eq__``."""
+        return (self.mesh.structural_key(), self.dims_mapping)
+
     def with_dim(self, dim: int, axes: Tuple[str, ...]) -> "Sharding":
         dm = list(self.dims_mapping)
         dm[dim] = axes

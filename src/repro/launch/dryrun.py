@@ -30,7 +30,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo_parse import collective_bytes
-from repro.analysis.roofline import count_params, extrapolate, model_flops
+from repro.analysis.roofline import (
+    ICI_BW, count_params, extrapolate, model_flops,
+)
+from repro.core.compat import cost_analysis_dict, set_mesh
 from repro.configs.base import get_strategy
 from repro.configs.registry import (
     SHAPES, arch_ids, cell_supported, default_strategy, get_config, input_specs,
@@ -107,7 +110,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool, unroll: int = 1,
     st = get_strategy(strategy or default_strategy(arch))
     mesh = make_production_mesh(multi_pod=multi_pod)
     opt = get_optimizer("adafactor")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # param/strategy construction must happen inside the mesh context
         if case.kind in ("train", "prefill"):
             state = abstract_state(cfg, st, mesh, opt)
@@ -196,7 +199,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
             cfg_overrides=cfg_overrides,
         )
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         txt = compiled.as_text()
         coll1 = collective_bytes(txt)
         flops1 = float(ca.get("flops", 0.0))
@@ -213,6 +216,15 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
         }
         rec["compile_s_u1"] = meta["compile_s"]
         rec["hlo_collectives_u1"] = coll1
+        # per-kind modeled seconds on the roofline link bandwidth — the same
+        # byte model the reshard planner minimizes, so planner decisions and
+        # compiled-HLO accounting are directly comparable
+        rec["modeled_collective_s_u1"] = {
+            kind: coll1[kind]["wire_bytes"] / ICI_BW
+            for kind in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+            if coll1.get(kind, {}).get("count")
+        }
         if verbose:
             print(f"[{key}] memory_analysis: {ma}")
             print(f"[{key}] cost_analysis: flops={flops1:.3e} bytes={bytes1:.3e}")
@@ -226,7 +238,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
                     arch, shape, multi_pod=multi_pod, strategy=strategy,
                     cfg_overrides=cfg_overrides, analysis_layers=n * sb,
                 )
-                ca_n = c_n.cost_analysis()
+                ca_n = cost_analysis_dict(c_n)
                 coll_n = collective_bytes(c_n.as_text())
                 vals[n] = (
                     float(ca_n.get("flops", 0.0)),

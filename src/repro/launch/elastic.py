@@ -20,7 +20,6 @@ def derive_mesh(n_devices: int, model_parallel: int = None):
     mp = model_parallel or min(16, n_devices)
     while n_devices % mp:
         mp -= 1
-    return jax.make_mesh(
-        (n_devices // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.core.compat import make_jax_mesh
+
+    return make_jax_mesh((n_devices // mp, mp), ("data", "model"))

@@ -91,7 +91,14 @@ def project_qkv(cfg: ModelConfig, st: Strategy, p: Params, xq, xkv, positions):
     T = k.shape[1]
     # q: (B,S,N=K*G,D) -> (B,S,K,G,D) -> pad G->Gp -> (B,S,KR,Gl,D)
     q = q.reshape(B, S, K, G, cfg.dh)
-    q = _pad_group(q, G, Gp, axis=3)
+    if Gp != G:
+        # §4.1: the (K, G) split is not divisible by the kv axis until padded;
+        # pin the head dims unsharded here or sharding propagates backward
+        # through the uneven reshape (an expensive reshard everywhere, and
+        # numerically miscompiled by older jaxlib CPU SPMD)
+        q = st.constrain(q, "batch", "seq", None, None, None)
+        q = _pad_group(q, G, Gp, axis=3)
+        q = st.constrain(q, "batch", "seq", None, None, None)
     q = q.reshape(B, S, KR, Gl, cfg.dh)
     q = st.constrain(q, "batch", "seq", "kv", None, None)
     # k,v: (B,T,K,D) -> replicate r times -> (B,T,KR,D)
@@ -257,7 +264,13 @@ def cross_attention(cfg: ModelConfig, st: Strategy, p: Params, x, enc_k, enc_v):
     Gl = Gp // r
     q = jnp.einsum("bsm,mnd->bsnd", x, p["wq"].astype(dt))
     q = q.reshape(B, S, K, G, cfg.dh)
-    q = _pad_group(q, G, Gp, axis=3).reshape(B, S, KR, Gl, cfg.dh)
+    if Gp != G:  # §4.1: see project_qkv — no sharding across the uneven pad
+        q = st.constrain(q, "batch", "seq", None, None, None)
+        q = _pad_group(q, G, Gp, axis=3)
+        q = st.constrain(q, "batch", "seq", None, None, None)
+    else:
+        q = _pad_group(q, G, Gp, axis=3)
+    q = q.reshape(B, S, KR, Gl, cfg.dh)
     attn = chunked_attention(
         q, enc_k, enc_v, causal=False, chunk=min(1024, enc_k.shape[1])
     )

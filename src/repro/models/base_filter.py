@@ -5,7 +5,8 @@ from ..configs.base import filter_spec_by_shape
 
 
 def filter_for_shape(spec, shape):
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.core.compat import get_abstract_mesh
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return spec
     return filter_spec_by_shape(spec, shape, mesh)

@@ -1,0 +1,69 @@
+"""Deterministic mini-`hypothesis` used when the real library is absent.
+
+The container image does not ship `hypothesis` and installing packages is not
+an option, so the property tests fall back to this: the same @given/@settings
+surface, drawing a fixed number of pseudo-random examples from a seeded RNG.
+Only the strategies the test-suite actually uses are implemented
+(sampled_from, lists, integers).  No shrinking, no database — a failing
+example prints its arguments and fails the test directly.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda r: options[r.randrange(len(options))])
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda r: [elements.draw(r) for _ in range(r.randint(min_size, max_size))]
+    )
+
+
+class strategies:
+    sampled_from = staticmethod(sampled_from)
+    integers = staticmethod(integers)
+    lists = staticmethod(lists)
+
+
+def settings(max_examples=25, deadline=None, **_kw):
+    def deco(fn):
+        fn._hypo_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        # NB: no functools.wraps — pytest would read the wrapped signature and
+        # treat the strategy parameters as fixtures.
+        def wrapper():
+            n = min(getattr(fn, "_hypo_max_examples", 25), 50)
+            rng = random.Random(0)
+            for i in range(n):
+                args = tuple(s.draw(rng) for s in arg_strats)
+                kw = {k: s.draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kw)
+                except Exception:
+                    print(f"[hypo-stub] falsifying example #{i}: args={args} kw={kw}")
+                    raise
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

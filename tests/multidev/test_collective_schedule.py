@@ -11,6 +11,8 @@ These are the checkable versions of the paper's §5 claims:
 import os
 
 import jax
+
+from repro.core.compat import make_jax_mesh, set_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -21,8 +23,7 @@ from repro.configs.base import ModelConfig, get_strategy
 from repro.models import api
 from repro.models.layers import tree_shapes, tree_specs
 
-jmesh = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+jmesh = make_jax_mesh((2, 4), ("data", "model"))
 
 CFG = ModelConfig(
     name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
@@ -31,7 +32,7 @@ CFG = ModelConfig(
 
 
 def compile_loss(cfg, st):
-    with jax.set_mesh(jmesh):
+    with set_mesh(jmesh):
         tree = api.param_tree(cfg, st)
         params = tree_shapes(tree, sharding_for=lambda s: NamedSharding(jmesh, s))
         tok = jax.ShapeDtypeStruct((8, 16), jnp.int32,
@@ -85,7 +86,7 @@ def test_pipeline_collective_permute():
         # shard the shifting buffer's stage dim on "data"
         return jax.lax.with_sharding_constraint(out, P())
 
-    with jax.set_mesh(jmesh):
+    with set_mesh(jmesh):
         def run2(ws, xs):
             def stage2(w, x):
                 x = jax.lax.with_sharding_constraint(x, P())

@@ -3,6 +3,8 @@ for real model training steps across strategies; elastic checkpoint restore."""
 import os
 
 import jax
+
+from repro.core.compat import make_jax_mesh, set_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -13,8 +15,7 @@ from repro.models import api
 from repro.models.layers import tree_init
 from repro.train import checkpoint as ckpt
 
-jmesh = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+jmesh = make_jax_mesh((2, 4), ("data", "model"))
 
 CFG = ModelConfig(
     name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
@@ -34,7 +35,7 @@ def test_sharded_loss_matches_unsharded(strategy):
     params = tree_init(api.param_tree(CFG, st), rng)
     loss_ref = float(api.loss_fn(CFG, st, params, batch))
 
-    with jax.set_mesh(jmesh):
+    with set_mesh(jmesh):
         params_s = jax.tree_util.tree_map(jnp.asarray, params)
         loss_sharded = float(
             jax.jit(lambda p, b: api.loss_fn(CFG, st, p, b))(params_s, batch)
@@ -51,7 +52,7 @@ def test_sharded_gqa_padded_heads_match():
     tok = jax.random.randint(rng, (8, 16), 0, cfg.vocab_size, jnp.int32)
     batch = {"tokens": tok, "labels": tok}
     loss_ref = float(api.loss_fn(cfg, st, params, batch))
-    with jax.set_mesh(jmesh):
+    with set_mesh(jmesh):
         loss_sharded = float(
             jax.jit(lambda p, b: api.loss_fn(cfg, st, p, b))(params, batch)
         )
@@ -67,7 +68,7 @@ def test_moe_sharded_parity():
     tok = jax.random.randint(rng, (8, 16), 0, cfg.vocab_size, jnp.int32)
     batch = {"tokens": tok, "labels": tok}
     loss_ref = float(api.loss_fn(cfg, st, params, batch))
-    with jax.set_mesh(jmesh):
+    with set_mesh(jmesh):
         loss_sharded = float(
             jax.jit(lambda p, b: api.loss_fn(cfg, st, p, b))(params, batch)
         )
@@ -80,14 +81,13 @@ def test_elastic_restore_across_meshes(tmp_path):
     st = get_strategy("2d_finalized")
     params = tree_init(api.param_tree(CFG, st), jax.random.PRNGKey(0))
     d = str(tmp_path / "ck")
-    with jax.set_mesh(jmesh):
+    with set_mesh(jmesh):
         sharded = jax.jit(lambda p: p)(params)
         ckpt.save(d, 1, sharded)
     flat_ref = jax.tree_util.tree_leaves(params)
     for shape in [(4, 2), (8, 1)]:
-        m2 = jax.make_mesh(shape, ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(m2):
+        m2 = make_jax_mesh(shape, ("data", "model"))
+        with set_mesh(m2):
             restored, _ = ckpt.restore(d, params)
             flat_new = jax.tree_util.tree_leaves(restored)
             for a, b in zip(flat_ref, flat_new):

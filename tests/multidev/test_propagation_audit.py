@@ -4,14 +4,15 @@ For programs where the paper's algorithm has a unique intuitive answer, the
 completion our pass computes must agree with what XLA's propagation pass
 settles on (read back from the compiled module's output shardings)."""
 import jax
+
+from repro.core.compat import make_jax_mesh, set_mesh
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import Mesh, annotate, mesh_split, propagate, to_partition_spec
 
-jmesh = jax.make_mesh((2, 4), ("x", "y"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+jmesh = make_jax_mesh((2, 4), ("x", "y"))
 mesh = Mesh.create((2, 4), ("x", "y"))
 
 

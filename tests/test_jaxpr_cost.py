@@ -40,7 +40,9 @@ def test_matches_unrolled_cost_analysis():
     w1 = jnp.ones((64, 128))
     w2 = jnp.ones((128, 32))
     ours = count_flops_fn(f, x, w1, w2)
-    ca = jax.jit(f).lower(x, w1, w2).compile().cost_analysis()
+    from repro.core.compat import cost_analysis_dict
+
+    ca = cost_analysis_dict(jax.jit(f).lower(x, w1, w2).compile())
     xla = float(ca["flops"])
     dot_flops = 2 * 16 * 64 * 128 + 2 * 16 * 128 * 32
     assert ours >= dot_flops

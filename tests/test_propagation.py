@@ -143,8 +143,9 @@ def test_gspmd_jit_numeric():
     from repro.core import gspmd_jit
 
     m1 = Mesh.create((1, 1), ("x", "y"))
-    jm = jax.make_mesh((1, 1), ("x", "y"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_jax_mesh
+
+    jm = make_jax_mesh((1, 1), ("x", "y"))
 
     def f(a, b):
         a = annotate(a, mesh_split(2, m1, ["x", -1]))

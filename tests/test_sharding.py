@@ -1,7 +1,11 @@
 """Unit + property tests for the sharding representation (paper §3.1/§3.5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hs
+
+try:
+    from hypothesis import given, settings, strategies as hs
+except ImportError:  # container lacks hypothesis; deterministic fallback
+    from _hypo_stub import given, settings, strategies as hs
 
 from repro.core.sharding import (
     Mesh, Sharding, ShardingType, is_refinement, merge_shardings, mesh_split,
