@@ -1,20 +1,30 @@
 # Single entry point for CI / pre-merge verification.
 #
-#   make check        tier-1 tests + plan-layer smoke benchmark
+#   make check        tier-1 tests + bench regression guard (the guard
+#                     refreshes BENCH_plan.json itself after it passes, so
+#                     the smoke record is computed exactly once per check)
 #   make test         tier-1 pytest only
-#   make bench-smoke  planned-collective counts + plan-cache hit rate
-#                     -> artifacts/bench/BENCH_plan.json
+#   make bench-guard  diff a fresh smoke run against the committed
+#                     BENCH_plan.json; fail if planned bytes / collective
+#                     counts / cache hit rates regress on any cell; on
+#                     success, write the fresh record as the new artifact
+#   make bench-smoke  planned-collective counts + optimizer-pass savings +
+#                     plan-cache hit rates -> artifacts/bench/BENCH_plan.json
+#                     (unconditional refresh, no comparison)
 #   make report       regenerate the dry-run / roofline / plan report tables
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check test bench-smoke report
+.PHONY: check test bench-guard bench-smoke report
 
-check: test bench-smoke
+check: test bench-guard
 
 test:
 	$(PY) -m pytest -x -q
+
+bench-guard:
+	$(PY) -m benchmarks.guard
 
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke

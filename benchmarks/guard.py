@@ -1,0 +1,131 @@
+"""Plan-benchmark regression guard: fresh smoke vs the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.guard   (or ``make bench-guard``)
+
+Recomputes ``plan_smoke.smoke_record()`` in memory and diffs it against the
+committed ``artifacts/bench/BENCH_plan.json``.  Fails (exit 1) when any cell
+regresses:
+
+* reshard/einsum cells — planned wire bytes grow, the planned collective
+  sequence gets longer, or the lattice-vs-PR1 ratio exceeds 1.0 (the search
+  must never lose to the greedy planner it refines);
+* optimizer cells — post-pass wire bytes or collective-launch counts grow,
+  the pass pipeline stops strictly improving a cell it used to improve, or a
+  cell loses its fused buckets;
+* cache cells — the per-runner or process-level hit rate drops.
+
+Timing fields (``build_*_ms``) are informational and never guarded.  New
+cells in the fresh record are reported but pass (the baseline learns them on
+the next artifact commit); cells *missing* from the fresh record fail.  On
+success the fresh record is written back as the artifact, so ``make check``
+computes the smoke record exactly once (``make bench-smoke`` remains the
+unconditional, comparison-free refresh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .common import BENCH_ART
+
+BASELINE = os.path.join(BENCH_ART, "BENCH_plan.json")
+_EPS = 1e-6  # float-compare slack on byte counts
+
+
+def _fail(msgs, msg):
+    msgs.append("REGRESSION: " + msg)
+
+
+def _launches(cell):
+    # DynamicSlice is local addressing, not a collective launch (same
+    # convention as plan_opt.count_collective_launches)
+    return sum(1 for c in cell["planned"] if not c.startswith("dynamic-slice"))
+
+
+def _check_reshard_cell(msgs, name, base, fresh):
+    if fresh["planned_bytes"] > base["planned_bytes"] * (1 + _EPS):
+        _fail(msgs, f"{name}: planned_bytes {base['planned_bytes']:.3e} -> "
+                    f"{fresh['planned_bytes']:.3e}")
+    # more launches is only a regression when the bytes didn't improve —
+    # a cheaper program with extra (free or amortized) steps is a win, and
+    # exactly what the lattice search produces
+    if (_launches(fresh) > _launches(base)
+            and fresh["planned_bytes"] >= base["planned_bytes"] * (1 - _EPS)):
+        _fail(msgs, f"{name}: collective launches {_launches(base)} -> "
+                    f"{_launches(fresh)} without a byte improvement")
+    if fresh.get("ratio_vs_pr1", 1.0) > 1.0 + _EPS:
+        _fail(msgs, f"{name}: lattice worse than PR1 planner "
+                    f"(ratio {fresh['ratio_vs_pr1']:.3f} > 1.0)")
+
+
+def _check_opt_cell(msgs, name, base, fresh):
+    for k in ("wire_bytes_after", "collectives_after"):
+        if fresh[k] > base[k] * (1 + _EPS):
+            _fail(msgs, f"{name}: {k} {base[k]} -> {fresh[k]}")
+    # cells the pipeline used to strictly improve must stay strictly improved
+    if base["wire_bytes_after"] < base["wire_bytes_before"] * (1 - _EPS):
+        if not fresh["wire_bytes_after"] < fresh["wire_bytes_before"] * (1 - _EPS):
+            _fail(msgs, f"{name}: pass pipeline no longer reduces wire bytes")
+    if base["collectives_after"] < base["collectives_before"]:
+        if not fresh["collectives_after"] < fresh["collectives_before"]:
+            _fail(msgs, f"{name}: pass pipeline no longer reduces collective count")
+    if fresh["fused_buckets"] < base["fused_buckets"]:
+        _fail(msgs, f"{name}: fused buckets {base['fused_buckets']} -> "
+                    f"{fresh['fused_buckets']}")
+
+
+def _check_cache(msgs, key, base, fresh):
+    b, f = base.get(key, {}), fresh.get(key, {})
+    if b and f and f["hit_rate"] < b["hit_rate"] - _EPS:
+        _fail(msgs, f"{key}: hit rate {b['hit_rate']:.2f} -> {f['hit_rate']:.2f}")
+
+
+def compare(base: dict, fresh: dict):
+    """Return (failure messages, info messages)."""
+    msgs, info = [], []
+    for kind, checker in (("cells", _check_reshard_cell),
+                          ("opt_cells", _check_opt_cell)):
+        base_cells = {c["name"]: c for c in base.get(kind, [])}
+        fresh_cells = {c["name"]: c for c in fresh.get(kind, [])}
+        for name, bc in base_cells.items():
+            fc = fresh_cells.get(name)
+            if fc is None:
+                _fail(msgs, f"{name}: cell missing from fresh run")
+                continue
+            checker(msgs, name, bc, fc)
+        for name in fresh_cells:
+            if name not in base_cells:
+                info.append(f"new cell (not in baseline): {name}")
+    _check_cache(msgs, "plan_cache", base, fresh)
+    _check_cache(msgs, "process_plan_cache", base, fresh)
+    return msgs, info
+
+
+def main() -> int:
+    if not os.path.exists(BASELINE):
+        print(f"bench-guard: no baseline at {BASELINE}; "
+              "run `make bench-smoke` and commit the artifact first")
+        return 1
+    base = json.load(open(BASELINE))
+    from . import plan_smoke
+
+    fresh = plan_smoke.smoke_record()
+    msgs, info = compare(base, fresh)
+    for m in info:
+        print(f"bench-guard: {m}")
+    if msgs:
+        for m in msgs:
+            print(f"bench-guard: {m}", file=sys.stderr)
+        print(f"bench-guard: FAILED ({len(msgs)} regression(s) vs {BASELINE})",
+              file=sys.stderr)
+        return 1
+    ncells = len(base.get("cells", [])) + len(base.get("opt_cells", []))
+    path = plan_smoke.write_artifact(fresh)
+    print(f"bench-guard: OK ({ncells} cells, no regressions vs committed baseline)")
+    print(f"# artifact refreshed: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,16 @@
 """Plan-layer smoke benchmark → ``artifacts/bench/BENCH_plan.json``.
 
 Records, per reshard benchmark cell, the planner's chosen collective sequence
-and its modeled wire bytes against the greedy AllGather-first baseline, plus
-the plan-cache hit rate of a repeated ``spmd_partition`` call and the
-planned-collective counts of a compiled plan.  Future PRs diff this artifact
-to track the perf trajectory (run via ``python -m benchmarks.run --smoke`` or
-``make bench-smoke``).
+and its modeled wire bytes against the greedy AllGather-first baseline and
+the PR 1 (search-disabled) planner; per *optimizer* cell, the whole-plan pass
+pipeline's pre- vs post-pass modeled wire bytes, collective-launch counts,
+fused-bucket counts, and plan-build wall time; plus the per-runner and
+process-level plan-cache hit rates.  ``benchmarks/guard.py`` diffs a fresh
+run of this module against the committed artifact and fails on regression
+(run via ``python -m benchmarks.run --smoke`` or ``make bench-smoke``;
+``make bench-guard`` for the diff).
 
-Everything here is *pure planning* except the cache cell, which executes a
+Everything here is *pure planning* except the cache cells, which execute a
 tiny program on a 1×1 mesh — so the smoke target runs in seconds on a single
 CPU device.
 """
@@ -15,6 +18,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import numpy as np
 
@@ -32,8 +36,10 @@ def _reshard_cells():
     from repro.core.sharding import Mesh, mesh_split
 
     mesh = Mesh.create(_MESH_SHAPE, ("x", "y"))
+    mesh3 = Mesh.create((2, 2, 4), ("x", "y", "z"))
     # (name, src, dst, local shape under src) — a dim-move, a slice-before-
-    # gather, and a stacked-axes drop, on a 4 MiB fp32 operand
+    # gather, and a stacked-axes drop, on a 4 MiB fp32 operand; plus a 3-axis
+    # stacked target where only the lattice search finds the AllToAll detour
     cases = [
         ("dim_move_a2a",
          mesh_split(2, mesh, ["y", -1]), mesh_split(2, mesh, [-1, "y"]),
@@ -44,6 +50,9 @@ def _reshard_cells():
         ("stacked_drop_inner_first",
          mesh_split(2, mesh, [("x", "y"), -1]), mesh_split(2, mesh, ["x", -1]),
          (32, 1024)),
+        ("lattice_3axis_stacked_target",
+         mesh_split(2, mesh3, [-1, "x"]), mesh_split(2, mesh3, [-1, ("z", "x")]),
+         (1024, 512)),
     ]
     cells = []
     for name, src, dst, local in cases:
@@ -53,11 +62,12 @@ def _reshard_cells():
             steps = gen(src, dst, local)
             return simulate(src, dst, steps, local, 4) if steps is not None else None
 
-        # two reference points, both reported: the AllGather-first expression
-        # of the move, and the pre-planner greedy schedule (which already used
-        # AllToAll when the moving axis was innermost)
+        # three reference points, all reported: the AllGather-first expression
+        # of the move, the pre-planner greedy schedule, and the PR 1 planner
+        # (candidate families only, no lattice search)
         allgather_bytes = price(_candidate_gather_all)
         legacy_bytes = price(_candidate_legacy)
+        pr1_bytes = plan_reshard(src, dst, local, dtype_bytes=4, search=False).cost_bytes
         cells.append({
             "name": name,
             "src": repr(src),
@@ -68,11 +78,15 @@ def _reshard_cells():
             "planned_bytes": prog.cost_bytes,
             "allgather_bytes": allgather_bytes,
             "legacy_bytes": legacy_bytes,
+            "pr1_bytes": pr1_bytes,
             "ratio_vs_allgather": (
                 prog.cost_bytes / allgather_bytes if allgather_bytes else 1.0
             ),
             "ratio_vs_legacy": (
                 prog.cost_bytes / legacy_bytes if legacy_bytes else 1.0
+            ),
+            "ratio_vs_pr1": (
+                prog.cost_bytes / pr1_bytes if pr1_bytes else 1.0
             ),
         })
     return cells
@@ -99,9 +113,103 @@ def _einsum_cell():
         "planned_bytes": plan.cost_bytes,
         "allgather_bytes": ar,
         "legacy_bytes": plan.cost_bytes,
+        "pr1_bytes": plan.cost_bytes,
         "ratio_vs_allgather": plan.cost_bytes / ar,
         "ratio_vs_legacy": 1.0,
+        "ratio_vs_pr1": 1.0,
     }
+
+
+# ---------------------------------------------------------------------------------
+# whole-plan optimizer cells (PR 2): pre- vs post-pass bytes and launches
+# ---------------------------------------------------------------------------------
+
+
+def _opt_programs():
+    """The three optimizer benchmark programs: CSE, DCE, CSE+fusion fan-out."""
+    import jax
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as Sds
+
+    from repro.core import annotate, mesh_split
+    from repro.core.sharding import Mesh
+
+    mesh = Mesh.create(_MESH_SHAPE, ("x", "y"))
+    R = mesh_split(2, mesh, [-1, -1])
+    f32 = lambda *s: Sds(s, jnp.float32)  # noqa: E731
+
+    def cse_shared_operand(a, w1, w2):
+        # `a` consumed by two einsums, both needing the same dim-move reshard
+        a = annotate(a, mesh_split(2, mesh, ["y", -1]))
+        w1 = annotate(w1, mesh_split(2, mesh, ["y", -1]))
+        w2 = annotate(w2, mesh_split(2, mesh, ["y", -1]))
+        return (a @ w1) + (a @ w2)
+
+    def dead_reshard(a):
+        # an annotation whose resharded value the program never consumes
+        a1 = annotate(a, mesh_split(2, mesh, ["x", -1]))
+        _dead = annotate(a1, mesh_split(2, mesh, [-1, "y"]))
+        return jnp.tanh(a1)
+
+    def fused_allreduce_fanout(a, w1, w2, w3, w4):
+        # shared-operand CSE + four independent psums bucketed into one launch
+        a = annotate(a, mesh_split(2, mesh, ["y", -1]))
+        outs = []
+        for w in (w1, w2, w3, w4):
+            w = annotate(w, mesh_split(2, mesh, ["y", -1]))
+            outs.append(annotate(a @ w, R))
+        return tuple(outs)
+
+    return mesh, [
+        ("cse_shared_operand", cse_shared_operand, [f32(512, 512)] * 3),
+        ("dead_reshard", dead_reshard, [f32(512, 512)]),
+        ("fused_allreduce_fanout", fused_allreduce_fanout, [f32(256, 256)] * 5),
+    ]
+
+
+def _opt_cells():
+    import jax
+
+    from repro.core.plan import compile_plan
+    from repro.core.propagation import propagate
+
+    mesh, programs = _opt_programs()
+    cells = []
+    for name, fn, avals in programs:
+        closed = jax.make_jaxpr(fn)(*avals)
+        prop = propagate(closed, mesh).result()
+        # warm both variants once (first build absorbs import/cache warmup,
+        # which would otherwise make the raw build look slower than raw+passes),
+        # then report best-of-2
+        compile_plan(closed, prop, mesh, optimize=False)
+        compile_plan(closed, prop, mesh, optimize=True)
+
+        def _time(optimize):
+            best = float("inf")
+            for _ in range(2):
+                t0 = time.perf_counter()
+                p = compile_plan(closed, prop, mesh, optimize=optimize)
+                best = min(best, (time.perf_counter() - t0) * 1e3)
+            return best, p
+
+        build_raw_ms, _ = _time(False)
+        build_opt_ms, plan = _time(True)
+        rep = plan.opt_report.as_dict()
+        cells.append({
+            "name": name,
+            "wire_bytes_before": rep["wire_bytes_before"],
+            "wire_bytes_after": rep["wire_bytes_after"],
+            "collectives_before": rep["collectives_before"],
+            "collectives_after": rep["collectives_after"],
+            "steps_before": rep["steps_before"],
+            "steps_after": rep["steps_after"],
+            "fused_buckets": rep["fused_buckets"],
+            "launch_s_saved": rep["launch_s_saved"],
+            "passes": rep["passes"],
+            "build_raw_ms": build_raw_ms,
+            "build_opt_ms": build_opt_ms,
+        })
+    return cells
 
 
 def _cache_cell():
@@ -109,31 +217,45 @@ def _cache_cell():
 
     from repro.core import annotate, mesh_split
     from repro.core.compat import make_jax_mesh
-    from repro.core.partitioner import spmd_partition
+    from repro.core.partitioner import (
+        clear_process_plan_cache, process_plan_cache_stats, spmd_partition,
+    )
     from repro.core.sharding import Mesh
 
     jmesh = make_jax_mesh((1, 1), ("x", "y"))
     mesh = Mesh.create((1, 1), ("x", "y"))
 
-    def f(a, b):
-        a = annotate(a, mesh_split(2, mesh, ["x", -1]))
-        b = annotate(b, mesh_split(2, mesh, [-1, "y"]))
-        return jnp.tanh(a @ b)
+    def make_fn():
+        def f(a, b):
+            a = annotate(a, mesh_split(2, mesh, ["x", -1]))
+            b = annotate(b, mesh_split(2, mesh, [-1, "y"]))
+            return jnp.tanh(a @ b)
 
-    runner = spmd_partition(f, jmesh, mesh)
+        return f
+
+    clear_process_plan_cache()
+    runner = spmd_partition(make_fn(), jmesh, mesh)
     x = np.ones((8, 8), np.float32)
     for _ in range(5):
         runner(x, x)
     (entry,) = runner.plans.values()
-    return {
+    # a second call site partitioning the same function: its build must hit
+    # the process-level cache (same jaxpr digest + mesh + avals)
+    runner2 = spmd_partition(make_fn(), jmesh, mesh)
+    runner2(x, x)
+    rec = {
         "plan_cache": runner.cache_stats.as_dict(),
+        "process_plan_cache": process_plan_cache_stats().as_dict(),
         "plan_stats": entry.plan.stats.as_dict(),
     }
+    clear_process_plan_cache()
+    return rec
 
 
 def smoke_record() -> dict:
     rec = {
         "cells": _reshard_cells() + [_einsum_cell()],
+        "opt_cells": _opt_cells(),
     }
     rec.update(_cache_cell())
     return rec
@@ -157,11 +279,25 @@ def rows(rec: dict = None):
             f"plan/{cell['name']}", 0.0,
             f"planned={cell['planned_bytes']:.3e}B "
             f"vs_allgather={cell['ratio_vs_allgather']:.3f} "
-            f"vs_legacy={cell['ratio_vs_legacy']:.3f}",
+            f"vs_legacy={cell['ratio_vs_legacy']:.3f} "
+            f"vs_pr1={cell['ratio_vs_pr1']:.3f}",
+        ))
+    for cell in rec["opt_cells"]:
+        out.append((
+            f"plan_opt/{cell['name']}", 0.0,
+            f"bytes={cell['wire_bytes_before']:.3e}->{cell['wire_bytes_after']:.3e} "
+            f"launches={cell['collectives_before']}->{cell['collectives_after']} "
+            f"fused={cell['fused_buckets']} "
+            f"build={cell['build_opt_ms']:.1f}ms",
         ))
     pc = rec["plan_cache"]
     out.append((
         "plan/cache", 0.0,
         f"hit_rate={pc['hit_rate']:.2f} ({pc['hits']}h/{pc['misses']}m)",
+    ))
+    pp = rec["process_plan_cache"]
+    out.append((
+        "plan/process_cache", 0.0,
+        f"hit_rate={pp['hit_rate']:.2f} ({pp['hits']}h/{pp['misses']}m)",
     ))
     return out

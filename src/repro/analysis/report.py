@@ -108,14 +108,14 @@ def plan_table(path: str) -> str:
         return f"_(no plan artifact at {path}; run `python -m benchmarks.run --smoke`)_"
     rec = json.load(open(path))
     lines = [
-        "| reshard cell | planned collectives | planned B/dev | vs AllGather-first | vs pre-planner greedy |",
-        "|---|---|---|---|---|",
+        "| reshard cell | planned collectives | planned B/dev | vs AllGather-first | vs pre-planner greedy | vs PR1 planner |",
+        "|---|---|---|---|---|---|",
     ]
     for c in rec.get("cells", []):
         lines.append(
             f"| {c['name']} | {'; '.join(c['planned'])} "
             f"| {c['planned_bytes']:.3e} | {c['ratio_vs_allgather']:.3f} "
-            f"| {c['ratio_vs_legacy']:.3f} |"
+            f"| {c['ratio_vs_legacy']:.3f} | {c.get('ratio_vs_pr1', 1.0):.3f} |"
         )
     pc = rec.get("plan_cache", {})
     if pc:
@@ -126,6 +126,43 @@ def plan_table(path: str) -> str:
             "`spmd_partition` calls skip tracing, propagation, and per-equation "
             "dispatch entirely."
         )
+    pp = rec.get("process_plan_cache", {})
+    if pp:
+        lines.append(
+            f"Process-level plan cache: {pp.get('hits', 0)} hits / "
+            f"{pp.get('misses', 0)} misses (hit rate {pp.get('hit_rate', 0.0):.2f}) "
+            "— separate `spmd_partition` call sites share built plans keyed by "
+            "jaxpr digest + mesh + avals."
+        )
+    return "\n".join(lines)
+
+
+def plan_opt_table(path: str) -> str:
+    """§Plan-optimizer: whole-plan pass-pipeline savings per benchmark cell."""
+    if not os.path.exists(path):
+        return f"_(no plan artifact at {path}; run `python -m benchmarks.run --smoke`)_"
+    rec = json.load(open(path))
+    cells = rec.get("opt_cells", [])
+    if not cells:
+        return "_(artifact predates the optimizer cells; re-run the smoke bench)_"
+    lines = [
+        "| optimizer cell | wire B/dev pre→post | collective launches pre→post | fused buckets | launch s saved | build ms (raw→opt) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        lines.append(
+            f"| {c['name']} "
+            f"| {c['wire_bytes_before']:.3e} → {c['wire_bytes_after']:.3e} "
+            f"| {c['collectives_before']} → {c['collectives_after']} "
+            f"| {c['fused_buckets']} | {c['launch_s_saved']:.1e} "
+            f"| {c['build_raw_ms']:.1f} → {c['build_opt_ms']:.1f} |"
+        )
+    lines.append("")
+    lines.append(
+        "Passes (in order): reshard CSE, dead-reshard elimination, output-alias "
+        "sinking, collective fusion/bucketing (roofline-capped) — see "
+        "`core/plan_opt.py`."
+    )
     return "\n".join(lines)
 
 
@@ -141,6 +178,8 @@ def main():
     print(roofline_table(recs))
     print("\n## §Partition plans (reshard planner vs greedy baseline)\n")
     print(plan_table(args.plan))
+    print("\n## §Plan optimizer (whole-plan pass pipeline)\n")
+    print(plan_opt_table(args.plan))
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from typing import Dict, Optional
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s / chip
 ICI_BW = 50e9  # B/s / link
+COLLECTIVE_LAUNCH_S = 10e-6  # per-collective launch/sync overhead (s)
 
 
 # ---------------------------------------------------------------------------------
@@ -63,6 +64,27 @@ def collective_wire_bytes(kind: str, group_size: int, in_bytes: float) -> float:
     if kind == "dynamic-slice":
         return 0.0
     raise ValueError(f"unknown collective kind {kind!r}")
+
+
+def collective_time_s(kind: str, group_size: int, in_bytes: float) -> float:
+    """Modeled wall time of one collective launch: fixed launch/sync overhead
+    plus wire time.  This is the term the fusion pass minimizes — k small
+    collectives pay k launches, one fused collective pays one."""
+    return COLLECTIVE_LAUNCH_S + collective_wire_bytes(kind, group_size, in_bytes) / ICI_BW
+
+
+def fusion_bucket_bytes() -> float:
+    """Bucket-size cap for collective fusion (``core/plan_opt.py``).
+
+    Fusing k members saves (k-1) launch overheads but adds one extra HBM
+    round-trip of the bucket (flatten/concat before, split/reshape after):
+    ~2·B/HBM_BW seconds for a B-byte bucket.  The copy stops paying for one
+    saved launch when 2·B/HBM_BW > COLLECTIVE_LAUNCH_S, i.e. at
+    B = COLLECTIVE_LAUNCH_S · HBM_BW / 2 (~4 MB with the v5e-class
+    constants) — beyond that the collectives are wire-bound and batching them
+    buys nothing the link wasn't already doing.
+    """
+    return COLLECTIVE_LAUNCH_S * HBM_BW / 2.0
 
 
 @dataclasses.dataclass

@@ -6,25 +6,36 @@ through Python on every trace: read shardings, classify the op, decide the
 reshard, emit collectives.  All of those decisions depend only on the jaxpr,
 the mesh, and the propagated shardings — never on data — so they can be made
 exactly once.  This module lowers a propagated jaxpr into a
-:class:`PartitionPlan`: a flat list of per-equation *steps*, each a closure
-over pre-resolved decisions —
+:class:`PartitionPlan`: a flat list of per-equation *steps*, each a
+:class:`PlanStep` over pre-resolved decisions —
 
 * the handler for the op (einsum / elementwise / reduce / conv / …),
 * operand reshard **programs** (cost-model-chosen collective sequences from
-  ``collective_planner.plan_reshard``),
+  ``collective_planner.plan_reshard``), emitted as *first-class reshard steps*
+  so the whole-plan optimizer (``core/plan_opt.py``) can CSE, eliminate, and
+  fuse them,
 * the ReduceScatter-vs-AllReduce choice for partial sums
-  (``einsum_rules.compile_einsum``),
+  (``einsum_rules.compile_einsum``), with trailing AllReduces emitted as
+  first-class *collective steps* so independent ones can be bucketed,
 * the output sharding.
+
+Every step declares its dataflow (``reads`` / ``writes`` env keys) and its
+runner reads operands *through* those tuples, so optimizer passes can rewire
+consumers without touching closures.  Values produced mid-plan (a resharded
+operand, a pre-psum partial sum) live under :class:`ProxyVar` keys — plan-local
+SSA names that never collide with jaxpr vars.
 
 Executing a plan is a straight walk of the step list with a dict environment;
 no propagation, no per-op classification, no reshard search.
-``spmd_partition`` (partitioner.py) caches plans keyed by input avals + mesh,
-so steady-state calls skip ``make_jaxpr``, ``propagate``, and all per-equation
-dispatch.
+``spmd_partition`` (partitioner.py) caches plans keyed by input avals + mesh
+(and process-wide by jaxpr digest), so steady-state calls skip ``make_jaxpr``,
+propagation, and all per-equation Python dispatch.
 
 The plan also carries :class:`PlanStats` — planned-collective counts and the
-modeled reshard wire bytes — consumed by the analysis/benchmark layer
-(``benchmarks/plan_smoke.py`` → ``BENCH_plan.json``).
+modeled reshard wire bytes — and, after optimization, an
+``opt_report`` (:class:`repro.core.plan_opt.OptReport`) with per-pass savings,
+consumed by the analysis/benchmark layer (``benchmarks/plan_smoke.py`` →
+``BENCH_plan.json``).
 """
 from __future__ import annotations
 
@@ -45,8 +56,105 @@ from .reshard import shard_shape
 from .rules import ELEMENTWISE
 from .sharding import Mesh, Sharding, merge_shardings, replicated
 
-Env = Dict[excore.Var, object]
-Step = Callable[[Env], None]
+Env = Dict[object, object]
+
+
+# ---------------------------------------------------------------------------------
+# env keys and structured steps
+# ---------------------------------------------------------------------------------
+
+
+class ProxyVar:
+    """A plan-local SSA value key (a resharded operand, a pre-psum partial).
+
+    jaxpr vars name the values of the *source* program; optimizer passes need
+    names for the intermediate values the partitioner itself introduces.  Env
+    keys only need identity hash/eq, so a bare object per value suffices.
+    """
+
+    __slots__ = ("note",)
+
+    def __init__(self, note: str = ""):
+        self.note = note
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"<proxy:{self.note}>"
+
+
+@dataclasses.dataclass
+class PlanStep:
+    """One resolved execution step with explicit dataflow.
+
+    ``run(env, reads, writes)`` must read operands positionally from ``reads``
+    and write results positionally to ``writes`` — never from captured keys —
+    so optimizer passes can rewire dataflow by editing the tuples.
+
+    Kinds:
+      * ``compute``    — a local op (einsum, elementwise, reduce, …);
+      * ``reshard``    — replay of one :class:`ReshardProgram` (CSE/DCE/fusion
+                         candidates);
+      * ``collective`` — a standalone trailing collective (psum/pmax/pmin)
+                         split out of its producing op so independent ones can
+                         be bucketed;
+      * ``fused``      — a fusion-pass product: one launch over a flattened
+                         concatenation of several members' buffers.
+    """
+
+    kind: str
+    reads: Tuple[object, ...]
+    writes: Tuple[object, ...]
+    run: Callable[[Env, Tuple, Tuple], None]
+    op: str = ""  # primitive name / collective kind
+    program: Optional[ReshardProgram] = None  # reshard steps only
+    axes: Tuple[str, ...] = ()  # collective steps only
+    reduce_op: str = ""  # "add" | "max" | "min"
+    lshape: Tuple[int, ...] = ()  # local shape of reads[0] on entry
+    dbytes: int = 0
+    dtype: str = ""
+
+    @property
+    def in_bytes(self) -> float:
+        b = float(self.dbytes)
+        for s in self.lshape:
+            b *= s
+        return b
+
+
+def _read(env: Env, v):
+    if isinstance(v, excore.Literal):
+        return v.val
+    return env[v]
+
+
+def _write(env: Env, v, val) -> None:
+    if isinstance(v, core.DropVar):
+        return
+    env[v] = val
+
+
+def _alias_run(env, reads, writes):
+    _write(env, writes[0], _read(env, reads[0]))
+
+
+def _reshard_run(prog: ReshardProgram):
+    def run(env, reads, writes, prog=prog):
+        _write(env, writes[0], execute_program(_read(env, reads[0]), prog))
+
+    return run
+
+
+def _collective_run(axes: Tuple[str, ...], reduce_op: str):
+    def run(env, reads, writes, axes=axes, reduce_op=reduce_op):
+        x = _read(env, reads[0])
+        if reduce_op == "add":
+            x = lax.psum(x, axes)
+        elif reduce_op == "max":
+            x = lax.pmax(x, axes)
+        else:
+            x = lax.pmin(x, axes)
+        _write(env, writes[0], x)
+
+    return run
 
 
 # ---------------------------------------------------------------------------------
@@ -60,8 +168,14 @@ class PlanStats:
 
     collectives: Dict[str, int] = dataclasses.field(default_factory=dict)
     reshard_bytes: float = 0.0  # modeled wire bytes of planned reshards
-    baseline_bytes: float = 0.0  # same reshards as AllGather-first (replicate+slice)
-    legacy_bytes: float = 0.0  # same reshards under the pre-planner greedy schedule
+    # Reference costs price the reshard set the *unoptimized* pipeline would
+    # execute — every builder-emitted reshard, including ones CSE/DCE later
+    # eliminate (the reference schedules had no whole-plan optimizer) — under
+    # the AllGather-first and pre-planner greedy schedules respectively.
+    # reshard_bytes vs these therefore captures both the per-reshard planner
+    # win (PR 1) and the optimizer-pass win (PR 2).
+    baseline_bytes: float = 0.0  # reference: AllGather-first (replicate+slice)
+    legacy_bytes: float = 0.0  # reference: pre-planner greedy schedule
     eqns: int = 0
     steps: int = 0
 
@@ -74,6 +188,20 @@ class PlanStats:
         for s in prog.steps:
             self.count(s.op.replace("_", "-"))
         self.reshard_bytes += prog.cost_bytes
+
+    def remove_program(self, prog: Optional[ReshardProgram]) -> None:
+        """Revert the *planned* accounting of :meth:`add_program` — used by
+        optimizer passes when a planned reshard is eliminated (CSE /
+        dead-reshard elimination).  Deliberately leaves ``baseline_bytes`` /
+        ``legacy_bytes`` untouched: the reference pipelines had no CSE/DCE
+        and would still execute the eliminated reshard, so keeping it in the
+        reference cost is what makes the planned-vs-reference delta reflect
+        the optimizer's win."""
+        if prog is None or prog.is_identity:
+            return
+        for s in prog.steps:
+            self.count(s.op.replace("_", "-"), -1)
+        self.reshard_bytes -= prog.cost_bytes
 
     def as_dict(self) -> Dict:
         return {
@@ -98,11 +226,12 @@ class PartitionPlan:
     jaxpr: excore.Jaxpr
     consts: Tuple
     mesh: Mesh
-    steps: List[Step]
+    steps: List[PlanStep]
     in_shardings: List[Sharding]
     out_shardings: List[Sharding]
     out_programs: List[Optional[ReshardProgram]]
     stats: PlanStats
+    opt_report: Optional[object] = None  # plan_opt.OptReport after optimization
 
     def execute(self, *args):
         """Run the plan on local shards (inside a shard_map region)."""
@@ -112,24 +241,12 @@ class PartitionPlan:
         for v, a in zip(self.jaxpr.invars, args):
             env[v] = a
         for step in self.steps:
-            step(env)
+            step.run(env, step.reads, step.writes)
         outs = []
         for v, prog in zip(self.jaxpr.outvars, self.out_programs):
             val = _read(env, v)
             outs.append(execute_program(val, prog) if prog is not None else val)
         return tuple(outs)
-
-
-def _read(env: Env, v):
-    if isinstance(v, excore.Literal):
-        return v.val
-    return env[v]
-
-
-def _write(env: Env, v, val) -> None:
-    if isinstance(v, core.DropVar):
-        return
-    env[v] = val
 
 
 # ---------------------------------------------------------------------------------
@@ -242,6 +359,10 @@ class PlanBuilder:
     the dynamic path makes while tracing (merge targets, reshard sequences,
     psum-vs-scatter, fallback gathers) is made here, at plan time, from
     shardings and static shapes alone.
+
+    Reshards of operands and trailing partial-sum collectives are emitted as
+    *separate* steps (not folded into compute closures) so the optimizer
+    pipeline in ``plan_opt`` can CSE, eliminate, and bucket them.
     """
 
     def __init__(
@@ -251,14 +372,16 @@ class PlanBuilder:
         prop: PropagationResult,
         mesh: Mesh,
         stats: Optional[PlanStats] = None,
+        optimize: bool = True,
     ):
         self.jaxpr = jaxpr
         self.consts = tuple(consts)
         self.prop = prop
         self.mesh = mesh
         self.sh: Dict[excore.Var, Sharding] = {}
-        self.steps: List[Step] = []
+        self.steps: List[PlanStep] = []
         self.stats = stats if stats is not None else PlanStats()
+        self.optimize = optimize
 
     # -- sharding/shape bookkeeping ---------------------------------------------
     def sharding_of(self, v) -> Sharding:
@@ -279,18 +402,15 @@ class PlanBuilder:
             return int(np.asarray(v.val).dtype.itemsize)
         return int(np.dtype(v.aval.dtype).itemsize)
 
+    def _dtype(self, v) -> str:
+        if isinstance(v, excore.Literal):
+            return str(np.asarray(v.val).dtype)
+        return str(np.dtype(v.aval.dtype))
+
     def set_sharding(self, v, s: Sharding) -> None:
         if isinstance(v, core.DropVar):
             return
         self.sh[v] = s
-
-    def _reshard_prog(self, v, tgt: Sharding) -> Optional[ReshardProgram]:
-        cur = self.sharding_of(v)
-        if cur.dims_mapping == tgt.dims_mapping:
-            return None
-        prog = plan_reshard(cur, tgt, self._lshape(v), self._dbytes(v))
-        self._account(prog, self._lshape(v), self._dbytes(v))
-        return prog
 
     def _account(self, prog, lshape, dbytes) -> None:
         self.stats.add_program(prog)
@@ -315,6 +435,52 @@ class PlanBuilder:
                 pass
             setattr(self.stats, attr, getattr(self.stats, attr) + cost)
 
+    # -- step emission helpers ---------------------------------------------------
+    def emit(self, step: PlanStep) -> None:
+        self.steps.append(step)
+
+    def emit_reshard(self, src_key, out_key, prog: ReshardProgram,
+                     lshape: Tuple[int, ...], dbytes: int, dtype: str) -> None:
+        self.emit(PlanStep(
+            "reshard", (src_key,), (out_key,), _reshard_run(prog),
+            op="reshard", program=prog, lshape=lshape, dbytes=dbytes, dtype=dtype,
+        ))
+
+    def emit_collective(self, src_key, out_key, axes: Tuple[str, ...],
+                        reduce_op: str, lshape: Tuple[int, ...], dbytes: int,
+                        dtype: str) -> None:
+        self.emit(PlanStep(
+            "collective", (src_key,), (out_key,), _collective_run(axes, reduce_op),
+            op="all-reduce", axes=axes, reduce_op=reduce_op,
+            lshape=lshape, dbytes=dbytes, dtype=dtype,
+        ))
+
+    def reshard_operand(self, v, tgt: Sharding):
+        """Reshard operand ``v`` to ``tgt`` via a first-class reshard step.
+
+        Returns the env key holding the resharded value (``v`` itself when the
+        current sharding already matches).  Each call emits its own step — CSE
+        of duplicates is deliberately left to the optimizer pass so the
+        benchmark can report what it saved.
+        """
+        cur = self.sharding_of(v)
+        if cur.dims_mapping == tgt.dims_mapping:
+            return v
+        lshape, dbytes = self._lshape(v), self._dbytes(v)
+        prog = plan_reshard(cur, tgt, lshape, dbytes)
+        self._account(prog, lshape, dbytes)
+        proxy = ProxyVar(f"reshard:{cur}->{tgt}")
+        self.emit_reshard(v, proxy, prog, lshape, dbytes, self._dtype(v))
+        return proxy
+
+    def _emit_program(self, src_key, out_key, prog: Optional[ReshardProgram],
+                      lshape, dbytes, dtype) -> object:
+        """Emit a pre-planned program (already accounted) as a reshard step."""
+        if prog is None or prog.is_identity:
+            return src_key
+        self.emit_reshard(src_key, out_key, prog, lshape, dbytes, dtype)
+        return out_key
+
     # -- driver -------------------------------------------------------------------
     def build(self) -> PartitionPlan:
         for v, c in zip(self.jaxpr.constvars, self.consts):
@@ -331,8 +497,9 @@ class PlanBuilder:
             cur = self.sharding_of(v)
             want = self.prop.get(v) or replicated(self.mesh, len(self._gshape(v)))
             prog = None
-            if not isinstance(v, excore.Literal):
-                prog = self._reshard_prog(v, want)
+            if not isinstance(v, excore.Literal) and cur.dims_mapping != want.dims_mapping:
+                prog = plan_reshard(cur, want, self._lshape(v), self._dbytes(v))
+                self._account(prog, self._lshape(v), self._dbytes(v))
             out_programs.append(prog)
             out_shardings.append(want)
         self.stats.steps = len(self.steps)
@@ -340,9 +507,6 @@ class PlanBuilder:
             self.jaxpr, self.consts, self.mesh, self.steps,
             in_shardings, out_shardings, out_programs, self.stats,
         )
-
-    def emit(self, step: Step) -> None:
-        self.steps.append(step)
 
     # -- per-equation lowering ----------------------------------------------------
     def eqn(self, idx: int, eqn) -> None:
@@ -376,16 +540,15 @@ class PlanBuilder:
     def _annotate(self, eqn) -> None:
         iv, ov = eqn.invars[0], eqn.outvars[0]
         tgt = eqn.params["sharding"]
-        prog = self._reshard_prog(iv, tgt)
+        cur = self.sharding_of(iv)
         self.set_sharding(ov, tgt)
-        if prog is None:
-            self.emit(lambda env, iv=iv, ov=ov: _write(env, ov, _read(env, iv)))
-        else:
-            self.emit(
-                lambda env, iv=iv, ov=ov, prog=prog: _write(
-                    env, ov, execute_program(_read(env, iv), prog)
-                )
-            )
+        if cur.dims_mapping == tgt.dims_mapping:
+            self.emit(PlanStep("compute", (iv,), (ov,), _alias_run, op="annotate"))
+            return
+        lshape, dbytes = self._lshape(iv), self._dbytes(iv)
+        prog = plan_reshard(cur, tgt, lshape, dbytes)
+        self._account(prog, lshape, dbytes)
+        self.emit_reshard(iv, ov, prog, lshape, dbytes, self._dtype(iv))
 
     def _dot(self, eqn) -> None:
         import string
@@ -423,12 +586,42 @@ class PlanBuilder:
         pet = eqn.params.get("preferred_element_type")
         ov = eqn.outvars[0]
         self.set_sharding(ov, eplan.final_sharding)
+        odt = self._dtype(ov)
+        odb = self._dbytes(ov)
 
-        def step(env, lv=lv, rv=rv, ov=ov, eplan=eplan, pet=pet):
-            z, _ = execute_einsum(eplan, _read(env, lv), _read(env, rv), pet)
-            _write(env, ov, z)
+        # operand reshards as first-class steps (CSE candidates)
+        lk = self._emit_program(lv, ProxyVar("dot.lhs"), eplan.lhs_program,
+                                self._lshape(lv), self._dbytes(lv), self._dtype(lv))
+        rk = self._emit_program(rv, ProxyVar("dot.rhs"), eplan.rhs_program,
+                                self._lshape(rv), self._dbytes(rv), self._dtype(rv))
+        # local shape of the partial result at the psum point (post-scatter)
+        pre_out_sh = (
+            eplan.out_program.src if eplan.out_program is not None
+            else eplan.final_sharding
+        )
+        zshape = shard_shape(tuple(ov.aval.shape), pre_out_sh)
+        # einsum + scatter stay in one compute step; trailing AllReduce and the
+        # output reshard become their own steps (bucketing / CSE candidates)
+        exec_plan = dataclasses.replace(
+            eplan, lhs_program=None, rhs_program=None, reduce_axes=(),
+            out_program=None,
+        )
+        tail = bool(eplan.reduce_axes) or eplan.out_program is not None
+        mid = ProxyVar("dot.z") if tail else ov
 
-        self.emit(step)
+        def run(env, reads, writes, exec_plan=exec_plan, pet=pet):
+            z, _ = execute_einsum(exec_plan, _read(env, reads[0]), _read(env, reads[1]), pet)
+            _write(env, writes[0], z)
+
+        self.emit(PlanStep("compute", (lk, rk), (mid,), run, op="dot_general"))
+        cur_key = mid
+        if eplan.reduce_axes:
+            nxt = ov if eplan.out_program is None else ProxyVar("dot.psum")
+            self.emit_collective(cur_key, nxt, tuple(eplan.reduce_axes), "add",
+                                 zshape, odb, odt)
+            cur_key = nxt
+        if eplan.out_program is not None:
+            self.emit_reshard(cur_key, ov, eplan.out_program, zshape, odb, odt)
 
     def _elementwise(self, eqn) -> None:
         rank = eqn.outvars[0].aval.ndim
@@ -439,26 +632,23 @@ class PlanBuilder:
                 tgt = s if tgt is None else (merge_shardings(tgt, s) or tgt)
         if tgt is None:
             tgt = replicated(self.mesh, rank)
-        progs = [
-            self._reshard_prog(v, tgt) if len(self._gshape(v)) == rank else None
+        keys = tuple(
+            self.reshard_operand(v, tgt) if len(self._gshape(v)) == rank else v
             for v in eqn.invars
-        ]
+        )
         subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
-        prim, invars, outvars = eqn.primitive, list(eqn.invars), list(eqn.outvars)
+        prim, outvars = eqn.primitive, tuple(eqn.outvars)
         for ov in outvars:
             self.set_sharding(ov, tgt)
 
-        def step(env):
-            vals = [
-                execute_program(_read(env, v), p) if p is not None else _read(env, v)
-                for v, p in zip(invars, progs)
-            ]
+        def run(env, reads, writes, prim=prim, subfuns=subfuns, bind_params=bind_params):
+            vals = [_read(env, k) for k in reads]
             out = prim.bind(*subfuns, *vals, **bind_params)
             outs = out if prim.multiple_results else [out]
-            for ov, o in zip(outvars, outs):
-                _write(env, ov, o)
+            for w, o in zip(writes, outs):
+                _write(env, w, o)
 
-        self.emit(step)
+        self.emit(PlanStep("compute", keys, outvars, run, op=prim.name))
 
     def _reduce(self, eqn) -> None:
         iv, ov = eqn.invars[0], eqn.outvars[0]
@@ -470,33 +660,27 @@ class PlanBuilder:
         kept = [i for i in range(sh.rank) if i not in axes]
         osh = Sharding(self.mesh, tuple(sh.dims_mapping[i] for i in kept))
         name = prim.name
-        gather_prog = None
+        key = iv
         if psum_axes and name not in ("reduce_sum", "reduce_max", "reduce_min"):
             # prod/and/or: gather the reduced axes first, reduce locally
-            gather_prog = self._reshard_prog(iv, replicated(self.mesh, sh.rank))
+            key = self.reshard_operand(iv, replicated(self.mesh, sh.rank))
+            psum_axes = ()
+            osh = replicated(self.mesh, len(kept))
         elif psum_axes:
             self.stats.count("all-reduce", len(psum_axes))
-        self.set_sharding(ov, replicated(self.mesh, len(kept)) if gather_prog is not None else osh)
-        if gather_prog is not None:
+        self.set_sharding(ov, osh)
+        mid = ProxyVar("reduce.local") if psum_axes else ov
 
-            def step(env, iv=iv, ov=ov, prog=gather_prog):
-                val = execute_program(_read(env, iv), prog)
-                _write(env, ov, prim.bind(*subfuns, val, **bind_params))
+        def run(env, reads, writes, prim=prim, subfuns=subfuns, bind_params=bind_params):
+            _write(env, writes[0], prim.bind(*subfuns, _read(env, reads[0]), **bind_params))
 
-        else:
-
-            def step(env, iv=iv, ov=ov, psum_axes=psum_axes, name=name):
-                out = prim.bind(*subfuns, _read(env, iv), **bind_params)
-                if psum_axes:
-                    if name == "reduce_sum":
-                        out = lax.psum(out, psum_axes)
-                    elif name == "reduce_max":
-                        out = lax.pmax(out, psum_axes)
-                    else:
-                        out = lax.pmin(out, psum_axes)
-                _write(env, ov, out)
-
-        self.emit(step)
+        self.emit(PlanStep("compute", (key,), (mid,), run, op=name))
+        if psum_axes:
+            reduce_op = {"reduce_sum": "add", "reduce_max": "max", "reduce_min": "min"}[name]
+            self.emit_collective(
+                mid, ov, psum_axes, reduce_op,
+                shard_shape(tuple(ov.aval.shape), osh), self._dbytes(ov), self._dtype(ov),
+            )
 
     def _transpose(self, eqn) -> None:
         iv, ov = eqn.invars[0], eqn.outvars[0]
@@ -504,11 +688,11 @@ class PlanBuilder:
         sh = self.sharding_of(iv)
         osh = Sharding(self.mesh, tuple(sh.dims_mapping[i] for i in perm))
         self.set_sharding(ov, osh)
-        self.emit(
-            lambda env, iv=iv, ov=ov, perm=perm: _write(
-                env, ov, lax.transpose(_read(env, iv), perm)
-            )
-        )
+
+        def run(env, reads, writes, perm=perm):
+            _write(env, writes[0], lax.transpose(_read(env, reads[0]), perm))
+
+        self.emit(PlanStep("compute", (iv,), (ov,), run, op="transpose"))
 
     def _broadcast(self, eqn) -> None:
         iv, ov = eqn.invars[0], eqn.outvars[0]
@@ -524,11 +708,12 @@ class PlanBuilder:
         osh = Sharding(self.mesh, tuple(dm))
         local_shape = shard_shape(tuple(gshape), osh)
         self.set_sharding(ov, osh)
-        self.emit(
-            lambda env, iv=iv, ov=ov, local_shape=local_shape, bcast=bcast: _write(
-                env, ov, lax.broadcast_in_dim(_read(env, iv), local_shape, bcast)
-            )
-        )
+
+        def run(env, reads, writes, local_shape=local_shape, bcast=bcast):
+            _write(env, writes[0],
+                   lax.broadcast_in_dim(_read(env, reads[0]), local_shape, bcast))
+
+        self.emit(PlanStep("compute", (iv,), (ov,), run, op="broadcast_in_dim"))
 
     def _reshape(self, eqn) -> None:
         iv, ov = eqn.invars[0], eqn.outvars[0]
@@ -540,14 +725,14 @@ class PlanBuilder:
             local = shard_shape(gshape, want)
             if int(np.prod(self._lshape(iv) or (1,))) == int(np.prod(local or (1,))):
                 self.set_sharding(ov, want)
-                self.emit(
-                    lambda env, iv=iv, ov=ov, local=local, dims=dims: _write(
-                        env, ov, lax.reshape(_read(env, iv), local, dims)
-                    )
-                )
+
+                def run(env, reads, writes, local=local, dims=dims):
+                    _write(env, writes[0], lax.reshape(_read(env, reads[0]), local, dims))
+
+                self.emit(PlanStep("compute", (iv,), (ov,), run, op="reshape"))
                 return
         # fallback: gather, reshape globally, re-slice
-        gather = self._reshard_prog(iv, replicated(self.mesh, sh.rank))
+        key = self.reshard_operand(iv, replicated(self.mesh, sh.rank))
         osh = want or replicated(self.mesh, len(gshape))
         slice_prog = None
         if osh.dims_mapping != replicated(self.mesh, len(gshape)).dims_mapping:
@@ -556,24 +741,20 @@ class PlanBuilder:
             )
             self.stats.add_program(slice_prog)
         self.set_sharding(ov, osh)
+        mid = ProxyVar("reshape.global") if slice_prog is not None else ov
 
-        def step(env, iv=iv, ov=ov, gather=gather, gshape=gshape, dims=dims,
-                 slice_prog=slice_prog):
-            val = _read(env, iv)
-            if gather is not None:
-                val = execute_program(val, gather)
-            out = lax.reshape(val, gshape, dims)
-            if slice_prog is not None:
-                out = execute_program(out, slice_prog)
-            _write(env, ov, out)
+        def run(env, reads, writes, gshape=gshape, dims=dims):
+            _write(env, writes[0], lax.reshape(_read(env, reads[0]), gshape, dims))
 
-        self.emit(step)
+        self.emit(PlanStep("compute", (key,), (mid,), run, op="reshape"))
+        if slice_prog is not None:
+            self.emit_reshard(mid, ov, slice_prog, gshape, self._dbytes(iv), self._dtype(iv))
 
     def _conv(self, eqn) -> None:
         lv, rv = eqn.invars[0], eqn.invars[1]
         ov = eqn.outvars[0]
         ls, rs = self.sharding_of(lv), self.sharding_of(rv)
-        rhs_gather = self._reshard_prog(rv, replicated(self.mesh, rs.rank))
+        rk = self.reshard_operand(rv, replicated(self.mesh, rs.rank))
         dn = eqn.params["dimension_numbers"]
         assert dn.lhs_spec[0] == 0 and dn.lhs_spec[1] == 1, "NC*spatial layout only"
         strides = eqn.params["window_strides"]
@@ -585,48 +766,55 @@ class PlanBuilder:
             osh = Sharding(
                 self.mesh, (ls.dims_mapping[0], ()) + ((),) * (ls.rank - 2)
             )
-            self.stats.count("all-reduce")
+            # per-axis, matching _reduce/_dot (and the fusion pass's
+            # len(group)·len(axes) decrement on bucketing)
+            self.stats.count("all-reduce", len(ax))
             self.set_sharding(ov, osh)
+            mid = ProxyVar("conv.partial")
 
-            def step(env, lv=lv, rv=rv, ov=ov, ax=ax, n=n):
-                lval, rval = _read(env, lv), _read(env, rv)
-                if rhs_gather is not None:
-                    rval = execute_program(rval, rhs_gather)
+            def run(env, reads, writes, ax=ax, n=n, strides=strides, padding=padding):
+                lval, rval = _read(env, reads[0]), _read(env, reads[1])
                 idx = lax.axis_index(ax[0])
                 size = rval.shape[1] // n
                 rv_local = lax.dynamic_slice_in_dim(rval, idx * size, size, axis=1)
                 out = lax.conv_general_dilated(
                     lval, rv_local, window_strides=strides, padding=padding
                 )
-                _write(env, ov, lax.psum(out, ax))
+                _write(env, writes[0], out)
 
-            self.emit(step)
+            self.emit(PlanStep("compute", (lv, rk), (mid,), run, op="conv"))
+            self.emit_collective(
+                mid, ov, ax, "add",
+                shard_shape(tuple(ov.aval.shape), osh), self._dbytes(ov), self._dtype(ov),
+            )
             return
         sharded = [
             (d, ls.dims_mapping[d][0]) for d in range(2, ls.rank) if ls.dims_mapping[d]
         ]
         self.set_sharding(ov, Sharding(self.mesh, tuple(ls.dims_mapping)))
 
-        def step(env, lv=lv, rv=rv, ov=ov, sharded=sharded):
+        def run(env, reads, writes, sharded=sharded, strides=strides, padding=padding):
             from .halo import sharded_conv_nd
 
-            lval, rval = _read(env, lv), _read(env, rv)
-            if rhs_gather is not None:
-                rval = execute_program(rval, rhs_gather)
+            lval, rval = _read(env, reads[0]), _read(env, reads[1])
             _write(
-                env, ov,
+                env, writes[0],
                 sharded_conv_nd(
                     lval, rval, sharded=sharded,
                     window_strides=strides, padding=padding,
                 ),
             )
 
-        self.emit(step)
+        self.emit(PlanStep("compute", (lv, rk), (ov,), run, op="conv"))
 
     def _iota(self, eqn) -> None:
         prim, params, ov = eqn.primitive, eqn.params, eqn.outvars[0]
         self.set_sharding(ov, replicated(self.mesh, len(params["shape"])))
-        self.emit(lambda env, ov=ov: _write(env, ov, prim.bind(**params)))
+
+        def run(env, reads, writes, prim=prim, params=params):
+            _write(env, writes[0], prim.bind(**params))
+
+        self.emit(PlanStep("compute", (), (ov,), run, op="iota"))
 
     # -- calls ---------------------------------------------------------------------
     def _inner_result(self, idx: int, closed) -> PropagationResult:
@@ -637,38 +825,42 @@ class PlanBuilder:
             res = p.result()
         return res
 
+    def _optimize_inner(self, plan: "PartitionPlan") -> "PartitionPlan":
+        if not self.optimize:
+            return plan
+        from .plan_opt import optimize_plan
+
+        return optimize_plan(plan)
+
     def _pjit(self, idx: int, eqn) -> None:
         sub = eqn.params["jaxpr"]
         inner_res = self._inner_result(idx, sub)
         # seed inner input shardings from ours where propagation left them open
         env = dict(inner_res.env)
-        boundary: List[Optional[ReshardProgram]] = []
+        keys: List[object] = []
         for outer_v, iv in zip(eqn.invars, sub.jaxpr.invars):
             declared = inner_res.get(iv)
             if declared is None:
                 env[iv] = self.sharding_of(outer_v)
-                boundary.append(None)
+                keys.append(outer_v)
             else:
-                boundary.append(self._reshard_prog(outer_v, declared))
+                keys.append(self.reshard_operand(outer_v, declared))
         inner_res = PropagationResult(inner_res.jaxpr, self.mesh, env, inner_res.sub)
         builder = PlanBuilder(
-            sub.jaxpr, sub.consts, inner_res, self.mesh, stats=self.stats
+            sub.jaxpr, sub.consts, inner_res, self.mesh, stats=self.stats,
+            optimize=self.optimize,
         )
-        inner_plan = builder.build()
+        inner_plan = self._optimize_inner(builder.build())
         for ov, osh in zip(eqn.outvars, inner_plan.out_shardings):
             self.set_sharding(ov, osh)
-        invars, outvars = list(eqn.invars), list(eqn.outvars)
+        outvars = tuple(eqn.outvars)
 
-        def step(env, invars=invars, outvars=outvars, plan=inner_plan, boundary=boundary):
-            vals = [
-                execute_program(_read(env, v), p) if p is not None else _read(env, v)
-                for v, p in zip(invars, boundary)
-            ]
-            outs = plan.execute(*vals)
-            for ov, o in zip(outvars, outs):
-                _write(env, ov, o)
+        def run(env, reads, writes, plan=inner_plan):
+            outs = plan.execute(*[_read(env, k) for k in reads])
+            for w, o in zip(writes, outs):
+                _write(env, w, o)
 
-        self.emit(step)
+        self.emit(PlanStep("compute", tuple(keys), outvars, run, op="pjit"))
 
     def _scan(self, idx: int, eqn) -> None:
         p = eqn.params
@@ -684,7 +876,7 @@ class PlanBuilder:
 
         # body input shardings: propagation's answer, else derived from ours
         env = dict(inner_res.env)
-        boundary: List[Optional[ReshardProgram]] = []
+        keys: List[object] = []
         for i, (outer_v, bv) in enumerate(zip(eqn.invars, body.invars)):
             declared = inner_res.get(bv)
             ours = self.sharding_of(outer_v)
@@ -692,7 +884,7 @@ class PlanBuilder:
                 ours = drop0(ours) or replicated(self.mesh, max(ours.rank - 1, 0))
             if declared is None:
                 env[bv] = ours
-                boundary.append(None)
+                keys.append(outer_v)
             else:
                 # reshard the outer operand to the body's declared sharding
                 # (xs get the leading scan dim re-attached)
@@ -701,10 +893,13 @@ class PlanBuilder:
                     tgt = Sharding(self.mesh, ((),) + declared.dims_mapping)
                 elif i >= nc:
                     tgt = declared
-                boundary.append(self._reshard_prog(outer_v, tgt))
+                keys.append(self.reshard_operand(outer_v, tgt))
         inner_res = PropagationResult(inner_res.jaxpr, self.mesh, env, inner_res.sub)
-        builder = PlanBuilder(body, closed.consts, inner_res, self.mesh, stats=self.stats)
-        inner_plan = builder.build()
+        builder = PlanBuilder(
+            body, closed.consts, inner_res, self.mesh, stats=self.stats,
+            optimize=self.optimize,
+        )
+        inner_plan = self._optimize_inner(builder.build())
         # carry consistency: carry-out must leave the body in the carry-in
         # sharding, or iteration 2 would misread it.  PlanBuilder.build already
         # reshards body outputs to the body's *propagated* shardings; propagate's
@@ -724,8 +919,7 @@ class PlanBuilder:
             else:
                 carry_fix.append(None)
         # outer output shardings: index-based (ys get a leading unsharded dim)
-        outvars = list(eqn.outvars)
-        out_shardings: List[Sharding] = []
+        outvars = tuple(eqn.outvars)
         for i, ov in enumerate(outvars):
             if i < nk:
                 osh = inner_plan.in_shardings[nc + i]
@@ -733,16 +927,11 @@ class PlanBuilder:
                 ysh = inner_plan.out_shardings[i]
                 osh = Sharding(self.mesh, ((),) + ysh.dims_mapping)
             self.set_sharding(ov, osh)
-            out_shardings.append(osh)
-        invars = list(eqn.invars)
         length = p.get("length")
 
-        def step(env, invars=invars, outvars=outvars, plan=inner_plan,
-                 boundary=boundary, carry_fix=carry_fix, nc=nc, nk=nk, length=length):
-            vals = [
-                execute_program(_read(env, v), b) if b is not None else _read(env, v)
-                for v, b in zip(invars, boundary)
-            ]
+        def run(env, reads, writes, plan=inner_plan, carry_fix=carry_fix,
+                nc=nc, nk=nk, length=length):
+            vals = [_read(env, k) for k in reads]
             consts = vals[:nc]
             init = tuple(vals[nc : nc + nk])
             xs = tuple(vals[nc + nk :])
@@ -756,10 +945,10 @@ class PlanBuilder:
                 return new_carry, tuple(outs[nk:])
 
             carry, ys = lax.scan(body_fn, init, xs, length=length)
-            for ov, o in zip(outvars, list(carry) + list(ys)):
-                _write(env, ov, o)
+            for w, o in zip(writes, list(carry) + list(ys)):
+                _write(env, w, o)
 
-        self.emit(step)
+        self.emit(PlanStep("compute", tuple(keys), outvars, run, op="scan"))
 
     # -- fallback --------------------------------------------------------------------
     def _fallback(self, eqn) -> None:
@@ -772,14 +961,15 @@ class PlanBuilder:
         if keep is not None:
             kept_sh, params = keep
             rank = kept_sh.rank
-            progs = [
-                self._reshard_prog(v, kept_sh)
+            keys = tuple(
+                self.reshard_operand(v, kept_sh)
                 if len(self._gshape(v)) == rank
-                else self._reshard_prog(v, replicated(self.mesh, len(self._gshape(v))))
+                else self.reshard_operand(v, replicated(self.mesh, len(self._gshape(v))))
                 for v in invars
-            ]
+            )
             subfuns, bind_params = prim.get_bind_params(params)
-            want_progs: List[Optional[ReshardProgram]] = []
+            mids: List[object] = []
+            post: List[Tuple[object, object, ReshardProgram, Tuple[int, ...], int, str]] = []
             for ov in outvars:
                 osh = Sharding(
                     self.mesh,
@@ -792,60 +982,68 @@ class PlanBuilder:
                 self.set_sharding(ov, osh)
                 if osh.dims_mapping != want.dims_mapping:
                     gshape = tuple(ov.aval.shape)
+                    lshape = shard_shape(gshape, osh)
                     prog = plan_reshard(
-                        osh, want, shard_shape(gshape, osh),
-                        int(np.dtype(ov.aval.dtype).itemsize),
+                        osh, want, lshape, int(np.dtype(ov.aval.dtype).itemsize),
                     )
                     self.stats.add_program(prog)
-                    want_progs.append(prog)
                     self.set_sharding(ov, want)
+                    mid = ProxyVar("fallback.out")
+                    mids.append(mid)
+                    post.append((mid, ov, prog, lshape,
+                                 int(np.dtype(ov.aval.dtype).itemsize),
+                                 str(np.dtype(ov.aval.dtype))))
                 else:
-                    want_progs.append(None)
+                    mids.append(ov)
 
-            def step(env):
-                vals = [
-                    execute_program(_read(env, v), pr) if pr is not None else _read(env, v)
-                    for v, pr in zip(invars, progs)
-                ]
+            def run(env, reads, writes, prim=prim, subfuns=subfuns, bind_params=bind_params):
+                vals = [_read(env, k) for k in reads]
                 out = prim.bind(*subfuns, *vals, **bind_params)
                 outs = out if prim.multiple_results else [out]
-                for ov, o, pr in zip(outvars, outs, want_progs):
-                    _write(env, ov, execute_program(o, pr) if pr is not None else o)
+                for w, o in zip(writes, outs):
+                    _write(env, w, o)
 
-            self.emit(step)
+            self.emit(PlanStep("compute", keys, tuple(mids), run, op=prim.name))
+            for mid, ov, prog, lshape, db, dt in post:
+                self.emit_reshard(mid, ov, prog, lshape, db, dt)
             return
         # unknown op: full gather, global op, re-slice to the propagated sharding
-        progs = [
-            self._reshard_prog(v, replicated(self.mesh, len(self._gshape(v))))
+        keys = tuple(
+            self.reshard_operand(v, replicated(self.mesh, len(self._gshape(v))))
             for v in invars
-        ]
+        )
         subfuns, bind_params = prim.get_bind_params(eqn.params)
-        want_progs = []
+        mids = []
+        post = []
         for ov in outvars:
             rank = getattr(ov.aval, "ndim", 0)
             want = self.prop.get(ov) or replicated(self.mesh, rank)
             self.set_sharding(ov, want)
             if want.is_fully_replicated():
-                want_progs.append(None)
+                mids.append(ov)
             else:
+                gshape = tuple(ov.aval.shape)
                 prog = plan_reshard(
-                    replicated(self.mesh, rank), want, tuple(ov.aval.shape),
+                    replicated(self.mesh, rank), want, gshape,
                     int(np.dtype(ov.aval.dtype).itemsize),
                 )
                 self.stats.add_program(prog)
-                want_progs.append(prog)
+                mid = ProxyVar("fallback.out")
+                mids.append(mid)
+                post.append((mid, ov, prog, gshape,
+                             int(np.dtype(ov.aval.dtype).itemsize),
+                             str(np.dtype(ov.aval.dtype))))
 
-        def step(env):
-            vals = [
-                execute_program(_read(env, v), pr) if pr is not None else _read(env, v)
-                for v, pr in zip(invars, progs)
-            ]
+        def run(env, reads, writes, prim=prim, subfuns=subfuns, bind_params=bind_params):
+            vals = [_read(env, k) for k in reads]
             out = prim.bind(*subfuns, *vals, **bind_params)
             outs = out if prim.multiple_results else [out]
-            for ov, o, pr in zip(outvars, outs, want_progs):
-                _write(env, ov, execute_program(o, pr) if pr is not None else o)
+            for w, o in zip(writes, outs):
+                _write(env, w, o)
 
-        self.emit(step)
+        self.emit(PlanStep("compute", keys, tuple(mids), run, op=prim.name))
+        for mid, ov, prog, lshape, db, dt in post:
+            self.emit_reshard(mid, ov, prog, lshape, db, dt)
 
 
 # ---------------------------------------------------------------------------------
@@ -853,7 +1051,24 @@ class PlanBuilder:
 # ---------------------------------------------------------------------------------
 
 
-def compile_plan(closed: excore.ClosedJaxpr, prop: PropagationResult, mesh: Mesh) -> PartitionPlan:
-    """Lower a propagated (closed) jaxpr into an executable PartitionPlan."""
-    builder = PlanBuilder(closed.jaxpr, closed.consts, prop, mesh)
-    return builder.build()
+def compile_plan(
+    closed: excore.ClosedJaxpr,
+    prop: PropagationResult,
+    mesh: Mesh,
+    optimize: bool = True,
+) -> PartitionPlan:
+    """Lower a propagated (closed) jaxpr into an executable PartitionPlan.
+
+    With ``optimize=True`` (the default) the lowered plan is run through the
+    whole-plan optimizer pipeline (``plan_opt.optimize_plan``): reshard CSE,
+    dead-reshard elimination, and collective fusion.  The passes are
+    semantics-preserving; ``optimize=False`` keeps the raw per-equation plan
+    (used by benchmarks to measure what the pipeline saves).
+    """
+    builder = PlanBuilder(closed.jaxpr, closed.consts, prop, mesh, optimize=optimize)
+    plan = builder.build()
+    if optimize:
+        from .plan_opt import optimize_plan
+
+        plan = optimize_plan(plan)
+    return plan

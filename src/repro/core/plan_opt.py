@@ -1,0 +1,540 @@
+"""Whole-plan collective optimizer: passes over a lowered ``PartitionPlan``.
+
+PR 1 made each reshard *locally* cost-optimal (``collective_planner``); this
+module is the layer that optimizes the *whole* partitioned program before it
+is jitted — the plan-level analogue of GSPMD's CollectivePermute/AllToAll
+compiler optimizations and of the grouped/bucketed collectives production
+partitioners emit.  ``compile_plan`` runs :func:`optimize_plan` by default.
+
+Passes (in pipeline order):
+
+1. **reshard CSE** (:func:`reshard_cse`) — the plan builder emits one reshard
+   step per consumer; this pass walks the value-flow graph (every step
+   declares ``reads``/``writes``) and memoizes identical
+   ``(source value, target dims_mapping)`` reshards, rewiring later consumers
+   to the first result.  Duplicates whose result is a jaxpr output become
+   free aliases.
+2. **dead-reshard elimination** (:func:`dead_reshard_elim`) — drops reshard
+   steps whose result no step (and no jaxpr output) ever reads, iterating
+   backwards so chains of dead reshards cascade.
+3. **output-alias sinking** (:func:`sink_output_aliases`) — free aliases read
+   only by the output epilogue move to the plan tail so they stop pinning
+   fusion buckets (pure reordering).
+4. **collective fusion / bucketing** (:func:`fuse_collectives`) — coalesces
+   same-key collectives on independent values into a single launch over a
+   flattened, concatenated buffer: trailing AllReduces (psum/pmax/pmin split
+   out of einsum/reduce lowering) and single-AllGather reshard steps.  The
+   bucket size is capped by the roofline-priced threshold
+   (:func:`repro.analysis.roofline.fusion_bucket_bytes`): fusing trades one
+   collective launch per member for an extra HBM round-trip of the bucket, so
+   it only pays while the bucket is small enough that launch overhead
+   dominates.  Members sink *down* to the last member's position, which is
+   legal exactly when no intervening step reads an earlier member's result —
+   enforced during the scan.
+
+Pass-ordering invariants
+------------------------
+* CSE must run **before** DCE: rewiring consumers is what orphans duplicate
+  reshards (and annotate-created reshards of unused values) for DCE to drop.
+* Alias sinking must run **after** CSE (which creates the output aliases) and
+  **before** fusion (whose bucketing it unblocks).
+* Fusion must run **last**: it consumes the final dataflow; CSE/DCE change
+  step adjacency and read-sets, and no other pass understands ``fused`` steps.
+* Every pass must preserve: SSA (each env key written exactly once), write-
+  before-read order, the set of jaxpr-output writes, and ``plan.stats``
+  consistency (use ``PlanStats.remove_program`` when deleting a reshard).
+* Passes mutate ``plan.steps`` in place so inner plans captured by
+  pjit/scan closures see the optimized list.
+
+Every pass reports its savings; :func:`optimize_plan` attaches an
+:class:`OptReport` (bytes and collective-launch counts before/after, per-pass
+detail) to the plan for the benchmark layer (``BENCH_plan.json``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.extend import core as excore
+
+from repro.analysis.roofline import (
+    COLLECTIVE_LAUNCH_S, collective_wire_bytes, fusion_bucket_bytes,
+)
+
+from .plan import PartitionPlan, PlanStep, _alias_run, _read, _write
+
+__all__ = [
+    "OptReport", "PassReport", "optimize_plan",
+    "reshard_cse", "dead_reshard_elim", "sink_output_aliases",
+    "fuse_collectives",
+]
+
+
+# ---------------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PassReport:
+    name: str
+    removed_steps: int = 0
+    wire_bytes_saved: float = 0.0
+    fused_buckets: int = 0
+    fused_members: int = 0
+    launch_s_saved: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class OptReport:
+    """Before/after accounting for one run of the pass pipeline."""
+
+    passes: List[PassReport]
+    steps_before: int
+    steps_after: int
+    collectives_before: int  # collective launches (program steps + psums)
+    collectives_after: int
+    wire_bytes_before: float
+    wire_bytes_after: float
+
+    @property
+    def fused_buckets(self) -> int:
+        return sum(p.fused_buckets for p in self.passes)
+
+    @property
+    def launch_s_saved(self) -> float:
+        return sum(p.launch_s_saved for p in self.passes)
+
+    def as_dict(self) -> Dict:
+        return {
+            "passes": [p.as_dict() for p in self.passes],
+            "steps_before": self.steps_before,
+            "steps_after": self.steps_after,
+            "collectives_before": self.collectives_before,
+            "collectives_after": self.collectives_after,
+            "wire_bytes_before": self.wire_bytes_before,
+            "wire_bytes_after": self.wire_bytes_after,
+            "fused_buckets": self.fused_buckets,
+            "launch_s_saved": self.launch_s_saved,
+        }
+
+
+def count_collective_launches(steps: List[PlanStep], out_programs=()) -> int:
+    """Collective launches a plan will issue (wire collectives only;
+    DynamicSlice is local addressing, not a launch).  ``out_programs`` covers
+    the output epilogue, which the passes never touch but the before/after
+    report should still scope identically to the byte metric.
+
+    A psum over stacked axes is ONE launch (``lax.psum`` over the axes tuple
+    reduces over the product group in one collective); note this differs from
+    ``PlanStats.collectives``, which counts per-axis collective *ops* — the
+    legacy reporting convention shared with the dynamic partitioner."""
+    n = 0
+    for s in steps:
+        if s.kind == "reshard" and s.program is not None:
+            n += sum(1 for ps in s.program.steps if ps.op != "dynamic_slice")
+        elif s.kind in ("collective", "fused"):
+            n += 1
+    for prog in out_programs:
+        if prog is not None:
+            n += sum(1 for ps in prog.steps if ps.op != "dynamic_slice")
+    return n
+
+
+# ---------------------------------------------------------------------------------
+# pass 1: reshard CSE
+# ---------------------------------------------------------------------------------
+
+
+def _roots(plan: PartitionPlan) -> set:
+    return {v for v in plan.jaxpr.outvars if not isinstance(v, excore.Literal)}
+
+
+def reshard_cse(plan: PartitionPlan) -> PassReport:
+    """Memoize identical (value, target-sharding) reshards across consumers.
+
+    The builder emits one reshard step per consuming op; two consumers of the
+    same value needing the same target sharding therefore duplicate the full
+    collective sequence.  This pass keeps the first occurrence and rewires
+    later readers to its result.  A duplicate whose result is a jaxpr output
+    is replaced by a free alias (the env write must still happen).
+    """
+    rep = PassReport("reshard-cse")
+    roots = _roots(plan)
+    seen: Dict[Tuple[int, tuple], object] = {}
+    rewrite: Dict[int, object] = {}
+    keepalive: List[object] = []  # hold replaced keys so id()s stay unique
+    out: List[PlanStep] = []
+    for step in plan.steps:
+        if rewrite:
+            step.reads = tuple(rewrite.get(id(k), k) for k in step.reads)
+        if step.kind == "reshard" and step.program is not None:
+            key = (id(step.reads[0]), step.program.dst.dims_mapping)
+            prior = seen.get(key)
+            if prior is not None:
+                rep.removed_steps += 1
+                rep.wire_bytes_saved += step.program.cost_bytes
+                rep.launch_s_saved += COLLECTIVE_LAUNCH_S * sum(
+                    1 for ps in step.program.steps if ps.op != "dynamic_slice"
+                )
+                plan.stats.remove_program(step.program)
+                w = step.writes[0]
+                if w in roots:
+                    out.append(PlanStep("compute", (prior,), (w,), _alias_run, op="alias"))
+                else:
+                    rewrite[id(w)] = prior
+                    keepalive.append(w)
+                continue
+            seen[key] = step.writes[0]
+        out.append(step)
+    plan.steps[:] = out
+    del keepalive
+    return rep
+
+
+# ---------------------------------------------------------------------------------
+# pass 2: dead-reshard elimination
+# ---------------------------------------------------------------------------------
+
+
+def dead_reshard_elim(plan: PartitionPlan) -> PassReport:
+    """Drop reshard steps whose result nothing reads.
+
+    Arises from user annotations on values the program never consumes and
+    from CSE orphaning duplicates.  Iterates backwards so a chain of reshards
+    feeding only a dead reshard dies with it.  No-op reshards (source already
+    matching the target) are never emitted by the builder, so this pass only
+    sees real collectives.
+    """
+    rep = PassReport("dead-reshard-elim")
+    roots = _roots(plan)
+    nreads: Dict[int, int] = {}
+    for step in plan.steps:
+        for k in step.reads:
+            nreads[id(k)] = nreads.get(id(k), 0) + 1
+    keep = [True] * len(plan.steps)
+    for i in range(len(plan.steps) - 1, -1, -1):
+        step = plan.steps[i]
+        if step.kind != "reshard" or step.program is None:
+            continue
+        w = step.writes[0]
+        if w in roots or nreads.get(id(w), 0) > 0:
+            continue
+        keep[i] = False
+        rep.removed_steps += 1
+        rep.wire_bytes_saved += step.program.cost_bytes
+        rep.launch_s_saved += COLLECTIVE_LAUNCH_S * sum(
+            1 for ps in step.program.steps if ps.op != "dynamic_slice"
+        )
+        plan.stats.remove_program(step.program)
+        for k in step.reads:
+            nreads[id(k)] -= 1
+    plan.steps[:] = [s for s, f in zip(plan.steps, keep) if f]
+    return rep
+
+
+# ---------------------------------------------------------------------------------
+# pass 3: output-alias sinking
+# ---------------------------------------------------------------------------------
+
+
+def sink_output_aliases(plan: PartitionPlan) -> PassReport:
+    """Move free alias steps whose result no *step* reads to the plan tail.
+
+    CSE leaves aliases for duplicate reshards that feed jaxpr outputs, and
+    annotate ops with matching shardings lower to aliases; when such an alias
+    immediately follows a collective it *reads*, it pins that collective's
+    bucket (nothing may sink past a reader).  An alias read only by the output
+    epilogue can run arbitrarily late, so sinking it to the end re-exposes the
+    adjacency the fusion pass needs.  Pure reordering — zero collectives or
+    bytes change.
+    """
+    rep = PassReport("alias-sink")
+    read_ids = {id(k) for s in plan.steps for k in s.reads}
+    body: List[PlanStep] = []
+    tail: List[PlanStep] = []
+    for s in plan.steps:
+        if (s.kind == "compute" and s.run is _alias_run
+                and id(s.writes[0]) not in read_ids):
+            tail.append(s)
+        else:
+            body.append(s)
+    if tail:
+        plan.steps[:] = body + tail
+    return rep
+
+
+# ---------------------------------------------------------------------------------
+# pass 4: collective fusion / bucketing
+# ---------------------------------------------------------------------------------
+
+
+def _fused_psum_run(axes, reduce_op, shapes):
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+
+    def run(env, reads, writes, axes=axes, reduce_op=reduce_op,
+            shapes=shapes, sizes=sizes):
+        flats = [jnp.ravel(_read(env, k)) for k in reads]
+        buf = jnp.concatenate(flats) if len(flats) > 1 else flats[0]
+        if reduce_op == "add":
+            buf = lax.psum(buf, axes)
+        elif reduce_op == "max":
+            buf = lax.pmax(buf, axes)
+        else:
+            buf = lax.pmin(buf, axes)
+        off = 0
+        for w, shp, n in zip(writes, shapes, sizes):
+            _write(env, w, jnp.reshape(buf[off:off + n], shp))
+            off += n
+
+    return run
+
+
+def _fused_gather_run(axis, n, specs):
+    # specs: per member (local shape, gather dim)
+    sizes = [int(np.prod(s)) if s else 1 for s, _ in specs]
+
+    def run(env, reads, writes, axis=axis, n=n, specs=specs, sizes=sizes):
+        flats = [jnp.ravel(_read(env, k)) for k in reads]
+        buf = jnp.concatenate(flats) if len(flats) > 1 else flats[0]
+        g = lax.all_gather(buf, axis, axis=0, tiled=True)  # (n * total,)
+        per = jnp.reshape(g, (n, -1))
+        off = 0
+        for w, (shp, d), m in zip(writes, specs, sizes):
+            seg = jnp.reshape(per[:, off:off + m], (n,) + tuple(shp))
+            _write(env, w, jnp.concatenate([seg[i] for i in range(n)], axis=d))
+            off += m
+
+    return run
+
+
+def _fuse_key(step: PlanStep, mesh) -> Optional[tuple]:
+    """Bucket key, or None when the step is not fusable."""
+    if step.kind == "collective":
+        return ("psum", step.axes, step.reduce_op, step.dtype)
+    if step.kind == "reshard" and step.program is not None:
+        ps = step.program.steps
+        if len(ps) == 1 and ps[0].op == "all_gather":
+            return ("gather", ps[0].axis, step.dtype)
+    return None
+
+
+def fuse_collectives(plan: PartitionPlan, bucket_bytes: Optional[float] = None) -> PassReport:
+    """Bucket independent same-key collectives into single fused launches.
+
+    Two legal placements exist for a bucket's single fused launch:
+
+    * **hoist** — at the *first* member's position, legal iff every member's
+      inputs are produced before that point (member writes only move earlier,
+      which no SSA reader can observe);
+    * **sink** — at the *last* member's position, legal iff no intervening
+      step reads an earlier member's result.
+
+    The scan tracks both: a bucket stays ``hoistable`` while every joined
+    member's reads precede the first member; a reader of a member's result
+    *pins* a hoistable bucket (further members must keep it hoistable) and
+    finalizes a non-hoistable one.  The bucket is capped at ``bucket_bytes``
+    (default: the roofline threshold where the extra HBM round-trip of
+    concatenating the bucket stops paying for the saved launches).
+    """
+    rep = PassReport("collective-fusion")
+    cap = bucket_bytes if bucket_bytes is not None else fusion_bucket_bytes()
+    mesh = plan.mesh
+    steps = plan.steps
+    # open buckets: key -> dict(members=[index], bytes, hoistable, pinned)
+    open_buckets: Dict[tuple, Dict] = {}
+    fused_at: Dict[int, List[int]] = {}  # anchor index -> member indices
+    pos_written: Dict[int, int] = {}  # id(env key) -> producing step index
+    # Fused members *move*: their writes land at the bucket anchor, not their
+    # original index.  The hoist-legality check must therefore use a value's
+    # EFFECTIVE position: unknown while its producer's bucket is still open
+    # (the anchor may yet sink), the finalized anchor once decided.
+    open_member_writes: Dict[int, tuple] = {}  # id(write) -> bucket key
+    final_anchor: Dict[int, int] = {}  # id(write) -> fused anchor index
+
+    def finalize(key) -> None:
+        b = open_buckets.pop(key, None)
+        if b is None:
+            return
+        for mi in b["members"]:
+            for w in steps[mi].writes:
+                open_member_writes.pop(id(w), None)
+        if len(b["members"]) < 2:
+            return  # singleton: the step stays put, pos_written is accurate
+        anchor = b["members"][0] if b["hoistable"] else b["members"][-1]
+        fused_at[anchor] = b["members"]
+        for mi in b["members"]:
+            for w in steps[mi].writes:
+                final_anchor[id(w)] = anchor
+
+    def available_before(r, first: int) -> bool:
+        """Is value ``r`` produced before step index ``first`` in the OUTPUT
+        plan?  Open-bucket producers are unsafe (their anchor may still
+        sink); fused producers live at their anchor; everything else at its
+        original index (absent = plan input/const/literal)."""
+        if id(r) in open_member_writes:
+            return False
+        a = final_anchor.get(id(r))
+        if a is not None:
+            return a < first
+        return pos_written.get(id(r), -1) < first
+
+    for j, s in enumerate(steps):
+        # a reader of an open-bucket member's result: harmless for a hoistable
+        # bucket (the fused write lands at the first member, still before this
+        # step) but it *pins* it — later members may only join if the bucket
+        # stays hoistable.  A non-hoistable bucket must finalize here so no
+        # member sinks past its reader.  This applies to fusable steps too.
+        read_ids = {id(k) for k in s.reads}
+        for k in list(open_buckets):
+            if any(id(m_w) in read_ids
+                   for mi in open_buckets[k]["members"]
+                   for m_w in steps[mi].writes):
+                if open_buckets[k]["hoistable"]:
+                    open_buckets[k]["pinned"] = True
+                else:
+                    finalize(k)
+        key = _fuse_key(s, mesh)
+        if key is None:
+            for w in s.writes:
+                pos_written[id(w)] = j
+            continue
+        nb = s.in_bytes
+        b = open_buckets.get(key)
+        if b is not None:
+            first = b["members"][0]
+            cand_hoistable = all(available_before(r, first) for r in s.reads)
+            joinable = cand_hoistable or not b["pinned"]
+            if not joinable or b["bytes"] + nb > cap:
+                finalize(key)
+                b = None
+        if b is None:
+            b = open_buckets[key] = {
+                "members": [j], "bytes": nb, "hoistable": True, "pinned": False,
+            }
+        else:
+            b["members"].append(j)
+            b["bytes"] += nb
+            b["hoistable"] = b["hoistable"] and cand_hoistable
+        for w in s.writes:
+            pos_written[id(w)] = j
+            open_member_writes[id(w)] = key
+    for k in list(open_buckets):
+        finalize(k)
+
+    if not fused_at:
+        return rep
+
+    removed: set = set()
+    replacement: Dict[int, PlanStep] = {}
+    for anchor, members in fused_at.items():
+        group = [steps[i] for i in members]
+        key = _fuse_key(group[0], mesh)
+        reads = tuple(g.reads[0] for g in group)
+        writes = tuple(g.writes[0] for g in group)
+        total_bytes = sum(g.in_bytes for g in group)
+        if key[0] == "psum":
+            axes, reduce_op, dtype = key[1], key[2], key[3]
+            run = _fused_psum_run(axes, reduce_op, [g.lshape for g in group])
+            wire = _psum_wire_bytes(mesh, axes, total_bytes)
+            fused = PlanStep(
+                "fused", reads, writes, run, op="fused-all-reduce", axes=axes,
+                reduce_op=reduce_op, lshape=(int(sum(
+                    int(np.prod(g.lshape)) if g.lshape else 1 for g in group)),),
+                dbytes=group[0].dbytes, dtype=dtype,
+            )
+            # stats: k psum launches (one count per axis each) become one
+            plan.stats.count("all-reduce", -len(group) * len(axes))
+            plan.stats.count("fused-all-reduce", 1)
+        else:
+            axis, dtype = key[1], key[2]
+            n = mesh.axis_size(axis)
+            specs = [(g.lshape, g.program.steps[0].dim) for g in group]
+            run = _fused_gather_run(axis, n, specs)
+            wire = collective_wire_bytes("all-gather", n, total_bytes)
+            fused = PlanStep(
+                "fused", reads, writes, run, op="fused-all-gather", axes=(axis,),
+                lshape=(int(sum(
+                    int(np.prod(g.lshape)) if g.lshape else 1 for g in group)),),
+                dbytes=group[0].dbytes, dtype=dtype,
+            )
+            plan.stats.count("all-gather", -len(group))
+            plan.stats.count("fused-all-gather", 1)
+        fused._wire_bytes = wire  # noqa: SLF001 - plan-local annotation
+        replacement[anchor] = fused
+        removed.update(m for m in members if m != anchor)
+        rep.fused_buckets += 1
+        rep.fused_members += len(group)
+        rep.launch_s_saved += (len(group) - 1) * COLLECTIVE_LAUNCH_S
+    rep.removed_steps = len(removed)
+    plan.steps[:] = [
+        replacement.get(i, s) for i, s in enumerate(steps) if i not in removed
+    ]
+    return rep
+
+
+# ---------------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------------
+
+
+def _psum_wire_bytes(mesh, axes, in_bytes: float) -> float:
+    """Per-axis AllReduce pricing, matching ``einsum_rules.compile_einsum``
+    (which prices each remaining psum axis independently) so the opt-report
+    byte deltas live in the same cost model the planner decided with."""
+    return sum(
+        collective_wire_bytes("all-reduce", mesh.axis_size(a), in_bytes)
+        for a in axes
+    )
+
+
+def _wire_bytes(plan: PartitionPlan) -> float:
+    total = 0.0
+    mesh = plan.mesh
+    for s in plan.steps:
+        if s.kind == "reshard" and s.program is not None:
+            total += s.program.cost_bytes
+        elif s.kind == "collective":
+            total += _psum_wire_bytes(mesh, s.axes, s.in_bytes)
+        elif s.kind == "fused":
+            total += getattr(s, "_wire_bytes", 0.0)
+    for prog in plan.out_programs:
+        if prog is not None:
+            total += prog.cost_bytes
+    return total
+
+
+def optimize_plan(plan: PartitionPlan,
+                  bucket_bytes: Optional[float] = None) -> PartitionPlan:
+    """Run the whole-plan pass pipeline (CSE → DCE → fusion) on ``plan``.
+
+    Mutates ``plan.steps``/``plan.stats`` in place (inner pjit/scan plans are
+    captured by reference in step closures) and attaches an :class:`OptReport`
+    with before/after wire bytes and collective-launch counts.
+    """
+    steps_before = len(plan.steps)
+    coll_before = count_collective_launches(plan.steps, plan.out_programs)
+    bytes_before = _wire_bytes(plan)
+    reports = [
+        reshard_cse(plan),
+        dead_reshard_elim(plan),
+        sink_output_aliases(plan),
+        fuse_collectives(plan, bucket_bytes),
+    ]
+    plan.stats.steps = len(plan.steps)
+    plan.opt_report = OptReport(
+        passes=reports,
+        steps_before=steps_before,
+        steps_after=len(plan.steps),
+        collectives_before=coll_before,
+        collectives_after=count_collective_launches(plan.steps, plan.out_programs),
+        wire_bytes_before=bytes_before,
+        wire_bytes_after=_wire_bytes(plan),
+    )
+    return plan

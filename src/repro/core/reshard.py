@@ -15,7 +15,10 @@ cheapest valid :class:`~repro.core.collective_planner.ReshardProgram`.  In
 particular a mesh axis moving between dims lowers to a direct AllToAll at
 (n-1)/n of the operand bytes instead of AllGather + DynamicSlice at (n-1)×,
 and DynamicSlices run before AllGathers so gathered operands are as small as
-possible.
+possible.  On 3+-axis and stacked layouts the planner additionally runs a
+bounded branch-and-bound over step interleavings (lattice search) with the
+greedy result as the incumbent, finding e.g. AllToAll detours that park an
+axis on another dim so slices can shrink it before it returns.
 
 ``reshard_local(x, cur, tgt)`` is the plan-then-execute convenience used by
 the dynamic reference partitioner; the compiled-plan path

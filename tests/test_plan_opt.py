@@ -1,0 +1,416 @@
+"""Whole-plan optimizer unit tests (single device, pure planning).
+
+The pass pipeline (``core/plan_opt.py``) and the lattice reshard search
+(``collective_planner._candidate_search``) are pure functions of the plan /
+shardings, so their structure is tested here on pod-size meshes without any
+devices.  Execution parity (CSE / fused collectives produce identical
+numerics) lives in tests/multidev/test_plan_opt_multidev.py.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+sys.path.insert(0, os.path.dirname(__file__))
+try:
+    from hypothesis import given, settings, strategies as hs
+except ImportError:  # container lacks hypothesis; deterministic fallback
+    from _hypo_stub import given, settings, strategies as hs
+
+from repro.core import Mesh, annotate, mesh_split, propagate
+from repro.core.collective_planner import PlanError, plan_reshard, simulate
+from repro.core.plan import compile_plan
+from repro.core.plan_opt import optimize_plan
+
+mesh = Mesh.create((4, 8), ("x", "y"))
+R = mesh_split(2, mesh, [-1, -1])
+
+
+def _plans(f, *avals):
+    """Compile the same propagated jaxpr twice: raw and optimized."""
+    closed = jax.make_jaxpr(f)(*avals)
+    prop = propagate(closed, mesh).result()
+    return (
+        compile_plan(closed, prop, mesh, optimize=False),
+        compile_plan(closed, prop, mesh, optimize=True),
+    )
+
+
+def _reshards(plan):
+    return [s for s in plan.steps if s.kind == "reshard"]
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------------
+# pass 1: reshard CSE
+# ---------------------------------------------------------------------------------
+
+
+def test_cse_shared_operand_reshards_once():
+    """A shared operand consumed by two einsums needing the same reshard must
+    reshard exactly once after CSE."""
+
+    def f(a, w1, w2):
+        a = annotate(a, mesh_split(2, mesh, ["y", -1]))
+        w1 = annotate(w1, mesh_split(2, mesh, ["y", -1]))
+        w2 = annotate(w2, mesh_split(2, mesh, ["y", -1]))
+        return (a @ w1) + (a @ w2)
+
+    raw, opt = _plans(f, _f32(64, 64), _f32(64, 64), _f32(64, 64))
+    # the builder emits one reshard of `a` per consuming einsum
+    assert len(_reshards(raw)) == 2
+    assert len(_reshards(opt)) == 1
+    rep = opt.opt_report
+    cse = rep.passes[0]
+    assert cse.name == "reshard-cse"
+    assert cse.removed_steps == 1
+    assert cse.wire_bytes_saved > 0
+    assert rep.wire_bytes_after < rep.wire_bytes_before
+    assert rep.collectives_after < rep.collectives_before
+
+
+def test_cse_duplicate_feeding_output_becomes_alias():
+    """When the duplicate reshard's result is a jaxpr output, CSE must keep
+    the env write (as a free alias), not drop the value."""
+    tgt = mesh_split(2, mesh, [-1, "y"])
+
+    def f(a):
+        a = annotate(a, mesh_split(2, mesh, ["x", -1]))
+        b = annotate(a, tgt)
+        c = annotate(a, tgt)
+        return b, c
+
+    raw, opt = _plans(f, _f32(64, 64))
+    assert len(_reshards(raw)) == 2
+    assert len(_reshards(opt)) == 1
+    aliases = [s for s in opt.steps if s.kind == "compute" and s.op == "alias"]
+    assert len(aliases) == 1
+    # both outputs still written
+    writes = {id(w) for s in opt.steps for w in s.writes}
+    for v in opt.jaxpr.outvars:
+        assert id(v) in writes
+
+
+# ---------------------------------------------------------------------------------
+# pass 2: dead-reshard elimination
+# ---------------------------------------------------------------------------------
+
+
+def test_dead_reshard_eliminated():
+    """An annotation whose resharded value is never consumed must not emit
+    collectives."""
+
+    def f(a):
+        a1 = annotate(a, mesh_split(2, mesh, ["x", -1]))
+        _dead = annotate(a1, mesh_split(2, mesh, [-1, "y"]))
+        return jnp.tanh(a1)
+
+    raw, opt = _plans(f, _f32(64, 64))
+    assert len(_reshards(raw)) == 1  # the dead [x,-1] -> [-1,y] move
+    assert _reshards(raw)[0].program.cost_bytes > 0
+    assert len(_reshards(opt)) == 0
+    dce = opt.opt_report.passes[1]
+    assert dce.name == "dead-reshard-elim"
+    assert dce.removed_steps == 1
+    assert dce.wire_bytes_saved > 0
+
+
+def test_noop_reshard_never_emitted():
+    """Source already matching the target: the builder emits an alias, never
+    a reshard program (so DCE has nothing to do and execution is free)."""
+
+    def f(a):
+        a = annotate(a, mesh_split(2, mesh, ["x", -1]))
+        a = annotate(a, mesh_split(2, mesh, ["x", -1]))  # no-op
+        return a
+
+    raw, _ = _plans(f, _f32(64, 64))
+    assert len(_reshards(raw)) == 0
+
+
+# ---------------------------------------------------------------------------------
+# pass 4: collective fusion / bucketing
+# ---------------------------------------------------------------------------------
+
+
+def _fanout_psum(k=4, n=64):
+    """k independent matmuls with a contracted-sharded operand: k trailing
+    AllReduces on independent values."""
+
+    def f(a, *ws):
+        a = annotate(a, mesh_split(2, mesh, ["y", -1]))
+        outs = []
+        for w in ws:
+            w = annotate(w, mesh_split(2, mesh, ["y", -1]))
+            outs.append(annotate(a @ w, R))
+        return tuple(outs)
+
+    return f, [_f32(n, n)] * (k + 1)
+
+
+def test_fused_allreduce_bucket():
+    f, avals = _fanout_psum()
+    raw, opt = _plans(f, *avals)
+    assert sum(1 for s in raw.steps if s.kind == "collective") == 4
+    fused = [s for s in opt.steps if s.kind == "fused"]
+    assert len(fused) == 1 and fused[0].op == "fused-all-reduce"
+    assert len(fused[0].reads) == 4
+    assert opt.opt_report.fused_buckets == 1
+    assert opt.opt_report.collectives_after < opt.opt_report.collectives_before
+    assert opt.stats.collectives.get("fused-all-reduce") == 1
+
+
+def test_fused_gather_hoists_independent_members():
+    """Two fallback gathers of independent inputs fuse by hoisting the second
+    up to the first (its input is a plan input, available from the start)."""
+
+    def f(a, b):
+        a = annotate(a, mesh_split(2, mesh, ["x", -1]))
+        b = annotate(b, mesh_split(2, mesh, ["x", -1]))
+        return lax.rev(a, (0,)) + lax.rev(b, (0,))
+
+    raw, opt = _plans(f, _f32(64, 32), _f32(64, 32))
+    fused = [s for s in opt.steps if s.kind == "fused"]
+    assert len(fused) == 1 and fused[0].op == "fused-all-gather"
+    # the fused gather must come before both rev compute steps
+    idx = {id(s): i for i, s in enumerate(opt.steps)}
+    revs = [s for s in opt.steps if s.op == "rev"]
+    assert all(idx[id(fused[0])] < idx[id(r)] for r in revs)
+
+
+def test_fusion_respects_dependency_chain():
+    """Chained psums (h2 depends on h1 through the second matmul) must not
+    fuse — neither hoist (late input) nor sink (intervening reader) is
+    legal."""
+
+    def f(a, w1, w2):
+        a = annotate(a, mesh_split(2, mesh, ["y", -1]))
+        w1 = annotate(w1, mesh_split(2, mesh, ["y", -1]))
+        h1 = annotate(a @ w1, R)
+        h1 = annotate(h1, mesh_split(2, mesh, ["y", -1]))
+        w2 = annotate(w2, mesh_split(2, mesh, ["y", -1]))
+        return annotate(h1 @ w2, R)
+
+    _, opt = _plans(f, _f32(64, 64), _f32(64, 64), _f32(64, 64))
+    assert [s for s in opt.steps if s.kind == "fused"] == []
+    assert sum(1 for s in opt.steps if s.kind == "collective") == 2
+
+
+def _check_write_before_read(plan):
+    """Every step's reads must be produced by an earlier step or be a plan
+    input/const/literal — the invariant every pass must preserve."""
+    from jax.extend import core as excore
+
+    avail = {id(v) for v in plan.jaxpr.invars}
+    avail |= {id(v) for v in plan.jaxpr.constvars}
+    for i, s in enumerate(plan.steps):
+        for r in s.reads:
+            if isinstance(r, excore.Literal):
+                continue
+            assert id(r) in avail, (
+                f"step {i} ({s.kind}/{s.op}) reads a value produced later"
+            )
+        for w in s.writes:
+            avail.add(id(w))
+    writes = {id(w) for s in plan.steps for w in s.writes}
+    for v in plan.jaxpr.outvars:
+        if not isinstance(v, excore.Literal):
+            assert id(v) in writes
+
+
+def test_fusion_never_hoists_above_sunk_producer():
+    """Regression: a hoist-mode bucket must not anchor above a *sink*-mode
+    bucket that produces one of its inputs.  Here the two gather-y reshards
+    form a sinking bucket (the second one's input arrives late) anchored at
+    the second member, while the gather-x of the first gather-y's result
+    looks hoistable by original positions — fusing it early would read a
+    value that now only exists after the sunk anchor."""
+    stacked = mesh_split(2, mesh, [("x", "y"), -1])
+    xonly = mesh_split(2, mesh, ["x", -1])
+
+    def f(u, a, v):
+        u = annotate(u, stacked)
+        u1 = annotate(u, xonly)        # gather-y (bucket Y member 1)
+        b = annotate(a, xonly)
+        r1 = lax.rev(b, (0,))          # gather-x of b (bucket X member 1)
+        v = annotate(v, stacked)
+        v1 = annotate(v, xonly)        # gather-y joins Y -> sink-anchored here
+        r2 = lax.rev(u1, (0,))         # gather-x of u1: must NOT hoist into X
+        return r1, v1, r2
+
+    raw, opt = _plans(f, _f32(64, 16), _f32(64, 16), _f32(64, 16))
+    _check_write_before_read(raw)
+    _check_write_before_read(opt)
+    # the legal fusion (the two gather-y reshards) still happens
+    fused = [s for s in opt.steps if s.kind == "fused"]
+    assert any(s.op == "fused-all-gather" and s.axes == ("y",) for s in fused)
+
+
+def test_all_passes_preserve_write_before_read():
+    """The SSA/order invariant holds on every optimized plan in this file's
+    benchmark programs."""
+
+    def shared(a, w1, w2):
+        a = annotate(a, mesh_split(2, mesh, ["y", -1]))
+        w1 = annotate(w1, mesh_split(2, mesh, ["y", -1]))
+        w2 = annotate(w2, mesh_split(2, mesh, ["y", -1]))
+        return (a @ w1) + (a @ w2)
+
+    for fn, avals in [
+        (shared, [_f32(64, 64)] * 3),
+        (_fanout_psum()[0], _fanout_psum()[1]),
+    ]:
+        raw, opt = _plans(fn, *avals)
+        _check_write_before_read(raw)
+        _check_write_before_read(opt)
+
+
+def test_bucket_cap_limits_fusion():
+    """With a byte cap below one member's size, nothing fuses; the default
+    roofline cap fuses all four."""
+    f, avals = _fanout_psum()
+    closed = jax.make_jaxpr(f)(*avals)
+    prop = propagate(closed, mesh).result()
+    raw = compile_plan(closed, prop, mesh, optimize=False)
+    member_bytes = max(
+        s.in_bytes for s in raw.steps if s.kind == "collective"
+    )
+    capped = optimize_plan(
+        compile_plan(closed, prop, mesh, optimize=False),
+        bucket_bytes=member_bytes / 2,
+    )
+    assert [s for s in capped.steps if s.kind == "fused"] == []
+    full = optimize_plan(compile_plan(closed, prop, mesh, optimize=False))
+    assert [len(s.reads) for s in full.steps if s.kind == "fused"] == [4]
+
+
+# ---------------------------------------------------------------------------------
+# lattice search (branch-and-bound over the step lattice)
+# ---------------------------------------------------------------------------------
+
+mesh3 = Mesh.create((2, 2, 4), ("x", "y", "z"))
+AXES3 = [(), ("x",), ("y",), ("z",), ("x", "y"), ("y", "z"), ("z", "x"),
+         ("z", "y"), ("x", "y", "z")]
+
+
+def test_lattice_strictly_beats_greedy_on_stacked_target():
+    """Moving x out of the way via AllToAll so the slices happen first is
+    cheaper than greedy's AllGather; search finds it, greedy cannot."""
+    src = mesh_split(2, mesh3, [-1, "x"])
+    dst = mesh_split(2, mesh3, [-1, ("z", "x")])
+    local = (64, 32)
+    greedy = plan_reshard(src, dst, local, 4, search=False)
+    lat = plan_reshard(src, dst, local, 4, search=True)
+    assert lat.strategy == "lattice"
+    assert lat.cost_bytes < greedy.cost_bytes
+    # the chosen program must still validate under simulation
+    assert simulate(src, dst, list(lat.steps), local, 4) == lat.cost_bytes
+
+
+@given(
+    hs.sampled_from(AXES3), hs.sampled_from(AXES3),
+    hs.sampled_from(AXES3), hs.sampled_from(AXES3),
+)
+@settings(max_examples=40, deadline=None)
+def test_lattice_never_worse_than_pr1_planner(d0, d1, e0, e1):
+    """Property (satellite): over random 3-axis layouts the search-enabled
+    planner never returns a costlier program than the PR 1 candidates."""
+    if set(d0) & set(d1) or set(e0) & set(e1):
+        return
+    src = mesh_split(2, mesh3, [d0 or -1, d1 or -1])
+    dst = mesh_split(2, mesh3, [e0 or -1, e1 or -1])
+    local = tuple(64 // src.num_shards(i) for i in (0, 1))
+    try:
+        greedy = plan_reshard(src, dst, local, 4, search=False)
+    except PlanError:
+        return
+    lat = plan_reshard(src, dst, local, 4, search=True)
+    assert lat.cost_bytes <= greedy.cost_bytes + 1e-9
+    assert simulate(src, dst, list(lat.steps), local, 4) == pytest.approx(
+        lat.cost_bytes
+    )
+
+
+# ---------------------------------------------------------------------------------
+# process-level plan cache
+# ---------------------------------------------------------------------------------
+
+
+def test_process_cache_shared_across_runners():
+    from repro.core.compat import make_jax_mesh
+    from repro.core.partitioner import (
+        clear_process_plan_cache, process_plan_cache_stats, spmd_partition,
+    )
+
+    jmesh = make_jax_mesh((1, 1), ("x", "y"))
+    m = Mesh.create((1, 1), ("x", "y"))
+
+    def make_fn():
+        # distinct Python callables per runner: the digest, not identity,
+        # must be what shares the plan
+        def f(a, b):
+            a = annotate(a, mesh_split(2, m, ["x", -1]))
+            return jnp.tanh(a @ b) * 3.0
+
+        return f
+
+    clear_process_plan_cache()
+    x = np.ones((4, 4), np.float32)
+    r1 = spmd_partition(make_fn(), jmesh, m)
+    out1 = r1(x, x)
+    assert process_plan_cache_stats().as_dict()["misses"] == 1
+    r2 = spmd_partition(make_fn(), jmesh, m)
+    out2 = r2(x, x)
+    st = process_plan_cache_stats().as_dict()
+    assert st["hits"] == 1 and st["misses"] == 1
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    # shared entry: both runners hold the same plan object
+    (e1,) = r1.plans.values()
+    (e2,) = r2.plans.values()
+    assert e1.plan is e2.plan
+    clear_process_plan_cache()
+
+
+def test_process_cache_distinguishes_different_programs():
+    from repro.core.compat import make_jax_mesh
+    from repro.core.partitioner import (
+        clear_process_plan_cache, process_plan_cache_stats, spmd_partition,
+    )
+
+    jmesh = make_jax_mesh((1, 1), ("x", "y"))
+    m = Mesh.create((1, 1), ("x", "y"))
+    clear_process_plan_cache()
+    x = np.ones((4, 4), np.float32)
+    spmd_partition(lambda a: a * 2.0, jmesh, m)(x)
+    spmd_partition(lambda a: a * 3.0, jmesh, m)(x)  # different const payload
+    st = process_plan_cache_stats().as_dict()
+    assert st["misses"] == 2 and st["hits"] == 0
+    clear_process_plan_cache()
+
+
+# ---------------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------------
+
+
+def test_opt_report_as_dict_schema():
+    f, avals = _fanout_psum()
+    _, opt = _plans(f, *avals)
+    d = opt.opt_report.as_dict()
+    for k in ("passes", "steps_before", "steps_after", "collectives_before",
+              "collectives_after", "wire_bytes_before", "wire_bytes_after",
+              "fused_buckets", "launch_s_saved"):
+        assert k in d, k
+    assert d["steps_after"] <= d["steps_before"]
+    assert d["collectives_after"] <= d["collectives_before"]
+    assert d["wire_bytes_after"] <= d["wire_bytes_before"]
+    assert [p["name"] for p in d["passes"]] == [
+        "reshard-cse", "dead-reshard-elim", "alias-sink", "collective-fusion",
+    ]
