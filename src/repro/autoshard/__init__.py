@@ -1,0 +1,45 @@
+"""repro.autoshard — automatic sharding-strategy search over partition plans.
+
+GSPMD's premise is that users annotate a handful of tensors and the compiler
+infers the rest; this subsystem removes the last manual step by *searching*
+those seed annotations under the compiler's own cost model (Automap
+arXiv:2112.02958, PartIR arXiv:2401.11202).  Given a traced jaxpr, a mesh,
+and a per-device memory budget it returns the cheapest feasible assignment of
+input/parameter shardings, scored by cost-only plan lowering — propagation +
+``compile_plan`` + ``plan_opt`` with no jit and no execution.
+
+    from repro import autoshard
+    result = autoshard.solve("qwen1.5-0.5b", mesh)   # registry config
+    result.dump("assignment.json")                    # reproducible artifact
+
+    runner = spmd_partition(fn, jmesh, mesh,
+                            autoshard=autoshard.AutoshardConfig())
+"""
+from .api import (
+    AutoshardConfig,
+    AutoshardResult,
+    assignment_from_json,
+    clear_assignment_cache,
+    load,
+    registry_problem,
+    sharding_from_spec,
+    solve,
+    solve_jaxpr,
+    solve_jaxpr_cached,
+)
+from .evaluate import Evaluation, Evaluator
+from .search import SearchResult, search
+from .space import (
+    assignment_bytes,
+    candidate_shardings,
+    fits_budget,
+    local_bytes,
+)
+
+__all__ = [
+    "AutoshardConfig", "AutoshardResult", "Evaluation", "Evaluator",
+    "SearchResult", "assignment_bytes", "assignment_from_json",
+    "candidate_shardings", "clear_assignment_cache", "fits_budget",
+    "load", "local_bytes", "registry_problem", "search",
+    "sharding_from_spec", "solve", "solve_jaxpr", "solve_jaxpr_cached",
+]

@@ -1,0 +1,311 @@
+"""Autoshard entry points: annotation-free sharding for jaxprs and registry
+configs.
+
+Two front doors:
+
+* ``spmd_partition(fn, jmesh, mesh, autoshard=AutoshardConfig(...))``
+  (``repro.core.partitioner``) — the traced jaxpr's input shardings are
+  searched instead of read from ``annotate`` seeds; the assignment is cached
+  process-wide by jaxpr digest + mesh + config.
+* :func:`solve` — search a **model-registry config**: traces the family's
+  ``loss_fn`` on a reduced config with *zero* ``Strategy.constrain``
+  annotations (no mesh context active while tracing, so every constraint is
+  a no-op), searches the input/parameter assignment, and compares against
+  the hand-annotated baseline (the config's default Table-1 ``Strategy``
+  applied to the same invars).
+
+Assignments serialize to JSON (:meth:`AutoshardResult.to_json` /
+:func:`result_from_json`) for reproducibility: the dump pins the mesh shape
+and axis names, the per-invar dims_mapping (or null = left to propagation),
+the search config, and both modeled costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.sharding import Mesh, Sharding, replicated
+
+from .evaluate import Evaluation, Evaluator
+from .search import SearchResult, search
+from .space import MaybeSharding
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoshardConfig:
+    """Search knobs (all deterministic under ``seed``).
+
+    ``budget_bytes`` is the per-device live-memory budget (params + peak
+    activations under the plan-level memory model); ``None`` disables the
+    constraint.  ``top_n`` bounds how many (largest) inputs are searched —
+    the rest are left to propagation.
+    """
+
+    budget_bytes: Optional[float] = None
+    top_n: int = 6
+    beam_width: int = 4
+    sa_steps: int = 16
+    seed: int = 0
+    max_candidates: int = 16
+    optimize: bool = True  # run plan_opt passes inside cost-only scoring
+
+    def cache_key(self) -> tuple:
+        return dataclasses.astuple(self)
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class AutoshardResult:
+    """A searched assignment plus its modeled cost context."""
+
+    mesh: Mesh
+    assignment: List[MaybeSharding]  # one per jaxpr invar; None = inferred
+    evaluation: Evaluation
+    config: AutoshardConfig
+    evals: int = 0
+    searched_invars: Tuple[int, ...] = ()
+    baseline: Optional[Evaluation] = None
+    arch: str = ""
+
+    @property
+    def cost(self):
+        return self.evaluation.cost
+
+    @property
+    def baseline_cost(self):
+        return self.baseline.cost if self.baseline is not None else None
+
+    @property
+    def ratio_vs_baseline(self) -> float:
+        """Searched / hand-annotated modeled seconds (≤ 1.0 is the contract
+        when the baseline itself was scored as a search point)."""
+        if self.baseline is None or not self.baseline.feasible:
+            return 0.0
+        base = self.baseline.score
+        return self.evaluation.score / base if base else 1.0
+
+    # -- JSON round trip ----------------------------------------------------
+    def to_json(self) -> Dict:
+        return {
+            "version": 1,
+            "arch": self.arch,
+            "mesh": {
+                "shape": list(self.mesh.shape),
+                "axes": list(self.mesh.axis_names),
+            },
+            "assignment": [
+                None if s is None else [list(axes) for axes in s.dims_mapping]
+                for s in self.assignment
+            ],
+            "config": self.config.as_dict(),
+            "evals": self.evals,
+            "searched_invars": list(self.searched_invars),
+            "cost": self.cost.as_dict() if self.cost is not None else None,
+            "baseline_cost": (
+                self.baseline_cost.as_dict()
+                if self.baseline_cost is not None else None
+            ),
+        }
+
+    def dump(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        return path
+
+
+def assignment_from_json(rec: Dict) -> Tuple[Mesh, List[MaybeSharding]]:
+    """Rebuild (mesh, assignment) from a :meth:`AutoshardResult.to_json`
+    record.  The mesh is reconstructed with row-major device order
+    (``Mesh.create``) — dumps of meshes with a custom device permutation
+    reshard identically but place shards on different physical devices.
+    """
+    m = rec["mesh"]
+    mesh = Mesh.create(tuple(m["shape"]), tuple(m["axes"]))
+    assignment: List[MaybeSharding] = []
+    for ent in rec["assignment"]:
+        if ent is None:
+            assignment.append(None)
+        else:
+            assignment.append(
+                Sharding(mesh, tuple(tuple(axes) for axes in ent))
+            )
+    return mesh, assignment
+
+
+def load(path: str) -> Tuple[Mesh, List[MaybeSharding]]:
+    with open(path) as f:
+        return assignment_from_json(json.load(f))
+
+
+# ---------------------------------------------------------------------------------
+# jaxpr-level solve + the process-level assignment cache
+# ---------------------------------------------------------------------------------
+
+
+def solve_jaxpr(closed, mesh: Mesh,
+                config: AutoshardConfig = AutoshardConfig()) -> AutoshardResult:
+    """Search the input-sharding assignment of one traced (closed) jaxpr."""
+    ev = Evaluator(closed, mesh, budget_bytes=config.budget_bytes,
+                   optimize=config.optimize)
+    res = search(
+        ev, mesh,
+        top_n=config.top_n, beam_width=config.beam_width,
+        sa_steps=config.sa_steps, seed=config.seed,
+        max_candidates=config.max_candidates,
+    )
+    return AutoshardResult(
+        mesh=mesh, assignment=res.assignment, evaluation=res.evaluation,
+        config=config, evals=res.evals, searched_invars=res.searched_invars,
+    )
+
+
+_ASSIGNMENT_CACHE: Dict[tuple, AutoshardResult] = {}
+_ASSIGNMENT_LOCK = threading.Lock()
+
+
+def solve_jaxpr_cached(closed, mesh: Mesh,
+                       config: AutoshardConfig) -> AutoshardResult:
+    """Process-level cache front of :func:`solve_jaxpr`, keyed like the plan
+    cache (jaxpr content digest + mesh + config) so repeated
+    ``spmd_partition`` call sites pay for the search once."""
+    from repro.core.partitioner import _jaxpr_digest
+
+    key = (_jaxpr_digest(closed), mesh.structural_key(), config.cache_key())
+    with _ASSIGNMENT_LOCK:
+        hit = _ASSIGNMENT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    res = solve_jaxpr(closed, mesh, config)
+    with _ASSIGNMENT_LOCK:
+        _ASSIGNMENT_CACHE[key] = res
+    return res
+
+
+def clear_assignment_cache() -> None:
+    with _ASSIGNMENT_LOCK:
+        _ASSIGNMENT_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------------
+# registry-level solve (annotation-free model sharding)
+# ---------------------------------------------------------------------------------
+
+
+def sharding_from_spec(mesh: Mesh, spec, shape: Sequence[int]) -> Sharding:
+    """PartitionSpec → Sharding, dropping axes absent from ``mesh`` (e.g.
+    "pod" on a single-pod mesh), already-used axes, and axes that do not
+    divide the dim (§4.1 fallback) — mirrors ``configs.base
+    .filter_spec_by_shape`` but lands on the reference Sharding type."""
+    shape = tuple(int(s) for s in shape)
+    if spec is None:
+        return replicated(mesh, len(shape))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    dm: List[Tuple[str, ...]] = []
+    used: set = set()
+    for i, e in enumerate(entries[:len(shape)]):
+        axes = () if e is None else ((e,) if isinstance(e, str) else tuple(e))
+        kept: List[str] = []
+        n = 1
+        for a in axes:
+            if a in mesh.axis_names and a not in used \
+                    and shape[i] % (n * mesh.axis_size(a)) == 0:
+                kept.append(a)
+                used.add(a)
+                n *= mesh.axis_size(a)
+        dm.append(tuple(kept))
+    return Sharding(mesh, tuple(dm))
+
+
+def registry_problem(arch: str, mesh: Mesh, batch: int = 8, seq: int = 32,
+                     reduce_k: int = 16):
+    """Trace one registry config's loss annotation-free and derive the
+    hand-annotated baseline assignment from its default Strategy.
+
+    Returns ``(closed_jaxpr, baseline_assignment)``.  The model is reduced
+    (``launch.train.reduced_config``) so each cost-only lowering stays in the
+    tens of milliseconds; sharding decisions transfer because the jaxpr
+    structure (per-layer scan body) is the same as the full config's.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import get_strategy
+    from repro.configs.registry import default_strategy, get_config
+    from repro.launch.train import reduced_config
+    from repro.models import api as model_api
+    from repro.models.layers import tree_shapes, tree_specs
+
+    cfg = reduced_config(get_config(arch), reduce_k).with_(
+        attn_chunk=16, remat="none"
+    )
+    st = get_strategy(default_strategy(arch))
+    tree = model_api.param_tree(cfg, st)
+    shapes = tree_shapes(tree)
+    batch_in = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch_in["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        batch_in["frames"] = jax.ShapeDtypeStruct(
+            (batch, max(seq // 2, 16), cfg.d_model), jnp.bfloat16
+        )
+    closed = jax.make_jaxpr(
+        lambda p, b: model_api.loss_fn(cfg, st, p, b)
+    )(shapes, batch_in)
+    # hand-annotated baseline: the Strategy's Table-1 specs on the same invars
+    batch_specs = {k: P(("data",)) for k in batch_in}
+    spec_leaves = jax.tree_util.tree_leaves(
+        (tree_specs(tree), batch_specs),
+        is_leaf=lambda x: x is None or isinstance(x, P),
+    )
+    assert len(spec_leaves) == len(closed.jaxpr.invars), (
+        len(spec_leaves), len(closed.jaxpr.invars)
+    )
+    baseline = [
+        sharding_from_spec(mesh, s, tuple(v.aval.shape))
+        for s, v in zip(spec_leaves, closed.jaxpr.invars)
+    ]
+    return closed, baseline
+
+
+def solve(arch: str, mesh: Optional[Mesh] = None,
+          config: AutoshardConfig = AutoshardConfig(),
+          batch: int = 8, seq: int = 32, reduce_k: int = 16) -> AutoshardResult:
+    """Annotation-free sharding for a registry config on ``mesh``.
+
+    Searches the input/parameter assignment for the (reduced) config's loss
+    step, scores the hand-annotated Table-1 baseline as an extra search
+    point, and returns the winner — by construction the searched assignment's
+    modeled cost never exceeds the baseline's.
+    """
+    mesh = mesh if mesh is not None else Mesh.create((2, 4), ("data", "model"))
+    closed, baseline = registry_problem(arch, mesh, batch, seq, reduce_k)
+    ev = Evaluator(closed, mesh, budget_bytes=config.budget_bytes,
+                   optimize=config.optimize)
+    base_ev = ev(baseline)
+    res = search(
+        ev, mesh,
+        top_n=config.top_n, beam_width=config.beam_width,
+        sa_steps=config.sa_steps, seed=config.seed,
+        max_candidates=config.max_candidates,
+    )
+    assignment, final = res.assignment, res.evaluation
+    if base_ev.score < final.score:
+        # the baseline is a valid point in the searched space: never lose to it
+        assignment, final = baseline, base_ev
+    return AutoshardResult(
+        mesh=mesh, assignment=assignment, evaluation=final, config=config,
+        evals=ev.lowerings, searched_invars=res.searched_invars,
+        baseline=base_ev, arch=arch,
+    )

@@ -1,0 +1,90 @@
+"""Candidate scoring: cost-only lowering of one input-sharding assignment.
+
+A candidate assignment (one ``Optional[Sharding]`` per jaxpr invar) is scored
+by running the existing pipeline end to end in cost-only mode — propagation
+completes the unseeded tensors, ``compile_plan`` lowers with cost-model-chosen
+reshard programs, ``plan_opt`` runs CSE/DCE/fusion — and reading the
+resulting :class:`~repro.core.plan.PlanCost`: modeled collective seconds
+(wire bytes + launches) plus roofline compute imbalance.  No jaxpr is ever
+executed and no executable is built (every step runner is a raising stub).
+
+Assignments whose propagated program demands an inexpressible reshard, or
+whose modeled per-device live-memory peak exceeds the budget, are
+*infeasible*: they score ``inf`` and the search discards them.
+
+Evaluations are memoized by assignment (the search revisits neighborhoods),
+and the evaluator counts lowerings for the benchmark cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.collective_planner import PlanError
+from repro.core.plan import PlanCost, lower_for_cost
+from repro.core.sharding import Mesh, Sharding
+
+from .space import MaybeSharding
+
+
+@dataclasses.dataclass
+class Evaluation:
+    """One scored candidate.  ``cost`` is None when lowering failed."""
+
+    cost: Optional[PlanCost]
+    feasible: bool
+    reason: str = ""
+
+    @property
+    def score(self) -> float:
+        if not self.feasible or self.cost is None:
+            return math.inf
+        return self.cost.total_s
+
+
+class Evaluator:
+    """Memoizing cost-only evaluator for one (jaxpr, mesh, budget) problem."""
+
+    def __init__(self, closed, mesh: Mesh, budget_bytes: Optional[float] = None,
+                 optimize: bool = True):
+        self.closed = closed
+        self.mesh = mesh
+        self.budget_bytes = budget_bytes
+        self.optimize = optimize
+        self.cache: Dict[tuple, Evaluation] = {}
+        self.lowerings = 0  # actual (non-memoized) cost lowerings
+
+    def key(self, assignment: Sequence[MaybeSharding]) -> tuple:
+        return tuple(
+            s.dims_mapping if s is not None else None for s in assignment
+        )
+
+    def __call__(self, assignment: Sequence[MaybeSharding]) -> Evaluation:
+        key = self.key(assignment)
+        hit = self.cache.get(key)
+        if hit is not None:
+            return hit
+        self.lowerings += 1
+        try:
+            cost = lower_for_cost(
+                self.closed, list(assignment), self.mesh, optimize=self.optimize
+            )
+        except PlanError as e:
+            ev = Evaluation(None, False, f"plan: {e}")
+        else:
+            if self.budget_bytes is not None and cost.peak_bytes > self.budget_bytes:
+                ev = Evaluation(cost, False, "over memory budget")
+            else:
+                ev = Evaluation(cost, True)
+        self.cache[key] = ev
+        return ev
+
+    def invar_shapes(self) -> List[Tuple[int, ...]]:
+        return [tuple(v.aval.shape) for v in self.closed.jaxpr.invars]
+
+    def invar_dtype_bytes(self) -> List[int]:
+        return [int(np.dtype(v.aval.dtype).itemsize)
+                for v in self.closed.jaxpr.invars]

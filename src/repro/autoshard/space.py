@@ -1,0 +1,135 @@
+"""Candidate sharding spaces for the autoshard search (Automap/PartIR-style).
+
+Per searched tensor, the space is every way of distributing the mesh axes over
+the tensor dims — replicated, one dim per axis, stacked (one dim holding
+several axes, both orders), and multi-dim splits — pruned by:
+
+* **divisibility**: the reference partitioner's reshard planner requires even
+  shards, so an axis whose size does not divide the dim (given the axes
+  already stacked on it) is not a candidate;
+* the **per-device live-memory model**: a candidate whose local shard alone
+  exceeds the memory budget can never appear in a feasible assignment, so it
+  is dropped before search (:func:`local_bytes` / :func:`fits_budget`).
+
+``None`` is always part of the per-tensor space: it means "leave this tensor
+to propagation" — the GSPMD premise that most tensors need no annotation.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.sharding import Mesh, Sharding, replicated
+
+MaybeSharding = Optional[Sharding]
+
+
+def _divisible(shape: Tuple[int, ...], dims_mapping, mesh: Mesh) -> bool:
+    for d, axes in enumerate(dims_mapping):
+        n = 1
+        for a in axes:
+            n *= mesh.axis_size(a)
+            if shape[d] % n:
+                return False
+    return True
+
+
+def candidate_shardings(
+    shape: Sequence[int],
+    mesh: Mesh,
+    max_candidates: int = 32,
+    dtype_bytes: int = 4,
+    budget_bytes: Optional[float] = None,
+) -> List[Sharding]:
+    """Every divisible placement of mesh axes over ``shape``'s dims.
+
+    Enumerates all assignments of each mesh axis to one tensor dim (or to
+    none), in every stacking order, keeps the divisible ones, and sorts by
+    local shard size (most-sharded first) so a truncation by
+    ``max_candidates`` keeps the memory-relieving candidates.  ``budget_bytes``
+    drops candidates whose local shard cannot fit at all.
+    """
+    shape = tuple(int(s) for s in shape)
+    rank = len(shape)
+    if rank == 0:
+        return [replicated(mesh, 0)]
+    out: List[Sharding] = []
+    seen = set()
+    axes = mesh.axis_names
+    # each axis goes to one dim or stays unused: itertools.product over
+    # (rank+1) placements per axis; stacked order = axis listing order, so
+    # permutations of the axis tuple cover both stacking orders
+    for perm in itertools.permutations(axes):
+        for placement in itertools.product(range(rank + 1), repeat=len(axes)):
+            dm: List[Tuple[str, ...]] = [() for _ in range(rank)]
+            for a, p in zip(perm, placement):
+                if p < rank:
+                    dm[p] = dm[p] + (a,)
+            key = tuple(dm)
+            if key in seen:
+                continue
+            seen.add(key)
+            if not _divisible(shape, key, mesh):
+                continue
+            s = Sharding(mesh, key)
+            if budget_bytes is not None and local_bytes(shape, dtype_bytes, s) > budget_bytes:
+                continue
+            out.append(s)
+    out.sort(key=lambda s: (local_bytes(shape, 4, s), repr(s)))
+    return out[:max_candidates]
+
+
+def local_bytes(shape: Sequence[int], dtype_bytes: int, sharding: MaybeSharding) -> float:
+    """Per-device bytes of one tensor under ``sharding`` (even shards)."""
+    b = float(dtype_bytes)
+    for d, s in enumerate(shape):
+        n = sharding.num_shards(d) if sharding is not None else 1
+        b *= -(-s // n)  # ceil: §4.1 padded shard size
+    return b
+
+
+def assignment_bytes(
+    shapes: Sequence[Tuple[int, ...]],
+    dtype_bytes: Sequence[int],
+    assignment: Sequence[MaybeSharding],
+) -> float:
+    """Resident per-device bytes of an input assignment (params + batch).
+
+    ``None`` entries are counted replicated — the conservative upper bound
+    for a tensor left to propagation (propagation only ever *refines*, i.e.
+    shards more).
+    """
+    return sum(
+        local_bytes(shape, db, s)
+        for shape, db, s in zip(shapes, dtype_bytes, assignment)
+    )
+
+
+def fits_budget(
+    shapes: Sequence[Tuple[int, ...]],
+    dtype_bytes: Sequence[int],
+    assignment: Sequence[MaybeSharding],
+    budget_bytes: Optional[float],
+) -> bool:
+    if budget_bytes is None:
+        return True
+    return assignment_bytes(shapes, dtype_bytes, assignment) <= budget_bytes
+
+
+def swap_axes(s: MaybeSharding, a: str, b: str) -> MaybeSharding:
+    """Exchange two mesh axes everywhere in one sharding (search move)."""
+    if s is None:
+        return None
+    table = {a: b, b: a}
+    return Sharding(s.mesh, tuple(
+        tuple(table.get(x, x) for x in axes) for axes in s.dims_mapping
+    ))
+
+
+def flip_dims(s: Sharding, d1: int, d2: int) -> Sharding:
+    """Exchange the axis tuples of two dims (batch-vs-model style flip)."""
+    dm = list(s.dims_mapping)
+    dm[d1], dm[d2] = dm[d2], dm[d1]
+    return Sharding(s.mesh, tuple(dm))

@@ -335,6 +335,57 @@ _CANDIDATES = (
 LATTICE_SEARCH = True
 SEARCH_NODE_BUDGET = 4096
 
+# telemetry: how often the bounded search actually hits its bounds.  The
+# ROADMAP claim "no cell hits the cap today" is guarded via BENCH_plan.json;
+# compile_plan snapshots the delta into plan.stats.lattice.  Guarded by a
+# lock: plan lowering may run from multiple threads (autoshard evaluators).
+import threading as _threading
+
+_TELEMETRY_LOCK = _threading.Lock()
+_TELEMETRY = {"searches": 0, "node_cap_hits": 0, "depth_cap_hits": 0}
+_TELEMETRY_TLS = _threading.local()  # per-thread mirror for delta snapshots
+
+
+def search_telemetry() -> Dict[str, int]:
+    """Snapshot of the process-wide lattice-search counters (monotone since
+    process start or the last :func:`reset_search_telemetry`)."""
+    with _TELEMETRY_LOCK:
+        return dict(_TELEMETRY)
+
+
+def thread_search_telemetry() -> Dict[str, int]:
+    """This thread's own counters — delta arithmetic on these is immune to
+    concurrent lowering in other threads (autoshard evaluators)."""
+    counts = getattr(_TELEMETRY_TLS, "counts", None)
+    if counts is None:
+        counts = _TELEMETRY_TLS.counts = {
+            "searches": 0, "node_cap_hits": 0, "depth_cap_hits": 0,
+        }
+    return dict(counts)
+
+
+def reset_search_telemetry() -> None:
+    with _TELEMETRY_LOCK:
+        for k in _TELEMETRY:
+            _TELEMETRY[k] = 0
+
+
+def _record_search(node_cap: bool, depth_cap: bool) -> None:
+    tls = getattr(_TELEMETRY_TLS, "counts", None)
+    if tls is None:
+        tls = _TELEMETRY_TLS.counts = {
+            "searches": 0, "node_cap_hits": 0, "depth_cap_hits": 0,
+        }
+    tls["searches"] += 1
+    with _TELEMETRY_LOCK:
+        _TELEMETRY["searches"] += 1
+        if node_cap:
+            _TELEMETRY["node_cap_hits"] += 1
+            tls["node_cap_hits"] += 1
+        if depth_cap:
+            _TELEMETRY["depth_cap_hits"] += 1
+            tls["depth_cap_hits"] += 1
+
 
 def _search_worthwhile(src: Sharding, dst: Sharding) -> bool:
     """Gate: greedy is provably fine on 1-2 plain axes; search only pays on
@@ -397,6 +448,7 @@ def _candidate_search(
     best_steps: Optional[List[CollectiveStep]] = None
     budget = SEARCH_NODE_BUDGET
     max_depth = 2 * (len(set(src.sharded_axes) | set(dst.sharded_axes)) + 1) + 2
+    depth_cap_hit = False
     seen: Dict[Tuple, float] = {}
     stack: List[Tuple[Sharding, Tuple[int, ...], float, Tuple[CollectiveStep, ...]]] = [
         (src, tuple(local_shape), 0.0, ())
@@ -409,6 +461,7 @@ def _candidate_search(
                 best_cost, best_steps = cost, list(steps)
             continue
         if len(steps) >= max_depth:
+            depth_cap_hit = True
             continue
         key = (work.dims_mapping, shape)
         prev = seen.get(key)
@@ -427,6 +480,7 @@ def _candidate_search(
             except PlanError:
                 continue
             stack.append((w2, s2, cost + c, steps + (mv,)))
+    _record_search(node_cap=budget == 0 and bool(stack), depth_cap=depth_cap_hit)
     return best_steps
 
 

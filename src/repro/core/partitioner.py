@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from typing import Dict, List, Optional
 
 import jax
@@ -170,16 +171,34 @@ class SpmdPartitioner:
 
     def _elementwise(self, eqn):
         vals, shs = zip(*(self.read(v) for v in eqn.invars))
-        rank = eqn.outvars[0].aval.ndim
+        ov0 = eqn.outvars[0]
+        rank = ov0.aval.ndim
+        out_shape = tuple(ov0.aval.shape)
+
+        def gshape(iv, val):
+            aval = getattr(iv, "aval", None)
+            return tuple(aval.shape) if aval is not None else tuple(np.shape(val))
+
+        def mask_bcast(shape, s: Sharding) -> Sharding:
+            # size-1 broadcast dims must stay replicated on that operand:
+            # every shard needs the single value (matches plan.PlanBuilder)
+            return Sharding(self.mesh, tuple(
+                s.dims_mapping[d] if shape[d] == out_shape[d] else ()
+                for d in range(rank)
+            ))
+
         tgt = None
-        for s, v in zip(shs, vals):
-            if np.ndim(v) == rank:
-                tgt = s if tgt is None else (merge_shardings(tgt, s) or tgt)
+        for iv, s, v in zip(eqn.invars, shs, vals):
+            shape = gshape(iv, v)
+            if len(shape) == rank:
+                m = mask_bcast(shape, s)
+                tgt = m if tgt is None else (merge_shardings(tgt, m) or tgt)
         if tgt is None:
             tgt = replicated(self.mesh, rank)
         new_vals = [
-            self._to(v, s, tgt) if np.ndim(v) == rank else v
-            for v, s in zip(vals, shs)
+            self._to(v, s, mask_bcast(gshape(iv, v), tgt))
+            if len(gshape(iv, v)) == rank else v
+            for iv, v, s in zip(eqn.invars, vals, shs)
         ]
         subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
         out = eqn.primitive.bind(*subfuns, *new_vals, **bind_params)
@@ -395,8 +414,32 @@ class SpmdPartitioner:
 
 @dataclasses.dataclass
 class PlanCacheStats:
+    """Hit/miss counters for a plan cache.
+
+    Increment through :meth:`record_hit` / :meth:`record_miss` — the counters
+    are lock-guarded so concurrent runners (and autoshard's repeated
+    lowering calls from evaluator threads) cannot drop updates between the
+    read and the write of a bare ``+= 1``.
+    """
+
     hits: int = 0
     misses: int = 0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False,
+    )
+
+    def record_hit(self) -> None:
+        with self._lock:
+            self.hits += 1
+
+    def record_miss(self) -> None:
+        with self._lock:
+            self.misses += 1
+
+    def reset(self) -> None:
+        with self._lock:
+            self.hits = 0
+            self.misses = 0
 
     @property
     def hit_rate(self) -> float:
@@ -469,12 +512,12 @@ def process_plan_cache_stats() -> PlanCacheStats:
 
 def clear_process_plan_cache() -> None:
     _PROCESS_CACHE.clear()
-    _PROCESS_STATS.hits = 0
-    _PROCESS_STATS.misses = 0
+    _PROCESS_STATS.reset()
 
 
 def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
-                   optimize: bool = True, process_cache: bool = True):
+                   optimize: bool = True, process_cache: bool = True,
+                   autoshard=None):
     """Partition ``fn`` with the reference partitioner and return a callable that
     runs the SPMD program over ``jmesh`` via shard_map.
 
@@ -495,6 +538,14 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
     process-level plan cache (shared across ``spmd_partition`` call sites,
     keyed by jaxpr digest + mesh + avals).
 
+    ``autoshard`` (an :class:`repro.autoshard.AutoshardConfig`) makes the
+    partitioner *annotation-free*: instead of relying on ``annotate`` seeds in
+    ``fn``, the traced jaxpr's input shardings are found by the autoshard
+    search (cost-only lowering under the roofline model) and fed to
+    propagation as seeds.  The searched assignment is cached process-wide by
+    jaxpr digest + mesh + config, so repeat call sites pay for the search
+    once.
+
     The returned runner exposes ``runner.cache_stats`` (hits/misses) and
     ``runner.plans`` (cache-key → PartitionPlan) for tests and reporting.
     """
@@ -508,13 +559,29 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
             pkey = (
                 _jaxpr_digest(closed), mesh.structural_key(), _jmesh_key(jmesh),
                 tuple(_aval_key(a) for a in args), compile_plans, optimize,
+                autoshard.cache_key() if autoshard is not None else None,
             )
             entry = _PROCESS_CACHE.get(pkey)
             if entry is not None:
-                _PROCESS_STATS.hits += 1
+                _PROCESS_STATS.record_hit()
                 return entry
-            _PROCESS_STATS.misses += 1
-        prop = propagate(closed, mesh)
+            _PROCESS_STATS.record_miss()
+        in_seeds = None
+        if autoshard is not None:
+            from repro.autoshard.api import solve_jaxpr_cached
+
+            shard_res = solve_jaxpr_cached(closed, mesh, autoshard)
+            if not shard_res.evaluation.feasible:
+                # never silently drop the caller's constraints (e.g. an
+                # unmeetable memory budget) — fall back explicitly instead
+                raise ValueError(
+                    "autoshard: no feasible assignment found "
+                    f"({shard_res.evaluation.reason or 'search exhausted'}); "
+                    "relax AutoshardConfig.budget_bytes or widen the search "
+                    "(top_n / sa_steps / max_candidates)"
+                )
+            in_seeds = shard_res.assignment
+        prop = propagate(closed, mesh, in_shardings=in_seeds)
         in_specs = tuple(
             to_partition_spec(prop.get(v) or replicated(mesh, v.aval.ndim))
             for v in closed.jaxpr.invars
@@ -555,11 +622,11 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
         key = (mesh.structural_key(), tuple(_aval_key(a) for a in args))
         entry = cache.get(key)
         if entry is None:
-            stats.misses += 1
+            stats.record_miss()
             entry = _build(args)
             cache[key] = entry
         else:
-            stats.hits += 1
+            stats.record_hit()
         return entry.call(*args)
 
     runner.cache_stats = stats

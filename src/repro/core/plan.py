@@ -31,11 +31,27 @@ no propagation, no per-op classification, no reshard search.
 (and process-wide by jaxpr digest), so steady-state calls skip ``make_jaxpr``,
 propagation, and all per-equation Python dispatch.
 
+Output-epilogue reshards (jaxpr outputs whose propagated sharding differs from
+the sharding the body leaves them in) are *first-class steps* too: the plan
+records, per output, an env key (``out_keys``) that execution reads at the end,
+and the epilogue reshard writes a :class:`ProxyVar` key like any other reshard.
+That makes epilogue collectives visible to CSE / DCE / fusion.
+
 The plan also carries :class:`PlanStats` — planned-collective counts and the
 modeled reshard wire bytes — and, after optimization, an
 ``opt_report`` (:class:`repro.core.plan_opt.OptReport`) with per-pass savings,
 consumed by the analysis/benchmark layer (``benchmarks/plan_smoke.py`` →
 ``BENCH_plan.json``).
+
+Cost-only lowering
+------------------
+:func:`lower_for_cost` runs the same propagation → lowering → optimizer
+pipeline but swaps every step's runner for a raising stub — no shard_map, no
+jit, no execution — and returns a :class:`PlanCost`: modeled collective wire
+bytes + launches, per-device compute FLOPs vs the ideal (flops/num_devices)
+balance point, and a per-device live-memory peak from a liveness walk over the
+step list.  This is the scoring function the autoshard search
+(``repro.autoshard``) minimizes; each candidate evaluation is pure planning.
 """
 from __future__ import annotations
 
@@ -111,6 +127,10 @@ class PlanStep:
     lshape: Tuple[int, ...] = ()  # local shape of reads[0] on entry
     dbytes: int = 0
     dtype: str = ""
+    # -- cost-model annotations (consumed by lower_for_cost / PlanCost) -----
+    flops: float = 0.0  # per-device local FLOPs of this step
+    wbytes: Tuple[float, ...] = ()  # local bytes of each write (memory model)
+    transient_bytes: float = 0.0  # inner-plan live peak (scan/pjit steps)
 
     @property
     def in_bytes(self) -> float:
@@ -118,6 +138,13 @@ class PlanStep:
         for s in self.lshape:
             b *= s
         return b
+
+
+def _nbytes_of(shape: Tuple[int, ...], dbytes: int) -> float:
+    b = float(dbytes)
+    for s in shape:
+        b *= s
+    return b
 
 
 def _read(env: Env, v):
@@ -141,6 +168,13 @@ def _reshard_run(prog: ReshardProgram):
         _write(env, writes[0], execute_program(_read(env, reads[0]), prog))
 
     return run
+
+
+def _cost_only_run(env, reads, writes):  # pragma: no cover - guard rail
+    raise RuntimeError(
+        "cost-only plan executed: this plan was lowered via lower_for_cost "
+        "and carries no runnables"
+    )
 
 
 def _collective_run(axes: Tuple[str, ...], reduce_op: str):
@@ -178,6 +212,10 @@ class PlanStats:
     legacy_bytes: float = 0.0  # reference: pre-planner greedy schedule
     eqns: int = 0
     steps: int = 0
+    # lattice-search telemetry delta accumulated while this plan compiled
+    # (searches run / node-budget exhaustions / depth-cap prunes); filled by
+    # compile_plan from collective_planner.search_telemetry()
+    lattice: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def count(self, kind: str, n: int = 1) -> None:
         self.collectives[kind] = self.collectives.get(kind, 0) + n
@@ -211,6 +249,7 @@ class PlanStats:
             "legacy_bytes": self.legacy_bytes,
             "eqns": self.eqns,
             "steps": self.steps,
+            "lattice": dict(self.lattice),
         }
 
 
@@ -221,7 +260,14 @@ class PlanStats:
 
 @dataclasses.dataclass
 class PartitionPlan:
-    """A fully resolved partitioning of one jaxpr over one mesh."""
+    """A fully resolved partitioning of one jaxpr over one mesh.
+
+    ``out_keys`` holds one env key per jaxpr output: the outvar itself when the
+    body already leaves it in the propagated output sharding, or the
+    :class:`ProxyVar` written by the output-epilogue reshard *step* otherwise
+    (epilogue reshards live in ``steps`` like every other collective, so the
+    optimizer passes see them).
+    """
 
     jaxpr: excore.Jaxpr
     consts: Tuple
@@ -229,9 +275,10 @@ class PartitionPlan:
     steps: List[PlanStep]
     in_shardings: List[Sharding]
     out_shardings: List[Sharding]
-    out_programs: List[Optional[ReshardProgram]]
+    out_keys: List[object]
     stats: PlanStats
     opt_report: Optional[object] = None  # plan_opt.OptReport after optimization
+    peak_bytes: float = 0.0  # modeled per-device live-memory peak (cost model)
 
     def execute(self, *args):
         """Run the plan on local shards (inside a shard_map region)."""
@@ -242,11 +289,12 @@ class PartitionPlan:
             env[v] = a
         for step in self.steps:
             step.run(env, step.reads, step.writes)
-        outs = []
-        for v, prog in zip(self.jaxpr.outvars, self.out_programs):
-            val = _read(env, v)
-            outs.append(execute_program(val, prog) if prog is not None else val)
-        return tuple(outs)
+        return tuple(_read(env, k) for k in self.out_keys)
+
+    def total_flops(self) -> float:
+        """Modeled per-device FLOPs of one plan execution (scan bodies are
+        already multiplied by trip count at emit time)."""
+        return sum(s.flops for s in self.steps)
 
 
 # ---------------------------------------------------------------------------------
@@ -373,6 +421,7 @@ class PlanBuilder:
         mesh: Mesh,
         stats: Optional[PlanStats] = None,
         optimize: bool = True,
+        cost_only: bool = False,
     ):
         self.jaxpr = jaxpr
         self.consts = tuple(consts)
@@ -382,6 +431,7 @@ class PlanBuilder:
         self.steps: List[PlanStep] = []
         self.stats = stats if stats is not None else PlanStats()
         self.optimize = optimize
+        self.cost_only = cost_only
 
     # -- sharding/shape bookkeeping ---------------------------------------------
     def sharding_of(self, v) -> Sharding:
@@ -437,13 +487,39 @@ class PlanBuilder:
 
     # -- step emission helpers ---------------------------------------------------
     def emit(self, step: PlanStep) -> None:
+        if self.cost_only:
+            step.run = _cost_only_run
+        if not step.wbytes:
+            # memory model: local bytes of each written value.  Vars with a
+            # recorded sharding are exact; proxies without an explicit hint
+            # from the handler fall back to the step's input bytes.
+            wb = []
+            for w in step.writes:
+                if (not isinstance(w, (ProxyVar, core.DropVar))
+                        and w in self.sh
+                        and hasattr(w, "aval")):
+                    wb.append(_nbytes_of(
+                        shard_shape(tuple(w.aval.shape), self.sh[w]),
+                        self._dbytes(w)))
+                else:
+                    wb.append(step.in_bytes)
+            step.wbytes = tuple(wb)
         self.steps.append(step)
 
     def emit_reshard(self, src_key, out_key, prog: ReshardProgram,
                      lshape: Tuple[int, ...], dbytes: int, dtype: str) -> None:
+        # local size after the program: gathers grow the shard, slices shrink it
+        factor = 1.0
+        for s in prog.steps:
+            n = self.mesh.axis_size(s.axis)
+            if s.op == "all_gather":
+                factor *= n
+            elif s.op == "dynamic_slice":
+                factor /= n
         self.emit(PlanStep(
             "reshard", (src_key,), (out_key,), _reshard_run(prog),
             op="reshard", program=prog, lshape=lshape, dbytes=dbytes, dtype=dtype,
+            wbytes=(_nbytes_of(lshape, dbytes) * factor,),
         ))
 
     def emit_collective(self, src_key, out_key, axes: Tuple[str, ...],
@@ -453,6 +529,7 @@ class PlanBuilder:
             "collective", (src_key,), (out_key,), _collective_run(axes, reduce_op),
             op="all-reduce", axes=axes, reduce_op=reduce_op,
             lshape=lshape, dbytes=dbytes, dtype=dtype,
+            wbytes=(_nbytes_of(lshape, dbytes),),
         ))
 
     def reshard_operand(self, v, tgt: Sharding):
@@ -492,21 +569,32 @@ class PlanBuilder:
         for idx, eqn in enumerate(self.jaxpr.eqns):
             self.stats.eqns += 1
             self.eqn(idx, eqn)
-        out_shardings, out_programs = [], []
+        # output epilogue: reshards to the propagated output shardings are
+        # first-class steps writing proxy keys, so CSE/DCE/fusion price them
+        out_shardings: List[Sharding] = []
+        out_keys: List[object] = []
         for v in self.jaxpr.outvars:
             cur = self.sharding_of(v)
             want = self.prop.get(v) or replicated(self.mesh, len(self._gshape(v)))
-            prog = None
+            key: object = v
             if not isinstance(v, excore.Literal) and cur.dims_mapping != want.dims_mapping:
-                prog = plan_reshard(cur, want, self._lshape(v), self._dbytes(v))
-                self._account(prog, self._lshape(v), self._dbytes(v))
-            out_programs.append(prog)
+                lshape, dbytes = self._lshape(v), self._dbytes(v)
+                prog = plan_reshard(cur, want, lshape, dbytes)
+                self._account(prog, lshape, dbytes)
+                key = ProxyVar(f"out:{cur}->{want}")
+                self.emit_reshard(v, key, prog, lshape, dbytes, self._dtype(v))
+            out_keys.append(key)
             out_shardings.append(want)
         self.stats.steps = len(self.steps)
-        return PartitionPlan(
+        plan = PartitionPlan(
             self.jaxpr, self.consts, self.mesh, self.steps,
-            in_shardings, out_shardings, out_programs, self.stats,
+            in_shardings, out_shardings, out_keys, self.stats,
         )
+        # the optimizer pipeline recomputes the peak after its passes; only
+        # pay for the liveness walk here when no optimization will follow
+        if not self.optimize:
+            plan.peak_bytes = plan_peak_bytes(plan)
+        return plan
 
     # -- per-equation lowering ----------------------------------------------------
     def eqn(self, idx: int, eqn) -> None:
@@ -600,6 +688,12 @@ class PlanBuilder:
             else eplan.final_sharding
         )
         zshape = shard_shape(tuple(ov.aval.shape), pre_out_sh)
+        # per-device local FLOPs: 2 · |local output| · |local contraction|
+        k_local = 1.0
+        lhs_local = eplan.lhs_local if eplan.lhs_local is not None else ls
+        for ci in lc:
+            k_local *= self._gshape(lv)[ci] / max(lhs_local.num_shards(ci), 1)
+        local_flops = 2.0 * float(np.prod(zshape or (1,))) * k_local
         # einsum + scatter stay in one compute step; trailing AllReduce and the
         # output reshard become their own steps (bucketing / CSE candidates)
         exec_plan = dataclasses.replace(
@@ -613,7 +707,9 @@ class PlanBuilder:
             z, _ = execute_einsum(exec_plan, _read(env, reads[0]), _read(env, reads[1]), pet)
             _write(env, writes[0], z)
 
-        self.emit(PlanStep("compute", (lk, rk), (mid,), run, op="dot_general"))
+        self.emit(PlanStep("compute", (lk, rk), (mid,), run, op="dot_general",
+                           flops=local_flops,
+                           wbytes=(_nbytes_of(zshape, odb),)))
         cur_key = mid
         if eplan.reduce_axes:
             nxt = ov if eplan.out_program is None else ProxyVar("dot.psum")
@@ -624,22 +720,36 @@ class PlanBuilder:
             self.emit_reshard(cur_key, ov, eplan.out_program, zshape, odb, odt)
 
     def _elementwise(self, eqn) -> None:
-        rank = eqn.outvars[0].aval.ndim
+        ov0 = eqn.outvars[0]
+        rank = ov0.aval.ndim
+        out_shape = tuple(ov0.aval.shape)
+
+        def mask_bcast(v, s: Sharding) -> Sharding:
+            # a size-1 broadcast dim cannot carry the merged sharding: every
+            # shard needs the (single) value, so the dim must stay replicated
+            shape = self._gshape(v)
+            return Sharding(self.mesh, tuple(
+                s.dims_mapping[d] if shape[d] == out_shape[d] else ()
+                for d in range(rank)
+            ))
+
         tgt: Optional[Sharding] = None
         for v in eqn.invars:
             if len(self._gshape(v)) == rank:
-                s = self.sharding_of(v)
+                s = mask_bcast(v, self.sharding_of(v))
                 tgt = s if tgt is None else (merge_shardings(tgt, s) or tgt)
         if tgt is None:
             tgt = replicated(self.mesh, rank)
         keys = tuple(
-            self.reshard_operand(v, tgt) if len(self._gshape(v)) == rank else v
+            self.reshard_operand(v, mask_bcast(v, tgt))
+            if len(self._gshape(v)) == rank else v
             for v in eqn.invars
         )
         subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
         prim, outvars = eqn.primitive, tuple(eqn.outvars)
         for ov in outvars:
             self.set_sharding(ov, tgt)
+        local_out = float(np.prod(shard_shape(out_shape, tgt) or (1,)))
 
         def run(env, reads, writes, prim=prim, subfuns=subfuns, bind_params=bind_params):
             vals = [_read(env, k) for k in reads]
@@ -648,7 +758,8 @@ class PlanBuilder:
             for w, o in zip(writes, outs):
                 _write(env, w, o)
 
-        self.emit(PlanStep("compute", keys, outvars, run, op=prim.name))
+        self.emit(PlanStep("compute", keys, outvars, run, op=prim.name,
+                           flops=local_out * len(outvars)))
 
     def _reduce(self, eqn) -> None:
         iv, ov = eqn.invars[0], eqn.outvars[0]
@@ -674,7 +785,16 @@ class PlanBuilder:
         def run(env, reads, writes, prim=prim, subfuns=subfuns, bind_params=bind_params):
             _write(env, writes[0], prim.bind(*subfuns, _read(env, reads[0]), **bind_params))
 
-        self.emit(PlanStep("compute", (key,), (mid,), run, op=name))
+        in_local = (
+            shard_shape(self._gshape(iv), replicated(self.mesh, sh.rank))
+            if key is not iv else self._lshape(iv)
+        )
+        self.emit(PlanStep(
+            "compute", (key,), (mid,), run, op=name,
+            flops=float(np.prod(in_local or (1,))),
+            wbytes=(_nbytes_of(shard_shape(tuple(ov.aval.shape), osh),
+                               self._dbytes(ov)),),
+        ))
         if psum_axes:
             reduce_op = {"reduce_sum": "add", "reduce_max": "max", "reduce_min": "min"}[name]
             self.emit_collective(
@@ -782,7 +902,14 @@ class PlanBuilder:
                 )
                 _write(env, writes[0], out)
 
-            self.emit(PlanStep("compute", (lv, rk), (mid,), run, op="conv"))
+            rsh = self._gshape(rv)
+            k_per_out = (int(np.prod(rsh)) // max(rsh[0], 1)) / max(n, 1)
+            out_local = shard_shape(tuple(ov.aval.shape), osh)
+            self.emit(PlanStep(
+                "compute", (lv, rk), (mid,), run, op="conv",
+                flops=2.0 * float(np.prod(out_local or (1,))) * k_per_out,
+                wbytes=(_nbytes_of(out_local, self._dbytes(ov)),),
+            ))
             self.emit_collective(
                 mid, ov, ax, "add",
                 shard_shape(tuple(ov.aval.shape), osh), self._dbytes(ov), self._dtype(ov),
@@ -805,7 +932,13 @@ class PlanBuilder:
                 ),
             )
 
-        self.emit(PlanStep("compute", (lv, rk), (ov,), run, op="conv"))
+        rsh = self._gshape(rv)
+        out_local = shard_shape(tuple(ov.aval.shape), self.sharding_of(ov))
+        self.emit(PlanStep(
+            "compute", (lv, rk), (ov,), run, op="conv",
+            flops=2.0 * float(np.prod(out_local or (1,)))
+            * (int(np.prod(rsh)) // max(rsh[0], 1)),
+        ))
 
     def _iota(self, eqn) -> None:
         prim, params, ov = eqn.primitive, eqn.params, eqn.outvars[0]
@@ -848,7 +981,7 @@ class PlanBuilder:
         inner_res = PropagationResult(inner_res.jaxpr, self.mesh, env, inner_res.sub)
         builder = PlanBuilder(
             sub.jaxpr, sub.consts, inner_res, self.mesh, stats=self.stats,
-            optimize=self.optimize,
+            optimize=self.optimize, cost_only=self.cost_only,
         )
         inner_plan = self._optimize_inner(builder.build())
         for ov, osh in zip(eqn.outvars, inner_plan.out_shardings):
@@ -860,7 +993,11 @@ class PlanBuilder:
             for w, o in zip(writes, outs):
                 _write(env, w, o)
 
-        self.emit(PlanStep("compute", tuple(keys), outvars, run, op="pjit"))
+        self.emit(PlanStep(
+            "compute", tuple(keys), outvars, run, op="pjit",
+            flops=inner_plan.total_flops(),
+            transient_bytes=inner_plan.peak_bytes,
+        ))
 
     def _scan(self, idx: int, eqn) -> None:
         p = eqn.params
@@ -897,7 +1034,7 @@ class PlanBuilder:
         inner_res = PropagationResult(inner_res.jaxpr, self.mesh, env, inner_res.sub)
         builder = PlanBuilder(
             body, closed.consts, inner_res, self.mesh, stats=self.stats,
-            optimize=self.optimize,
+            optimize=self.optimize, cost_only=self.cost_only,
         )
         inner_plan = self._optimize_inner(builder.build())
         # carry consistency: carry-out must leave the body in the carry-in
@@ -948,7 +1085,12 @@ class PlanBuilder:
             for w, o in zip(writes, list(carry) + list(ys)):
                 _write(env, w, o)
 
-        self.emit(PlanStep("compute", tuple(keys), outvars, run, op="scan"))
+        trips = length if length is not None else 1
+        self.emit(PlanStep(
+            "compute", tuple(keys), outvars, run, op="scan",
+            flops=trips * inner_plan.total_flops(),
+            transient_bytes=inner_plan.peak_bytes,
+        ))
 
     # -- fallback --------------------------------------------------------------------
     def _fallback(self, eqn) -> None:
@@ -1003,7 +1145,14 @@ class PlanBuilder:
                 for w, o in zip(writes, outs):
                     _write(env, w, o)
 
-            self.emit(PlanStep("compute", keys, tuple(mids), run, op=prim.name))
+            self.emit(PlanStep(
+                "compute", keys, tuple(mids), run, op=prim.name,
+                flops=float(sum(
+                    np.prod(shard_shape(tuple(ov.aval.shape), self.sh[ov]) or (1,))
+                    if ov in self.sh else 1.0
+                    for ov in outvars if hasattr(ov, "aval")
+                )),
+            ))
             for mid, ov, prog, lshape, db, dt in post:
                 self.emit_reshard(mid, ov, prog, lshape, db, dt)
             return
@@ -1041,7 +1190,13 @@ class PlanBuilder:
             for w, o in zip(writes, outs):
                 _write(env, w, o)
 
-        self.emit(PlanStep("compute", keys, tuple(mids), run, op=prim.name))
+        self.emit(PlanStep(
+            "compute", keys, tuple(mids), run, op=prim.name,
+            flops=float(sum(
+                np.prod(tuple(ov.aval.shape) or (1,))
+                for ov in outvars if hasattr(ov, "aval")
+            )),
+        ))
         for mid, ov, prog, lshape, db, dt in post:
             self.emit_reshard(mid, ov, prog, lshape, db, dt)
 
@@ -1056,6 +1211,7 @@ def compile_plan(
     prop: PropagationResult,
     mesh: Mesh,
     optimize: bool = True,
+    cost_only: bool = False,
 ) -> PartitionPlan:
     """Lower a propagated (closed) jaxpr into an executable PartitionPlan.
 
@@ -1064,11 +1220,156 @@ def compile_plan(
     dead-reshard elimination, and collective fusion.  The passes are
     semantics-preserving; ``optimize=False`` keeps the raw per-equation plan
     (used by benchmarks to measure what the pipeline saves).
+    ``cost_only=True`` replaces every step's runner with a raising stub — the
+    plan can be priced but never executed (autoshard candidate scoring).
     """
-    builder = PlanBuilder(closed.jaxpr, closed.consts, prop, mesh, optimize=optimize)
+    from .collective_planner import thread_search_telemetry
+
+    t0 = thread_search_telemetry()
+    builder = PlanBuilder(
+        closed.jaxpr, closed.consts, prop, mesh, optimize=optimize,
+        cost_only=cost_only,
+    )
     plan = builder.build()
     if optimize:
         from .plan_opt import optimize_plan
 
         plan = optimize_plan(plan)
+    t1 = thread_search_telemetry()
+    plan.stats.lattice = {k: t1[k] - t0[k] for k in t1}
     return plan
+
+
+# ---------------------------------------------------------------------------------
+# cost-only lowering (the autoshard scoring function)
+# ---------------------------------------------------------------------------------
+
+
+def plan_peak_bytes(plan: PartitionPlan) -> float:
+    """Modeled per-device live-memory peak of one plan execution.
+
+    Inputs and consts are resident for the whole step (params are not
+    donated); intermediates are allocated at their producing step (each
+    step's ``wbytes``) and freed after their last reader.  ``scan``/``pjit``
+    steps add their inner plan's peak as a transient while they run.
+    """
+    sizes: Dict[int, float] = {}
+    resident = 0.0
+    for v, s in zip(plan.jaxpr.invars, plan.in_shardings):
+        b = _nbytes_of(shard_shape(tuple(v.aval.shape), s),
+                       int(np.dtype(v.aval.dtype).itemsize))
+        sizes[id(v)] = b
+        resident += b
+    for v, c in zip(plan.jaxpr.constvars, plan.consts):
+        b = float(np.asarray(c).nbytes) if np.ndim(c) else float(
+            np.asarray(c).dtype.itemsize)
+        sizes[id(v)] = b
+        resident += b
+    pinned = set(sizes)  # inputs/consts never free
+    last_read: Dict[int, int] = {}
+    for i, step in enumerate(plan.steps):
+        for k in step.reads:
+            last_read[id(k)] = i
+    for i, k in enumerate(plan.out_keys):
+        last_read[id(k)] = len(plan.steps)  # outputs stay live to the end
+    live = resident
+    peak = live
+    alive: Dict[int, float] = {}
+    for i, step in enumerate(plan.steps):
+        for w, b in zip(step.writes, step.wbytes or ()):
+            if id(w) in pinned or isinstance(w, core.DropVar):
+                continue
+            alive[id(w)] = b
+            live += b
+        peak = max(peak, live + step.transient_bytes)
+        for k in list(alive):
+            if last_read.get(k, -1) <= i:
+                live -= alive.pop(k)
+    return peak
+
+
+@dataclasses.dataclass
+class PlanCost:
+    """Whole-program modeled cost of one lowered plan (cost-only mode).
+
+    The scalar objective (:attr:`total_s`) is the roofline collective term
+    (wire bytes / ICI bandwidth + per-launch overhead) plus the compute
+    *imbalance*: per-device FLOPs above the perfect-sharding floor
+    (global FLOPs / num devices), priced at peak FLOPs.  ``peak_bytes`` is a
+    constraint, not a term — the search rejects assignments above the budget.
+    """
+
+    wire_bytes: float
+    launches: int
+    flops_per_device: float
+    ideal_flops_per_device: float
+    peak_bytes: float
+    steps: int
+
+    @property
+    def collective_s(self) -> float:
+        from repro.analysis.roofline import COLLECTIVE_LAUNCH_S, ICI_BW
+
+        return self.wire_bytes / ICI_BW + self.launches * COLLECTIVE_LAUNCH_S
+
+    @property
+    def imbalance_s(self) -> float:
+        from repro.analysis.roofline import PEAK_FLOPS
+
+        return max(self.flops_per_device - self.ideal_flops_per_device, 0.0) / PEAK_FLOPS
+
+    @property
+    def total_s(self) -> float:
+        return self.collective_s + self.imbalance_s
+
+    def as_dict(self) -> Dict:
+        return {
+            "wire_bytes": self.wire_bytes,
+            "launches": self.launches,
+            "flops_per_device": self.flops_per_device,
+            "ideal_flops_per_device": self.ideal_flops_per_device,
+            "peak_bytes": self.peak_bytes,
+            "steps": self.steps,
+            "collective_s": self.collective_s,
+            "imbalance_s": self.imbalance_s,
+            "total_s": self.total_s,
+        }
+
+
+def plan_cost(plan: PartitionPlan) -> PlanCost:
+    """Price an already-lowered plan under the roofline cost model."""
+    from repro.analysis.jaxpr_cost import count_flops
+    from .plan_opt import _wire_bytes, count_collective_launches
+
+    return PlanCost(
+        wire_bytes=_wire_bytes(plan),
+        launches=count_collective_launches(plan.steps),
+        flops_per_device=plan.total_flops(),
+        ideal_flops_per_device=count_flops(plan.jaxpr) / max(plan.mesh.size, 1),
+        peak_bytes=plan.peak_bytes,  # filled by build()/optimize_plan()
+        steps=len(plan.steps),
+    )
+
+
+def lower_for_cost(
+    closed: excore.ClosedJaxpr,
+    in_shardings,
+    mesh: Mesh,
+    optimize: bool = True,
+) -> PlanCost:
+    """Propagate ``in_shardings`` seeds and lower to a PlanCost — no jit, no
+    execution, no runnables (every step runner is a raising stub).
+
+    ``in_shardings`` is one ``Optional[Sharding]`` per jaxpr invar; ``None``
+    entries are left for propagation to infer (the GSPMD premise: annotate a
+    few tensors, the compiler completes the rest).  Raises
+    :class:`~repro.core.collective_planner.PlanError` when the propagated
+    program demands a reshard the planner cannot express (infeasible
+    candidate — autoshard treats it as infinite cost).
+    """
+    from .propagation import propagate
+
+    prop = propagate(closed, mesh, in_shardings=list(in_shardings or []))
+    plan = compile_plan(closed, prop.result(), mesh, optimize=optimize,
+                        cost_only=True)
+    return plan_cost(plan)

@@ -125,11 +125,11 @@ class OptReport:
         }
 
 
-def count_collective_launches(steps: List[PlanStep], out_programs=()) -> int:
+def count_collective_launches(steps: List[PlanStep]) -> int:
     """Collective launches a plan will issue (wire collectives only;
-    DynamicSlice is local addressing, not a launch).  ``out_programs`` covers
-    the output epilogue, which the passes never touch but the before/after
-    report should still scope identically to the byte metric.
+    DynamicSlice is local addressing, not a launch).  Output-epilogue
+    reshards are ordinary steps since the out_keys refactor, so the step list
+    is the whole program.
 
     A psum over stacked axes is ONE launch (``lax.psum`` over the axes tuple
     reduces over the product group in one collective); note this differs from
@@ -141,9 +141,6 @@ def count_collective_launches(steps: List[PlanStep], out_programs=()) -> int:
             n += sum(1 for ps in s.program.steps if ps.op != "dynamic_slice")
         elif s.kind in ("collective", "fused"):
             n += 1
-    for prog in out_programs:
-        if prog is not None:
-            n += sum(1 for ps in prog.steps if ps.op != "dynamic_slice")
     return n
 
 
@@ -153,7 +150,9 @@ def count_collective_launches(steps: List[PlanStep], out_programs=()) -> int:
 
 
 def _roots(plan: PartitionPlan) -> set:
-    return {v for v in plan.jaxpr.outvars if not isinstance(v, excore.Literal)}
+    """Env keys execution reads at the end: must stay written (out_keys
+    covers both plain body outputs and epilogue-reshard proxies)."""
+    return {k for k in plan.out_keys if not isinstance(k, excore.Literal)}
 
 
 def reshard_cse(plan: PartitionPlan) -> PassReport:
@@ -245,28 +244,59 @@ def dead_reshard_elim(plan: PartitionPlan) -> PassReport:
 
 
 def sink_output_aliases(plan: PartitionPlan) -> PassReport:
-    """Move free alias steps whose result no *step* reads to the plan tail.
+    """Sink free alias steps down to just before their first reader (or to
+    the plan tail when nothing reads them).
 
-    CSE leaves aliases for duplicate reshards that feed jaxpr outputs, and
+    CSE leaves aliases for duplicate reshards that feed plan outputs, and
     annotate ops with matching shardings lower to aliases; when such an alias
     immediately follows a collective it *reads*, it pins that collective's
-    bucket (nothing may sink past a reader).  An alias read only by the output
-    epilogue can run arbitrarily late, so sinking it to the end re-exposes the
-    adjacency the fusion pass needs.  Pure reordering — zero collectives or
-    bytes change.
+    bucket (nothing may sink past a reader).  An alias is an env copy: it can
+    run arbitrarily late as long as it precedes its own readers — typically
+    the output-epilogue reshard steps at the tail — so sinking it re-exposes
+    the adjacency the fusion pass needs.  Pure reordering — zero collectives
+    or bytes change.
     """
     rep = PassReport("alias-sink")
-    read_ids = {id(k) for s in plan.steps for k in s.reads}
-    body: List[PlanStep] = []
-    tail: List[PlanStep] = []
-    for s in plan.steps:
-        if (s.kind == "compute" and s.run is _alias_run
-                and id(s.writes[0]) not in read_ids):
-            tail.append(s)
-        else:
-            body.append(s)
-    if tail:
-        plan.steps[:] = body + tail
+    steps = plan.steps
+    n = len(steps)
+    # one linear pass builds the reader map and the epilogue-step set
+    # (epilogue reshard steps write the proxy out_keys)
+    epi_writes = {id(k) for k in plan.out_keys if not isinstance(k, excore.Literal)}
+    epi_steps = set()
+    readers: Dict[int, List[int]] = {}
+    for j, s in enumerate(steps):
+        for k in s.reads:
+            readers.setdefault(id(k), []).append(j)
+        if s.kind == "reshard" and any(id(w) in epi_writes for w in s.writes):
+            epi_steps.add(j)
+    # stable-sort placement: unmoved step i keeps key (i, 0); a sinking alias
+    # gets key (first_reader, -1, i) — just before its first reader, after
+    # every unmoved step at first_reader-1, original order among ties.  All
+    # moves are downward (SSA: readers follow writers), so reads stay
+    # produced-before-consumed; a chain of sinking aliases keeps its internal
+    # write→read order because the reader's key is never below the writer's.
+    keys: List[tuple] = []
+    moved = False
+    for i, s in enumerate(steps):
+        key = (i, 0, i)
+        # alias steps only: annotate-without-reshard lowers to op="annotate",
+        # CSE duplicates to op="alias" (identified by op, not the run closure,
+        # so cost-only plans — whose runners are stubs — sink identically)
+        if s.kind == "compute" and s.op in ("alias", "annotate"):
+            rd = readers.get(id(s.writes[0]), [])
+            # sink only when every reader is output epilogue (an epilogue
+            # reshard runs as late as its inputs allow anyway) or nothing
+            # reads the alias; sinking past arbitrary steps would break
+            # fusion hoist adjacency
+            if all(j in epi_steps for j in rd):
+                first = rd[0] if rd else n
+                if first > i + 1:
+                    key = (first, -1, i)
+                    moved = True
+        keys.append(key)
+    if moved:
+        order = sorted(range(n), key=lambda i: keys[i])
+        steps[:] = [steps[i] for i in order]
     return rep
 
 
@@ -448,6 +478,8 @@ def fuse_collectives(plan: PartitionPlan, bucket_bytes: Optional[float] = None) 
                 reduce_op=reduce_op, lshape=(int(sum(
                     int(np.prod(g.lshape)) if g.lshape else 1 for g in group)),),
                 dbytes=group[0].dbytes, dtype=dtype,
+                # psum outputs keep each member's local size (memory model)
+                wbytes=tuple(g.in_bytes for g in group),
             )
             # stats: k psum launches (one count per axis each) become one
             plan.stats.count("all-reduce", -len(group) * len(axes))
@@ -463,6 +495,8 @@ def fuse_collectives(plan: PartitionPlan, bucket_bytes: Optional[float] = None) 
                 lshape=(int(sum(
                     int(np.prod(g.lshape)) if g.lshape else 1 for g in group)),),
                 dbytes=group[0].dbytes, dtype=dtype,
+                # each gathered output is n× its member's local size
+                wbytes=tuple(n * g.in_bytes for g in group),
             )
             plan.stats.count("all-gather", -len(group))
             plan.stats.count("fused-all-gather", 1)
@@ -504,9 +538,6 @@ def _wire_bytes(plan: PartitionPlan) -> float:
             total += _psum_wire_bytes(mesh, s.axes, s.in_bytes)
         elif s.kind == "fused":
             total += getattr(s, "_wire_bytes", 0.0)
-    for prog in plan.out_programs:
-        if prog is not None:
-            total += prog.cost_bytes
     return total
 
 
@@ -519,7 +550,7 @@ def optimize_plan(plan: PartitionPlan,
     with before/after wire bytes and collective-launch counts.
     """
     steps_before = len(plan.steps)
-    coll_before = count_collective_launches(plan.steps, plan.out_programs)
+    coll_before = count_collective_launches(plan.steps)
     bytes_before = _wire_bytes(plan)
     reports = [
         reshard_cse(plan),
@@ -533,8 +564,11 @@ def optimize_plan(plan: PartitionPlan,
         steps_before=steps_before,
         steps_after=len(plan.steps),
         collectives_before=coll_before,
-        collectives_after=count_collective_launches(plan.steps, plan.out_programs),
+        collectives_after=count_collective_launches(plan.steps),
         wire_bytes_before=bytes_before,
         wire_bytes_after=_wire_bytes(plan),
     )
+    from .plan import plan_peak_bytes
+
+    plan.peak_bytes = plan_peak_bytes(plan)
     return plan

@@ -61,11 +61,32 @@ class Propagation:
         return self.env.get(v)
 
     def refine(self, v, s: MaybeS) -> None:
-        """Merge ``s`` into v's sharding; refuses to alter locked dims."""
+        """Merge ``s`` into v's sharding; refuses to alter locked dims.
+
+        Mesh axes that do not divide the dim size are dropped (§4.1 fallback:
+        replicate rather than fail) — the reference partitioner's reshard
+        planner requires even shards, so propagating a non-dividing axis would
+        only produce an unlowerable plan.  Stacked axes are cut at the first
+        non-dividing position (shards stack product-wise).
+        """
         if s is None or isinstance(v, excore.Literal):
             return
         if getattr(v.aval, "ndim", None) != s.rank:
             return
+        shape = getattr(v.aval, "shape", None)
+        if shape is not None and len(shape) == s.rank:
+            dm, masked = [], False
+            for d, axes in enumerate(s.dims_mapping):
+                kept, n = [], 1
+                for a in axes:
+                    n *= s.mesh.axis_size(a)
+                    if shape[d] % n:
+                        masked = True
+                        break
+                    kept.append(a)
+                dm.append(tuple(kept))
+            if masked:
+                s = Sharding(s.mesh, tuple(dm))
         cur = self.env.get(v)
         locked = self.locked.get(v)
         if locked:

@@ -63,7 +63,11 @@ def test_dead_reshard_eliminated_and_matches():
         np.asarray(r(x)), np.tanh(x), rtol=1e-6, atol=1e-6
     )
     plan = _the_plan(r)
-    assert [s for s in plan.steps if s.kind == "reshard"] == []
+    # only the (first-class) output-epilogue reshard survives; the dead
+    # [x,-1] -> [-1,y] body reshard is eliminated
+    body = [s for s in plan.steps
+            if s.kind == "reshard" and s.writes[0] not in plan.out_keys]
+    assert body == []
     assert plan.opt_report.passes[1].removed_steps == 1
 
 
