@@ -12,6 +12,9 @@ regresses:
 * optimizer cells — post-pass wire bytes or collective-launch counts grow,
   the pass pipeline stops strictly improving a cell it used to improve, or a
   cell loses its fused buckets;
+* inline cells (whole-program passes) — post-pass whole-program wire bytes,
+  launch counts, or in-body reshard counts grow; inlined-body / hoisted-
+  reshard / fused-bucket counts drop; or the modeled overlap ratio regresses;
 * autoshard cells — the search stops finding a feasible assignment, the
   searched modeled cost exceeds the hand-annotated baseline or regresses vs
   the committed record, or the assignment breaks its memory budget;
@@ -80,6 +83,33 @@ def _check_opt_cell(msgs, name, base, fresh):
                     f"{fresh['fused_buckets']}")
 
 
+def _check_inline_cell(msgs, name, base, fresh):
+    """Whole-program cells: inlining/hoisting wins and the overlap model.
+
+    ``overlap`` detail and raw second-totals are informational; the guarded
+    surface is the whole-program bytes/launches the passes remove, the
+    structural counters (bodies inlined, reshards hoisted, reshards left in
+    bodies, fused buckets), and the modeled overlap ratio."""
+    for k in ("whole_wire_bytes_after", "whole_launches_after",
+              "inner_reshards_after"):
+        if fresh[k] > base[k] * (1 + _EPS):
+            _fail(msgs, f"{name}: {k} {base[k]} -> {fresh[k]}")
+    for k in ("inlined_bodies", "hoisted_reshards", "fused_buckets"):
+        if fresh[k] < base[k]:
+            _fail(msgs, f"{name}: {k} {base[k]} -> {fresh[k]}")
+    # cells the passes used to strictly improve must stay strictly improved
+    if base["whole_wire_bytes_after"] < base["whole_wire_bytes_before"] * (1 - _EPS):
+        if not (fresh["whole_wire_bytes_after"]
+                < fresh["whole_wire_bytes_before"] * (1 - _EPS)):
+            _fail(msgs, f"{name}: passes no longer reduce whole-program wire bytes")
+    if base["whole_launches_after"] < base["whole_launches_before"]:
+        if not fresh["whole_launches_after"] < fresh["whole_launches_before"]:
+            _fail(msgs, f"{name}: passes no longer reduce whole-program launches")
+    if fresh["overlap_ratio"] > base["overlap_ratio"] * (1 + _EPS):
+        _fail(msgs, f"{name}: overlap_ratio {base['overlap_ratio']:.4f} -> "
+                    f"{fresh['overlap_ratio']:.4f}")
+
+
 def _check_autoshard_cell(msgs, name, base, fresh):
     if not fresh.get("feasible", False):
         # infeasible cells carry null metrics (strict JSON) — nothing else
@@ -137,6 +167,7 @@ def compare(base: dict, fresh: dict):
     msgs, info = [], []
     for kind, checker in (("cells", _check_reshard_cell),
                           ("opt_cells", _check_opt_cell),
+                          ("inline_cells", _check_inline_cell),
                           ("autoshard_cells", _check_autoshard_cell)):
         base_cells = {c["name"]: c for c in base.get(kind, [])}
         fresh_cells = {c["name"]: c for c in fresh.get(kind, [])}
@@ -174,6 +205,7 @@ def main() -> int:
               file=sys.stderr)
         return 1
     ncells = (len(base.get("cells", [])) + len(base.get("opt_cells", []))
+              + len(base.get("inline_cells", []))
               + len(base.get("autoshard_cells", [])))
     path = plan_smoke.write_artifact(fresh)
     print(f"bench-guard: OK ({ncells} cells, no regressions vs committed baseline)")

@@ -3,14 +3,68 @@ and print the roofline-term deltas.
 
     PYTHONPATH=src python -m benchmarks.perf qwen1.5-0.5b train_4k \
         --tag fsdp --strategy fsdp_1d --overrides '{"xent_chunk": 512}'
+
+Also hosts the plan-build micro-timer (:func:`time_plan_builds`): per smoke
+program, best-of-N wall time of ``compile_plan`` with the optimizer pipeline
+off vs on, so the pass pipeline's compile-time cost (inline / hoist / CSE /
+fusion / overlap scheduling) stays visible in ``BENCH_plan.json`` —
+recorded, never guarded.  Standalone:
+
+    PYTHONPATH=src python -m benchmarks.perf --plan-build
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import time
 
 from .common import BENCH_ART, artifact, dryrun_cell
+
+
+def time_plan_builds(mesh, programs, repeats: int = 3):
+    """Best-of-``repeats`` ``compile_plan`` wall time per program, raw vs
+    optimized.  ``programs`` is ``[(name, fn, avals)]`` as produced by
+    ``plan_smoke``'s program factories; tracing/propagation happen once
+    outside the timed region (the plan build is what the passes tax)."""
+    import jax
+
+    from repro.core.plan import compile_plan
+    from repro.core.propagation import propagate
+
+    rows = []
+    for name, fn, avals in programs:
+        closed = jax.make_jaxpr(fn)(*avals)
+        prop = propagate(closed, mesh).result()
+        # warm once per variant: first build absorbs import/cache warmup
+        compile_plan(closed, prop, mesh, optimize=False)
+        compile_plan(closed, prop, mesh, optimize=True)
+
+        def best(optimize):
+            b = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                compile_plan(closed, prop, mesh, optimize=optimize)
+                b = min(b, (time.perf_counter() - t0) * 1e3)
+            return b
+
+        raw_ms, opt_ms = best(False), best(True)
+        rows.append({
+            "name": name,
+            "build_raw_ms": raw_ms,
+            "build_opt_ms": opt_ms,
+            "pass_overhead_ms": max(opt_ms - raw_ms, 0.0),
+        })
+    return rows
+
+
+def plan_build_report():
+    """Plan-build timings over the smoke benchmark programs (opt + inline)."""
+    from .plan_smoke import _inline_programs, _opt_programs
+
+    mesh, opt_programs = _opt_programs()
+    _, inline_programs = _inline_programs()
+    return time_plan_builds(mesh, opt_programs + inline_programs)
 
 
 def show(rec, base=None):
@@ -42,13 +96,24 @@ def show(rec, base=None):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("arch")
-    ap.add_argument("shape")
-    ap.add_argument("--tag", required=True)
+    ap.add_argument("arch", nargs="?")
+    ap.add_argument("shape", nargs="?")
+    ap.add_argument("--tag", default=None)
     ap.add_argument("--strategy", default=None)
     ap.add_argument("--overrides", default="{}")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--plan-build", action="store_true",
+                    help="print plan-build micro-timings for the smoke "
+                         "benchmark programs and exit")
     args = ap.parse_args()
+    if args.plan_build:
+        for row in plan_build_report():
+            print(f"plan_build/{row['name']}: raw={row['build_raw_ms']:.2f}ms "
+                  f"opt={row['build_opt_ms']:.2f}ms "
+                  f"passes=+{row['pass_overhead_ms']:.2f}ms")
+        return
+    if args.arch is None or args.shape is None or args.tag is None:
+        ap.error("arch, shape and --tag are required unless --plan-build")
     overrides = json.loads(args.overrides)
     rec = dryrun_cell(
         args.arch, args.shape, strategy=args.strategy,

@@ -4,11 +4,15 @@ Records, per reshard benchmark cell, the planner's chosen collective sequence
 and its modeled wire bytes against the greedy AllGather-first baseline and
 the PR 1 (search-disabled) planner; per *optimizer* cell, the whole-plan pass
 pipeline's pre- vs post-pass modeled wire bytes, collective-launch counts,
-fused-bucket counts, and plan-build wall time; per *autoshard* cell, the
-searched annotation-free assignment's modeled cost vs the hand-annotated
-Table-1 baseline under a per-device memory budget (search is deterministic,
-cost-only — no jit); plus lattice-search cap telemetry and the per-runner and
-process-level plan-cache hit rates.  ``benchmarks/guard.py`` diffs a fresh
+fused-bucket counts, and plan-build wall time; per *inline* cell
+(whole-program passes), the pre- vs post-pass whole-program wire bytes and
+launches (inner pjit/scan bodies priced at trip count), inlined-body /
+hoisted-reshard / in-body-reshard counts, and the overlap scheduler's modeled
+makespan-to-serial ratio; per *autoshard* cell, the searched annotation-free
+assignment's modeled cost vs the hand-annotated Table-1 baseline under a
+per-device memory budget (search is deterministic, cost-only — no jit); plus
+lattice-search cap telemetry, the per-runner and process-level plan-cache hit
+rates, and (unguarded) plan-build micro-timings from ``benchmarks/perf.py``.  ``benchmarks/guard.py`` diffs a fresh
 run of this module against the committed artifact and fails on regression
 (run via ``python -m benchmarks.run --smoke`` or ``make bench-smoke``;
 ``make bench-guard`` for the diff).
@@ -216,6 +220,123 @@ def _opt_cells():
 
 
 # ---------------------------------------------------------------------------------
+# whole-program cells (PR 4): pjit inlining, scan hoisting, overlap scheduling
+# ---------------------------------------------------------------------------------
+
+
+def _inline_programs():
+    """Benchmark programs whose wins need the whole-program passes: a shared
+    in-body param gather (CSE only fires after pjit inlining), in-body psums
+    (fusable only after inlining), a loop-invariant scan gather (hoist), and
+    an independent gather behind a compute chain (overlap scheduling)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as Sds
+    from jax import lax
+
+    from repro.core import annotate, mesh_split
+    from repro.core.sharding import Mesh
+
+    mesh = Mesh.create(_MESH_SHAPE, ("x", "y"))
+    R = mesh_split(2, mesh, [-1, -1])
+    W = mesh_split(2, mesh, ["y", -1])
+    f32 = lambda *s: Sds(s, jnp.float32)  # noqa: E731
+
+    def gather_block(x, w):
+        wg = annotate(annotate(w, W), R)  # in-body gather of the param
+        return x @ wg
+
+    gather_blk = jax.jit(gather_block)
+
+    def pjit_shared_param_gather(x, w):
+        # two pjit bodies each gathering the same param: the duplicate
+        # collective is invisible to CSE until inlining dissolves the calls
+        return gather_blk(x, w) + gather_blk(jnp.sin(x), w)
+
+    def psum_block(x, w):
+        return annotate(x @ w, R)  # contracted over y -> in-body AllReduce
+
+    psum_blk = jax.jit(psum_block)
+
+    def pjit_fused_psums(x, w1, w2):
+        x = annotate(x, mesh_split(2, mesh, [-1, "y"]))
+        w1 = annotate(w1, W)
+        w2 = annotate(w2, W)
+        return psum_blk(x, w1), psum_blk(x, w2)
+
+    def scan_hoisted_gather(xs, w, c0):
+        w = annotate(w, W)
+
+        def body(c, x):
+            wg = annotate(annotate(w, W), R)  # per-iteration param gather
+            return jnp.tanh(c + x @ wg), ()
+
+        c, _ = lax.scan(body, c0, xs)
+        return c
+
+    def overlap_gather_behind_compute(a, w1, w2, p):
+        a = annotate(a, mesh_split(2, mesh, ["x", -1]))
+        h = jnp.tanh(a @ w1) @ w2  # collective-free compute chain
+        p = annotate(p, W)
+        pg = annotate(p, R)  # independent gather, consumed at the end
+        return h + pg
+
+    return mesh, [
+        ("pjit_shared_param_gather", pjit_shared_param_gather,
+         [f32(512, 512)] * 2),
+        ("pjit_fused_psums", pjit_fused_psums, [f32(256, 256)] * 3),
+        ("scan_hoisted_gather", scan_hoisted_gather,
+         [f32(8, 256, 256), f32(256, 256), f32(256, 256)]),
+        ("overlap_gather_behind_compute", overlap_gather_behind_compute,
+         [f32(512, 512)] * 4),
+    ]
+
+
+def _inner_reshards(plan) -> int:
+    """Reshard steps still living inside pjit/scan bodies (recursive)."""
+    n = 0
+    for s in plan.steps:
+        if s.inner is not None:
+            n += sum(1 for t in s.inner.steps if t.kind == "reshard")
+            n += _inner_reshards(s.inner)
+    return n
+
+
+def _inline_cells():
+    import jax
+
+    from repro.core.plan import compile_plan
+    from repro.core.plan_opt import (
+        whole_collective_launches, whole_wire_bytes,
+    )
+    from repro.core.propagation import propagate
+
+    mesh, programs = _inline_programs()
+    cells = []
+    for name, fn, avals in programs:
+        closed = jax.make_jaxpr(fn)(*avals)
+        prop = propagate(closed, mesh).result()
+        raw = compile_plan(closed, prop, mesh, optimize=False)
+        opt = compile_plan(closed, prop, mesh, optimize=True)
+        rep = opt.opt_report
+        cells.append({
+            "name": name,
+            "whole_wire_bytes_before": whole_wire_bytes(raw),
+            "whole_wire_bytes_after": whole_wire_bytes(opt),
+            "whole_launches_before": whole_collective_launches(raw),
+            "whole_launches_after": whole_collective_launches(opt),
+            "inner_reshards_before": _inner_reshards(raw),
+            "inner_reshards_after": _inner_reshards(opt),
+            "inlined_bodies": rep.inlined_bodies,
+            "hoisted_reshards": rep.hoisted_reshards,
+            "fused_buckets": rep.fused_buckets,
+            "overlap_ratio": rep.overlap_ratio,
+            "overlap": dict(rep.overlap) if rep.overlap else None,
+        })
+    return cells
+
+
+# ---------------------------------------------------------------------------------
 # autoshard cells: searched-vs-hand-annotated modeled cost per registry config
 # ---------------------------------------------------------------------------------
 
@@ -229,6 +350,68 @@ _AUTOSHARD_CASES = (
 )
 
 
+def _autoshard_mlp_problem(mesh):
+    """A scan/pjit-free search problem (plain MLP): its plan has no inner
+    bodies, so the whole-program passes leave its PlanCost components (wire
+    bytes, launches, per-device FLOPs) untouched — this cell's score moves
+    *only* with the scoring objective, isolating the max-of-terms swap from
+    the inline/hoist accounting changes that reprice the registry cells."""
+    import jax
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as Sds
+
+    from repro.core import mesh_split
+
+    def mlp(a, w1, w2):
+        return jnp.tanh(a @ w1) @ w2
+
+    closed = jax.make_jaxpr(mlp)(
+        Sds((128, 256), jnp.float32), Sds((256, 512), jnp.float32),
+        Sds((512, 128), jnp.float32),
+    )
+    baseline = [  # hand annotation: data-parallel batch, Megatron-split MLP
+        mesh_split(2, mesh, ["data", -1]),
+        mesh_split(2, mesh, [-1, "model"]),
+        mesh_split(2, mesh, ["model", -1]),
+    ]
+    return closed, baseline
+
+
+def _autoshard_solve_cell(name, arch, mesh, budget, solve_fn):
+    cfg_kw = dict(top_n=3, sa_steps=6, max_candidates=8)
+    t0 = time.perf_counter()
+    res = solve_fn(budget, cfg_kw)
+    ms = (time.perf_counter() - t0) * 1e3
+    cost = res.cost  # None when every candidate failed to lower — the
+    # cell must still be written (feasible=False, null metrics: the
+    # artifact stays strict JSON) so the guard can fail it instead of
+    # this module crashing before the guard runs
+
+    def fin(x):
+        return x if x is not None and np.isfinite(x) else None
+
+    return {
+        "name": name,
+        "arch": arch,
+        "mesh": list(mesh.shape),
+        "budget_bytes": budget,
+        "feasible": bool(res.evaluation.feasible),
+        "baseline_feasible": bool(res.baseline.feasible),
+        "searched_total_s": fin(res.evaluation.score),
+        "baseline_total_s": fin(res.baseline.score),
+        "ratio_vs_baseline": res.ratio_vs_baseline,
+        "searched_peak_bytes": fin(cost.peak_bytes if cost else None),
+        "searched_wire_bytes": fin(cost.wire_bytes if cost else None),
+        "searched_launches": cost.launches if cost else -1,
+        "evals": res.evals,
+        "search_ms": ms,
+        "assignment": [
+            None if s is None else [list(a) for a in s.dims_mapping]
+            for s in res.assignment
+        ],
+    }
+
+
 def _autoshard_cells():
     from repro import autoshard
     from repro.core.sharding import Mesh
@@ -236,39 +419,31 @@ def _autoshard_cells():
     mesh = Mesh.create((2, 4), ("data", "model"))
     cells = []
     for arch, budget in _AUTOSHARD_CASES:
-        cfg = autoshard.AutoshardConfig(
-            budget_bytes=budget, top_n=3, sa_steps=6, max_candidates=8,
-        )
-        t0 = time.perf_counter()
-        res = autoshard.solve(arch, mesh, config=cfg)
-        ms = (time.perf_counter() - t0) * 1e3
-        cost = res.cost  # None when every candidate failed to lower — the
-        # cell must still be written (feasible=False, null metrics: the
-        # artifact stays strict JSON) so the guard can fail it instead of
-        # this module crashing before the guard runs
-        def fin(x):
-            return x if x is not None and np.isfinite(x) else None
+        def solve_registry(budget, cfg_kw, arch=arch):
+            cfg = autoshard.AutoshardConfig(budget_bytes=budget, **cfg_kw)
+            return autoshard.solve(arch, mesh, config=cfg)
 
-        cells.append({
-            "name": f"autoshard_{arch.replace('.', '_').replace('-', '_')}",
-            "arch": arch,
-            "mesh": list(mesh.shape),
-            "budget_bytes": budget,
-            "feasible": bool(res.evaluation.feasible),
-            "baseline_feasible": bool(res.baseline.feasible),
-            "searched_total_s": fin(res.evaluation.score),
-            "baseline_total_s": fin(res.baseline.score),
-            "ratio_vs_baseline": res.ratio_vs_baseline,
-            "searched_peak_bytes": fin(cost.peak_bytes if cost else None),
-            "searched_wire_bytes": fin(cost.wire_bytes if cost else None),
-            "searched_launches": cost.launches if cost else -1,
-            "evals": res.evals,
-            "search_ms": ms,
-            "assignment": [
-                None if s is None else [list(a) for a in s.dims_mapping]
-                for s in res.assignment
-            ],
-        })
+        cells.append(_autoshard_solve_cell(
+            f"autoshard_{arch.replace('.', '_').replace('-', '_')}",
+            arch, mesh, budget, solve_registry,
+        ))
+    # scan/pjit-free cell: score isolates the objective formula (see
+    # _autoshard_mlp_problem); budget sits between the hand-annotated and
+    # replicated peaks so the search must do real work, like the golden tests
+    closed, baseline = _autoshard_mlp_problem(mesh)
+    free = autoshard.Evaluator(closed, mesh)
+    repl_peak = free([None] * len(baseline)).cost.peak_bytes
+    base_peak = free(baseline).cost.peak_bytes
+    mlp_budget = (repl_peak + base_peak) / 2.0
+
+    def solve_mlp(budget, cfg_kw):
+        cfg = autoshard.AutoshardConfig(budget_bytes=budget, **cfg_kw)
+        return autoshard.solve_problem(closed, mesh, cfg, baseline=baseline,
+                                       arch="mlp-scanfree")
+
+    cells.append(_autoshard_solve_cell(
+        "autoshard_mlp_scanfree", "mlp-scanfree", mesh, mlp_budget, solve_mlp,
+    ))
     return cells
 
 
@@ -328,12 +503,18 @@ def smoke_record() -> dict:
     }
     grid_telemetry = search_telemetry()
     rec["opt_cells"] = _opt_cells()
+    rec["inline_cells"] = _inline_cells()
     rec["autoshard_cells"] = _autoshard_cells()
     rec.update(_cache_cell())
     rec["lattice_telemetry"] = {
         "cells": grid_telemetry,
         "total": search_telemetry(),
     }
+    # plan-build micro-timings (benchmarks/perf.py): the pass pipeline's
+    # compile-time cost — recorded in the artifact, never guarded
+    from .perf import plan_build_report
+
+    rec["plan_build_ms"] = plan_build_report()
     return rec
 
 
@@ -365,6 +546,18 @@ def rows(rec: dict = None):
             f"launches={cell['collectives_before']}->{cell['collectives_after']} "
             f"fused={cell['fused_buckets']} "
             f"build={cell['build_opt_ms']:.1f}ms",
+        ))
+    for cell in rec.get("inline_cells", []):
+        out.append((
+            f"plan_inline/{cell['name']}", 0.0,
+            f"bytes={cell['whole_wire_bytes_before']:.3e}->"
+            f"{cell['whole_wire_bytes_after']:.3e} "
+            f"launches={cell['whole_launches_before']}->"
+            f"{cell['whole_launches_after']} "
+            f"inlined={cell['inlined_bodies']} hoisted={cell['hoisted_reshards']} "
+            f"inner_reshards={cell['inner_reshards_before']}->"
+            f"{cell['inner_reshards_after']} "
+            f"overlap={cell['overlap_ratio']:.3f}",
         ))
     for cell in rec.get("autoshard_cells", []):
         out.append((

@@ -157,11 +157,30 @@ def plan_opt_table(path: str) -> str:
             f"| {c['fused_buckets']} | {c['launch_s_saved']:.1e} "
             f"| {c['build_raw_ms']:.1f} → {c['build_opt_ms']:.1f} |"
         )
+    inline = rec.get("inline_cells", [])
+    if inline:
+        lines.append("")
+        lines.append(
+            "| whole-program cell | whole wire B pre→post | launches pre→post "
+            "| inlined | hoisted | in-body reshards pre→post | overlap ratio |"
+        )
+        lines.append("|---|---|---|---|---|---|---|")
+        for c in inline:
+            lines.append(
+                f"| {c['name']} "
+                f"| {c['whole_wire_bytes_before']:.3e} → "
+                f"{c['whole_wire_bytes_after']:.3e} "
+                f"| {c['whole_launches_before']} → {c['whole_launches_after']} "
+                f"| {c['inlined_bodies']} | {c['hoisted_reshards']} "
+                f"| {c['inner_reshards_before']} → {c['inner_reshards_after']} "
+                f"| {c['overlap_ratio']:.3f} |"
+            )
     lines.append("")
     lines.append(
-        "Passes (in order): reshard CSE, dead-reshard elimination, output-alias "
-        "sinking, collective fusion/bucketing (roofline-capped) — see "
-        "`core/plan_opt.py`."
+        "Passes (in order): pjit inlining, scan-invariant hoisting, reshard "
+        "CSE, dead-reshard elimination, output-alias sinking, collective "
+        "fusion/bucketing (roofline-capped), overlap-aware scheduling "
+        "(max-of-terms roofline) — see `core/plan_opt.py`."
     )
     return "\n".join(lines)
 

@@ -24,6 +24,30 @@ PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s / chip
 ICI_BW = 50e9  # B/s / link
 COLLECTIVE_LAUNCH_S = 10e-6  # per-collective launch/sync overhead (s)
+# Fraction of the smaller roofline term an overlap-aware schedule can hide
+# behind the dominant one (async collectives never overlap perfectly: launch
+# tails, dependency stalls, and shared-HBM contention leak ~10%).
+OVERLAP_EFFICIENCY = 0.9
+
+
+def overlap_time_s(compute_s: float, comm_s: float) -> float:
+    """Max-of-terms roofline time for one scheduled slot.
+
+    A serial model prices a slot at ``compute_s + comm_s``; with
+    compute/collective overlap the dominant term bounds the slot and only the
+    *unhidden* fraction of the smaller term leaks through:
+
+        max(compute_s, comm_s) + (1 - OVERLAP_EFFICIENCY) · min(...)
+
+    This is the objective the plan-level overlap scheduler
+    (``core/plan_opt.schedule_overlap``) and the autoshard score
+    (``core/plan.PlanCost.total_s``) minimize.  Keeping a sliver of the
+    smaller term preserves search discrimination: two assignments with equal
+    dominant terms still rank by the hidden one.
+    """
+    hi = compute_s if compute_s >= comm_s else comm_s
+    lo = compute_s + comm_s - hi
+    return hi + (1.0 - OVERLAP_EFFICIENCY) * lo
 
 
 # ---------------------------------------------------------------------------------

@@ -26,6 +26,7 @@ from .api import (
     solve,
     solve_jaxpr,
     solve_jaxpr_cached,
+    solve_problem,
 )
 from .evaluate import Evaluation, Evaluator
 from .search import SearchResult, search
@@ -42,4 +43,5 @@ __all__ = [
     "candidate_shardings", "clear_assignment_cache", "fits_budget",
     "load", "local_bytes", "registry_problem", "search",
     "sharding_from_spec", "solve", "solve_jaxpr", "solve_jaxpr_cached",
+    "solve_problem",
 ]

@@ -148,21 +148,38 @@ def load(path: str) -> Tuple[Mesh, List[MaybeSharding]]:
 # ---------------------------------------------------------------------------------
 
 
-def solve_jaxpr(closed, mesh: Mesh,
-                config: AutoshardConfig = AutoshardConfig()) -> AutoshardResult:
-    """Search the input-sharding assignment of one traced (closed) jaxpr."""
+def solve_problem(closed, mesh: Mesh,
+                  config: AutoshardConfig = AutoshardConfig(),
+                  baseline: Optional[Sequence[MaybeSharding]] = None,
+                  arch: str = "") -> AutoshardResult:
+    """Search one traced (closed) jaxpr, optionally against a hand-annotated
+    ``baseline`` assignment scored as an extra search point — the returned
+    result never costs more than the baseline (it is a valid point in the
+    searched space).  This is the shared core of :func:`solve` (registry
+    configs) and :func:`solve_jaxpr` (bare jaxprs)."""
     ev = Evaluator(closed, mesh, budget_bytes=config.budget_bytes,
                    optimize=config.optimize)
+    base_ev = ev(list(baseline)) if baseline is not None else None
     res = search(
         ev, mesh,
         top_n=config.top_n, beam_width=config.beam_width,
         sa_steps=config.sa_steps, seed=config.seed,
         max_candidates=config.max_candidates,
     )
+    assignment, final = res.assignment, res.evaluation
+    if base_ev is not None and base_ev.score < final.score:
+        assignment, final = list(baseline), base_ev
     return AutoshardResult(
-        mesh=mesh, assignment=res.assignment, evaluation=res.evaluation,
-        config=config, evals=res.evals, searched_invars=res.searched_invars,
+        mesh=mesh, assignment=assignment, evaluation=final, config=config,
+        evals=ev.lowerings, searched_invars=res.searched_invars,
+        baseline=base_ev, arch=arch,
     )
+
+
+def solve_jaxpr(closed, mesh: Mesh,
+                config: AutoshardConfig = AutoshardConfig()) -> AutoshardResult:
+    """Search the input-sharding assignment of one traced (closed) jaxpr."""
+    return solve_problem(closed, mesh, config)
 
 
 _ASSIGNMENT_CACHE: Dict[tuple, AutoshardResult] = {}
@@ -291,21 +308,4 @@ def solve(arch: str, mesh: Optional[Mesh] = None,
     """
     mesh = mesh if mesh is not None else Mesh.create((2, 4), ("data", "model"))
     closed, baseline = registry_problem(arch, mesh, batch, seq, reduce_k)
-    ev = Evaluator(closed, mesh, budget_bytes=config.budget_bytes,
-                   optimize=config.optimize)
-    base_ev = ev(baseline)
-    res = search(
-        ev, mesh,
-        top_n=config.top_n, beam_width=config.beam_width,
-        sa_steps=config.sa_steps, seed=config.seed,
-        max_candidates=config.max_candidates,
-    )
-    assignment, final = res.assignment, res.evaluation
-    if base_ev.score < final.score:
-        # the baseline is a valid point in the searched space: never lose to it
-        assignment, final = baseline, base_ev
-    return AutoshardResult(
-        mesh=mesh, assignment=assignment, evaluation=final, config=config,
-        evals=ev.lowerings, searched_invars=res.searched_invars,
-        baseline=base_ev, arch=arch,
-    )
+    return solve_problem(closed, mesh, config, baseline=baseline, arch=arch)

@@ -3,10 +3,12 @@
 A candidate assignment (one ``Optional[Sharding]`` per jaxpr invar) is scored
 by running the existing pipeline end to end in cost-only mode — propagation
 completes the unseeded tensors, ``compile_plan`` lowers with cost-model-chosen
-reshard programs, ``plan_opt`` runs CSE/DCE/fusion — and reading the
-resulting :class:`~repro.core.plan.PlanCost`: modeled collective seconds
-(wire bytes + launches) plus roofline compute imbalance.  No jaxpr is ever
-executed and no executable is built (every step runner is a raising stub).
+reshard programs, ``plan_opt`` runs inline/CSE/DCE/fusion/scheduling — and
+reading the resulting :class:`~repro.core.plan.PlanCost`: a **max-of-terms**
+roofline objective (``overlap_time_s`` of the per-device compute seconds and
+the collective seconds — the dominant term bounds the step, the smaller one
+is mostly hidden behind it).  No jaxpr is ever executed and no executable is
+built (every step runner is a raising stub).
 
 Assignments whose propagated program demands an inexpressible reshard, or
 whose modeled per-device live-memory peak exceeds the budget, are

@@ -529,13 +529,6 @@ def plan_reshard(
     return best
 
 
-def reshard_cost_bytes(
-    src: Sharding, dst: Sharding, local_shape: Tuple[int, ...], dtype_bytes: int = 4
-) -> float:
-    """Modeled wire bytes of the planner's choice (analysis-layer helper)."""
-    return plan_reshard(src, dst, local_shape, dtype_bytes).cost_bytes
-
-
 # ---------------------------------------------------------------------------------
 # execution (inside shard_map)
 # ---------------------------------------------------------------------------------

@@ -532,9 +532,10 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
     ``compile_plans=False`` selects the dynamic reference path
     (``SpmdPartitioner``), which re-decides everything per trace — kept for
     differential testing and benchmarking against the compiled path.
-    ``optimize=False`` skips the whole-plan optimizer passes
-    (``plan_opt``: reshard CSE, dead-reshard elimination, collective fusion)
-    on the compiled plan.  ``process_cache=False`` opts this runner out of the
+    ``optimize=False`` skips the whole-program optimizer passes
+    (``plan_opt``: pjit inlining, scan-invariant reshard hoisting, reshard
+    CSE, dead-reshard elimination, collective fusion, overlap-aware
+    scheduling) on the compiled plan.  ``process_cache=False`` opts this runner out of the
     process-level plan cache (shared across ``spmd_partition`` call sites,
     keyed by jaxpr digest + mesh + avals).
 

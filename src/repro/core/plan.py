@@ -25,6 +25,12 @@ consumers without touching closures.  Values produced mid-plan (a resharded
 operand, a pre-psum partial sum) live under :class:`ProxyVar` keys — plan-local
 SSA names that never collide with jaxpr vars.
 
+Inner ``pjit``/``scan`` bodies lower to their own plans, but not opaquely:
+the call step exposes the inner plan (``PlanStep.inner``) and its static call
+metadata (``PlanStep.call``), so the whole-program passes can splice trivial
+pjit bodies into the outer step list, hoist loop-invariant reshards out of
+scan bodies, and price inner collectives at trip count.
+
 Executing a plan is a straight walk of the step list with a dict environment;
 no propagation, no per-op classification, no reshard search.
 ``spmd_partition`` (partitioner.py) caches plans keyed by input avals + mesh
@@ -131,6 +137,15 @@ class PlanStep:
     flops: float = 0.0  # per-device local FLOPs of this step
     wbytes: Tuple[float, ...] = ()  # local bytes of each write (memory model)
     transient_bytes: float = 0.0  # inner-plan live peak (scan/pjit steps)
+    # -- call steps (op == "pjit" / "scan") ---------------------------------
+    # The inner plan is exposed structurally (not just captured by the run
+    # closure) so whole-program passes can inline trivial pjit bodies, hoist
+    # loop-invariant reshards out of scan bodies, and price inner collectives
+    # at trip count.  ``call`` carries the static call metadata the passes
+    # need: {"trips": int} for pjit (always 1), plus
+    # {"num_consts", "num_carry"} for scan.
+    inner: Optional["PartitionPlan"] = None
+    call: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def in_bytes(self) -> float:
@@ -997,6 +1012,7 @@ class PlanBuilder:
             "compute", tuple(keys), outvars, run, op="pjit",
             flops=inner_plan.total_flops(),
             transient_bytes=inner_plan.peak_bytes,
+            inner=inner_plan, call={"trips": 1},
         ))
 
     def _scan(self, idx: int, eqn) -> None:
@@ -1090,6 +1106,8 @@ class PlanBuilder:
             "compute", tuple(keys), outvars, run, op="scan",
             flops=trips * inner_plan.total_flops(),
             transient_bytes=inner_plan.peak_bytes,
+            inner=inner_plan,
+            call={"trips": int(trips), "num_consts": nc, "num_carry": nk},
         ))
 
     # -- fallback --------------------------------------------------------------------
@@ -1216,10 +1234,11 @@ def compile_plan(
     """Lower a propagated (closed) jaxpr into an executable PartitionPlan.
 
     With ``optimize=True`` (the default) the lowered plan is run through the
-    whole-plan optimizer pipeline (``plan_opt.optimize_plan``): reshard CSE,
-    dead-reshard elimination, and collective fusion.  The passes are
-    semantics-preserving; ``optimize=False`` keeps the raw per-equation plan
-    (used by benchmarks to measure what the pipeline saves).
+    whole-program optimizer pipeline (``plan_opt.optimize_plan``): pjit
+    inlining, scan-invariant reshard hoisting, reshard CSE, dead-reshard
+    elimination, collective fusion, and overlap-aware scheduling.  The passes
+    are semantics-preserving; ``optimize=False`` keeps the raw per-equation
+    plan (used by benchmarks to measure what the pipeline saves).
     ``cost_only=True`` replaces every step's runner with a raising stub — the
     plan can be priced but never executed (autoshard candidate scoring).
     """
@@ -1292,11 +1311,14 @@ def plan_peak_bytes(plan: PartitionPlan) -> float:
 class PlanCost:
     """Whole-program modeled cost of one lowered plan (cost-only mode).
 
-    The scalar objective (:attr:`total_s`) is the roofline collective term
-    (wire bytes / ICI bandwidth + per-launch overhead) plus the compute
-    *imbalance*: per-device FLOPs above the perfect-sharding floor
-    (global FLOPs / num devices), priced at peak FLOPs.  ``peak_bytes`` is a
-    constraint, not a term — the search rejects assignments above the budget.
+    The scalar objective (:attr:`total_s`) is **max-of-terms**: the roofline
+    overlap time of the per-device compute term (FLOPs / peak — the actual
+    per-device work, so sharding imbalance raises it directly) and the
+    collective term (wire bytes / ICI bandwidth + per-launch overhead),
+    combined by :func:`repro.analysis.roofline.overlap_time_s` — the dominant
+    term bounds the step, the smaller one is mostly hidden behind it.
+    ``peak_bytes`` is a constraint, not a term — the search rejects
+    assignments above the budget.
     """
 
     wire_bytes: float
@@ -1313,6 +1335,12 @@ class PlanCost:
         return self.wire_bytes / ICI_BW + self.launches * COLLECTIVE_LAUNCH_S
 
     @property
+    def compute_s(self) -> float:
+        from repro.analysis.roofline import PEAK_FLOPS
+
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
     def imbalance_s(self) -> float:
         from repro.analysis.roofline import PEAK_FLOPS
 
@@ -1320,7 +1348,9 @@ class PlanCost:
 
     @property
     def total_s(self) -> float:
-        return self.collective_s + self.imbalance_s
+        from repro.analysis.roofline import overlap_time_s
+
+        return overlap_time_s(self.compute_s, self.collective_s)
 
     def as_dict(self) -> Dict:
         return {
@@ -1331,6 +1361,7 @@ class PlanCost:
             "peak_bytes": self.peak_bytes,
             "steps": self.steps,
             "collective_s": self.collective_s,
+            "compute_s": self.compute_s,
             "imbalance_s": self.imbalance_s,
             "total_s": self.total_s,
         }

@@ -1,26 +1,38 @@
-"""Whole-plan collective optimizer: passes over a lowered ``PartitionPlan``.
+"""Whole-program plan optimizer: passes over a lowered ``PartitionPlan``.
 
 PR 1 made each reshard *locally* cost-optimal (``collective_planner``); this
 module is the layer that optimizes the *whole* partitioned program before it
 is jitted — the plan-level analogue of GSPMD's CollectivePermute/AllToAll
 compiler optimizations and of the grouped/bucketed collectives production
-partitioners emit.  ``compile_plan`` runs :func:`optimize_plan` by default.
+partitioners emit.  Since PR 4 the pipeline is *whole-program*: trivial
+``pjit`` call boundaries are dissolved (PartIR-style whole-program lowering)
+and loop-invariant reshards leave ``scan`` bodies, so every later pass prices
+and rewrites one flat step list.  ``compile_plan`` runs
+:func:`optimize_plan` by default.
 
 Passes (in pipeline order):
 
-1. **reshard CSE** (:func:`reshard_cse`) — the plan builder emits one reshard
-   step per consumer; this pass walks the value-flow graph (every step
-   declares ``reads``/``writes``) and memoizes identical
-   ``(source value, target dims_mapping)`` reshards, rewiring later consumers
-   to the first result.  Duplicates whose result is a jaxpr output become
-   free aliases.
-2. **dead-reshard elimination** (:func:`dead_reshard_elim`) — drops reshard
+1. **pjit inlining** (:func:`inline_pjit`) — splices a trivial ``pjit`` step's
+   body (no nested control flow, ≤ ``INLINE_MAX_STEPS`` steps) into the outer
+   step list with :class:`~repro.core.plan.ProxyVar` renaming, so
+   cross-boundary reshards and collectives become visible to every later
+   pass (two bodies gathering the same param CSE into one gather; their
+   psums can share a fusion bucket).
+2. **scan-invariant hoisting** (:func:`hoist_scan_invariants`) — a reshard of
+   a loop-invariant scan input (a scan *const* whose only body reader is the
+   reshard) moves out of the body into the outer plan, executing once instead
+   of once per iteration; the body reads the pre-resharded value.
+3. **reshard CSE** (:func:`reshard_cse`) — memoizes identical
+   ``(source value, target dims_mapping)`` reshards across consumers,
+   rewiring later readers to the first result.  Duplicates whose result is a
+   jaxpr output become free aliases.
+4. **dead-reshard elimination** (:func:`dead_reshard_elim`) — drops reshard
    steps whose result no step (and no jaxpr output) ever reads, iterating
    backwards so chains of dead reshards cascade.
-3. **output-alias sinking** (:func:`sink_output_aliases`) — free aliases read
+5. **output-alias sinking** (:func:`sink_output_aliases`) — free aliases read
    only by the output epilogue move to the plan tail so they stop pinning
    fusion buckets (pure reordering).
-4. **collective fusion / bucketing** (:func:`fuse_collectives`) — coalesces
+6. **collective fusion / bucketing** (:func:`fuse_collectives`) — coalesces
    same-key collectives on independent values into a single launch over a
    flattened, concatenated buffer: trailing AllReduces (psum/pmax/pmin split
    out of einsum/reduce lowering) and single-AllGather reshard steps.  The
@@ -31,24 +43,45 @@ Passes (in pipeline order):
    dominates.  Members sink *down* to the last member's position, which is
    legal exactly when no intervening step reads an earlier member's result —
    enforced during the scan.
+7. **overlap scheduling** (:func:`schedule_overlap`) — list-schedules the
+   final step list onto a two-resource (compute, interconnect) machine,
+   reordering dataflow-independent steps so collectives issue as early as
+   their inputs allow and compute fills the wire time.  Slot times use the
+   max-of-terms roofline (:func:`repro.analysis.roofline.overlap_time_s`):
+   ``max(compute_s, comm_s)`` plus the unhidden sliver of the smaller term.
+   The modeled makespan, the serial reference, and their ratio land in
+   ``plan.opt_report.overlap``.
 
 Pass-ordering invariants
 ------------------------
+* Inlining must run **first**: every later pass only sees what is in the
+  flat step list, and inlining is what puts inner-body collectives there.
+  Hoisting runs immediately after so lifted reshards are CSE candidates
+  against outer reshards of the same value.
 * CSE must run **before** DCE: rewiring consumers is what orphans duplicate
   reshards (and annotate-created reshards of unused values) for DCE to drop.
 * Alias sinking must run **after** CSE (which creates the output aliases) and
   **before** fusion (whose bucketing it unblocks).
-* Fusion must run **last**: it consumes the final dataflow; CSE/DCE change
-  step adjacency and read-sets, and no other pass understands ``fused`` steps.
+* Fusion must run after every rewrite pass: it consumes the final dataflow;
+  CSE/DCE change step adjacency and read-sets, and no other pass understands
+  ``fused`` steps.
+* Scheduling must run **last**: it permutes the final step list (pure
+  reordering — zero bytes or launches change) and any later rewrite would
+  invalidate the modeled makespan recorded in the report.
 * Every pass must preserve: SSA (each env key written exactly once), write-
   before-read order, the set of jaxpr-output writes, and ``plan.stats``
   consistency (use ``PlanStats.remove_program`` when deleting a reshard).
 * Passes mutate ``plan.steps`` in place so inner plans captured by
-  pjit/scan closures see the optimized list.
+  pjit/scan closures see the optimized list; :func:`hoist_scan_invariants`
+  relies on the same aliasing in the other direction when it edits a scan
+  body's ``inner.steps``.
 
 Every pass reports its savings; :func:`optimize_plan` attaches an
-:class:`OptReport` (bytes and collective-launch counts before/after, per-pass
-detail) to the plan for the benchmark layer (``BENCH_plan.json``).
+:class:`OptReport` (whole-program bytes and collective-launch counts
+before/after — inner pjit/scan plans priced at trip count via
+:func:`whole_wire_bytes` / :func:`whole_collective_launches` — plus per-pass
+detail and the overlap-schedule model) to the plan for the benchmark layer
+(``BENCH_plan.json``).
 """
 from __future__ import annotations
 
@@ -57,20 +90,31 @@ from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
+from jax import core, lax
 from jax.extend import core as excore
 
 from repro.analysis.roofline import (
-    COLLECTIVE_LAUNCH_S, collective_wire_bytes, fusion_bucket_bytes,
+    COLLECTIVE_LAUNCH_S, ICI_BW, PEAK_FLOPS, collective_wire_bytes,
+    fusion_bucket_bytes, overlap_time_s,
 )
 
-from .plan import PartitionPlan, PlanStep, _alias_run, _read, _write
+from .plan import (
+    PartitionPlan, PlanStep, ProxyVar, _alias_run, _read, _write,
+)
 
 __all__ = [
     "OptReport", "PassReport", "optimize_plan",
+    "inline_pjit", "hoist_scan_invariants",
     "reshard_cse", "dead_reshard_elim", "sink_output_aliases",
-    "fuse_collectives",
+    "fuse_collectives", "schedule_overlap",
+    "whole_wire_bytes", "whole_collective_launches",
 ]
+
+# Inlining cap: a pjit body longer than this stays a call step.  The point of
+# the bound is compile time, not correctness — splicing is O(steps), but every
+# spliced step re-enters CSE/fusion/scheduling, and giant bodies (full model
+# layers) rarely share cross-boundary reshards worth the pass time.
+INLINE_MAX_STEPS = 64
 
 
 # ---------------------------------------------------------------------------------
@@ -86,6 +130,11 @@ class PassReport:
     fused_buckets: int = 0
     fused_members: int = 0
     launch_s_saved: float = 0.0
+    inlined_bodies: int = 0  # inline-pjit only
+    hoisted_reshards: int = 0  # scan-hoist only
+    moved_steps: int = 0  # overlap-schedule only
+    overlap_ratio: float = 1.0  # overlap-schedule only: makespan / serial
+    detail: Dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -93,15 +142,24 @@ class PassReport:
 
 @dataclasses.dataclass
 class OptReport:
-    """Before/after accounting for one run of the pass pipeline."""
+    """Before/after accounting for one run of the pass pipeline.
+
+    Byte/launch counts are *whole-program*: inner pjit/scan plans contribute
+    at trip count (:func:`whole_wire_bytes`), so inlining a body or hoisting
+    a per-iteration reshard shows up as a delta instead of moving cost in and
+    out of visibility.  ``overlap`` carries the overlap scheduler's model:
+    total compute/comm seconds, the serial reference, the scheduled makespan,
+    and their ratio.
+    """
 
     passes: List[PassReport]
     steps_before: int
     steps_after: int
-    collectives_before: int  # collective launches (program steps + psums)
+    collectives_before: int  # whole-program collective launches
     collectives_after: int
     wire_bytes_before: float
     wire_bytes_after: float
+    overlap: Optional[Dict] = None
 
     @property
     def fused_buckets(self) -> int:
@@ -110,6 +168,18 @@ class OptReport:
     @property
     def launch_s_saved(self) -> float:
         return sum(p.launch_s_saved for p in self.passes)
+
+    @property
+    def inlined_bodies(self) -> int:
+        return sum(p.inlined_bodies for p in self.passes)
+
+    @property
+    def hoisted_reshards(self) -> int:
+        return sum(p.hoisted_reshards for p in self.passes)
+
+    @property
+    def overlap_ratio(self) -> float:
+        return self.overlap["ratio"] if self.overlap else 1.0
 
     def as_dict(self) -> Dict:
         return {
@@ -122,6 +192,9 @@ class OptReport:
             "wire_bytes_after": self.wire_bytes_after,
             "fused_buckets": self.fused_buckets,
             "launch_s_saved": self.launch_s_saved,
+            "inlined_bodies": self.inlined_bodies,
+            "hoisted_reshards": self.hoisted_reshards,
+            "overlap": dict(self.overlap) if self.overlap else None,
         }
 
 
@@ -144,6 +217,241 @@ def count_collective_launches(steps: List[PlanStep]) -> int:
     return n
 
 
+def whole_wire_bytes(plan: PartitionPlan) -> float:
+    """Modeled wire bytes of one whole-program execution: this plan's steps
+    plus every inner pjit/scan plan's, multiplied by its trip count — the
+    number the inline/hoist passes actually move."""
+    total = _wire_bytes(plan)
+    for s in plan.steps:
+        if s.inner is not None:
+            total += s.call.get("trips", 1) * whole_wire_bytes(s.inner)
+    return total
+
+
+def whole_collective_launches(plan: PartitionPlan) -> int:
+    """Collective launches of one whole-program execution (inner pjit/scan
+    plans at trip count)."""
+    total = count_collective_launches(plan.steps)
+    for s in plan.steps:
+        if s.inner is not None:
+            total += s.call.get("trips", 1) * whole_collective_launches(s.inner)
+    return total
+
+
+# ---------------------------------------------------------------------------------
+# pass 1: pjit inlining
+# ---------------------------------------------------------------------------------
+
+
+def _const_write_run(val):
+    def run(env, reads, writes, val=val):
+        _write(env, writes[0], val)
+
+    return run
+
+
+def _splice_body(step: PlanStep) -> List[PlanStep]:
+    """Rewrite one trivial pjit step's inner plan as outer steps.
+
+    Every inner env key is renamed: invars map to the call's operand keys,
+    uniquely-produced out keys map straight onto the call's outvars, and all
+    other keys get fresh :class:`ProxyVar`s — mandatory, because two pjit
+    eqns of the same traced function share jaxpr ``Var`` objects, and
+    splicing both bodies unrenamed would collide in the outer env.
+    """
+    inner = step.inner
+    ren: Dict[int, object] = {}
+    for iv, outer_key in zip(inner.jaxpr.invars, step.reads):
+        ren[id(iv)] = outer_key
+    spliced: List[PlanStep] = []
+    for cv, c in zip(inner.jaxpr.constvars, inner.consts):
+        p = ProxyVar("inline.const")
+        ren[id(cv)] = p
+        spliced.append(PlanStep(
+            "compute", (), (p,), _const_write_run(c), op="const",
+            wbytes=(float(np.asarray(c).nbytes),),
+        ))
+    # outputs: an out key written by the body and not yet mapped takes the
+    # outer outvar as its name; literals, passthrough inputs/consts, and
+    # duplicated keys need a tail write instead
+    tail: List[Tuple[object, object]] = []
+    for ov, ik in zip(step.writes, inner.out_keys):
+        if isinstance(ov, core.DropVar):
+            continue
+        if isinstance(ik, excore.Literal) or id(ik) in ren:
+            tail.append((ik, ov))
+        else:
+            ren[id(ik)] = ov
+    for s in inner.steps:
+        reads = tuple(
+            r if isinstance(r, excore.Literal) else ren.get(id(r), r)
+            for r in s.reads
+        )
+        writes = []
+        for w in s.writes:
+            if isinstance(w, core.DropVar):
+                writes.append(w)
+                continue
+            nk = ren.get(id(w))
+            if nk is None:
+                nk = ProxyVar(f"inline.{s.op or s.kind}")
+                ren[id(w)] = nk
+            writes.append(nk)
+        ns = dataclasses.replace(s, reads=reads, writes=tuple(writes))
+        if hasattr(s, "_wire_bytes"):
+            ns._wire_bytes = s._wire_bytes  # noqa: SLF001 - fused-step annotation
+        spliced.append(ns)
+    for ik, ov in tail:
+        if isinstance(ik, excore.Literal):
+            spliced.append(PlanStep(
+                "compute", (), (ov,), _const_write_run(ik.val), op="const",
+                wbytes=(float(np.asarray(ik.val).nbytes),),
+            ))
+        else:
+            spliced.append(PlanStep(
+                "compute", (ren.get(id(ik), ik),), (ov,), _alias_run, op="alias",
+            ))
+    return spliced
+
+
+def inline_pjit(plan: PartitionPlan) -> PassReport:
+    """Splice trivial pjit bodies into the outer step list.
+
+    Trivial = no nested control flow left in the body (a nested *trivial*
+    pjit was already inlined when the body itself was optimized, so any
+    surviving ``inner`` means scan or a big call) and at most
+    ``INLINE_MAX_STEPS`` steps.  Inlined steps keep their ``flops``/``wbytes``
+    annotations, so ``total_flops`` is unchanged and ``plan_peak_bytes`` now
+    sees the body's intermediates directly instead of a pre-aggregated
+    ``transient_bytes`` peak.
+    """
+    rep = PassReport("inline-pjit")
+    out: List[PlanStep] = []
+    for step in plan.steps:
+        if (step.kind != "compute" or step.op != "pjit" or step.inner is None
+                or len(step.inner.steps) > INLINE_MAX_STEPS
+                or any(s.inner is not None for s in step.inner.steps)):
+            out.append(step)
+            continue
+        spliced = _splice_body(step)
+        out.extend(spliced)
+        rep.inlined_bodies += 1
+    if rep.inlined_bodies:
+        plan.steps[:] = out
+    return rep
+
+
+# ---------------------------------------------------------------------------------
+# pass 2: loop-invariant reshard hoisting out of scan bodies
+# ---------------------------------------------------------------------------------
+
+
+def hoist_scan_invariants(plan: PartitionPlan) -> PassReport:
+    """Lift reshards of loop-invariant scan inputs out of the body.
+
+    A scan *const* is bound once and reused every iteration; when the body's
+    **only** use of a const invar is a reshard step (the classic per-iteration
+    param gather), replaying that collective
+    per iteration is pure waste: the pass moves the reshard into the outer
+    plan just before the scan (executed once), feeds the scan the
+    pre-resharded value, and rewires the body's consumers to read the invar
+    directly.  Carries and xs change per
+    iteration and are never hoisted.  The body edit mutates ``inner.steps``
+    in place — the scan's run closure holds the same plan object.
+    """
+    rep = PassReport("scan-hoist")
+    out: List[PlanStep] = []
+    for step in plan.steps:
+        if step.kind != "compute" or step.op != "scan" or step.inner is None:
+            out.append(step)
+            continue
+        inner = step.inner
+        nc = int(step.call.get("num_consts", 0))
+        trips = int(step.call.get("trips", 1))
+        # resolve free-alias chains: a const routed through annotate aliases
+        # before its reshard is still loop-invariant
+        canon: Dict[int, object] = {}
+        for s in inner.steps:
+            if _is_free_alias(s):
+                _canon_insert(canon, s)
+        out_ids = {id(k) for k in inner.out_keys
+                   if not isinstance(k, excore.Literal)}
+        new_reads = list(step.reads)
+        drop: set = set()
+        for i in range(min(nc, len(inner.jaxpr.invars))):
+            bv = inner.jaxpr.invars[i]
+            if id(bv) in out_ids:
+                continue
+            chain_ids = {id(bv)} | {
+                wid for wid, root in canon.items() if root is bv
+            }
+            if chain_ids & out_ids:
+                continue
+            # exactly one reshard may consume the const (hoisting rebinds the
+            # body invar to the resharded value, so a second reshard with a
+            # different target would read the wrong source)
+            cands = [
+                j for j, s in enumerate(inner.steps)
+                if s.kind == "reshard" and s.program is not None
+                and not isinstance(s.reads[0], excore.Literal)
+                and id(s.reads[0]) in chain_ids
+            ]
+            if len(cands) != 1:
+                continue
+            j = cands[0]
+            rs = inner.steps[j]
+            if id(rs.writes[0]) in out_ids:
+                continue
+            # every other reader of the const (or of a chain alias) must be a
+            # chain alias itself — anything else sees the pre-reshard value
+            hoistable = True
+            for j2, s2 in enumerate(inner.steps):
+                if j2 == j:
+                    continue
+                reads_chain = any(
+                    not isinstance(r, excore.Literal) and id(r) in chain_ids
+                    for r in s2.reads
+                )
+                if reads_chain and not (
+                    _is_free_alias(s2) and id(s2.writes[0]) in chain_ids
+                ):
+                    hoistable = False
+                    break
+            if not hoistable:
+                continue
+            proxy = ProxyVar("hoist.const")
+            out.append(dataclasses.replace(
+                rs, reads=(new_reads[i],), writes=(proxy,),
+            ))
+            new_reads[i] = proxy
+            # body consumers of the reshard result now read its (aliased)
+            # source, which after the rebind holds the resharded value
+            w, src = rs.writes[0], rs.reads[0]
+            for s2 in inner.steps:
+                if any(r is w for r in s2.reads):
+                    s2.reads = tuple(src if r is w else r for r in s2.reads)
+            inner.in_shardings[i] = rs.program.dst
+            drop.add(j)
+            rep.hoisted_reshards += 1
+            rep.wire_bytes_saved += max(trips - 1, 0) * rs.program.cost_bytes
+            rep.launch_s_saved += max(trips - 1, 0) * COLLECTIVE_LAUNCH_S * sum(
+                1 for ps in rs.program.steps if ps.op != "dynamic_slice"
+            )
+        if drop:
+            inner.steps[:] = [
+                s for j, s in enumerate(inner.steps) if j not in drop
+            ]
+            from .plan import plan_peak_bytes
+
+            inner.peak_bytes = plan_peak_bytes(inner)
+            step.transient_bytes = inner.peak_bytes
+            step.reads = tuple(new_reads)
+        out.append(step)
+    if rep.hoisted_reshards:
+        plan.steps[:] = out
+    return rep
+
+
 # ---------------------------------------------------------------------------------
 # pass 1: reshard CSE
 # ---------------------------------------------------------------------------------
@@ -155,6 +463,27 @@ def _roots(plan: PartitionPlan) -> set:
     return {k for k in plan.out_keys if not isinstance(k, excore.Literal)}
 
 
+def _is_free_alias(step: PlanStep) -> bool:
+    """A pure env copy: annotate-with-matching-sharding or a CSE alias."""
+    return (step.kind == "compute" and step.op in ("alias", "annotate")
+            and len(step.reads) == 1 and len(step.writes) == 1
+            and not isinstance(step.reads[0], excore.Literal))
+
+
+def _canon_insert(canon: Dict[int, object], step: PlanStep) -> None:
+    """Record a free alias in a value-root map (``id(write) -> root``).
+
+    Roots are resolved at insert time, so chains stay depth-1 and lookups are
+    ``canon.get(id(k), k)`` loops of at most one hop.  Shared by alias-aware
+    CSE and scan-invariant hoisting so both passes agree on which env keys
+    name the same value.
+    """
+    r = step.reads[0]
+    while id(r) in canon:
+        r = canon[id(r)]
+    canon[id(step.writes[0])] = r
+
+
 def reshard_cse(plan: PartitionPlan) -> PassReport:
     """Memoize identical (value, target-sharding) reshards across consumers.
 
@@ -163,18 +492,32 @@ def reshard_cse(plan: PartitionPlan) -> PassReport:
     collective sequence.  This pass keeps the first occurrence and rewires
     later readers to its result.  A duplicate whose result is a jaxpr output
     is replaced by a free alias (the env write must still happen).
+
+    Reshard sources resolve through free-alias chains to a canonical root
+    (an alias is the same value under another env key), so two inlined pjit
+    bodies that each route the same param through their own annotate alias
+    before gathering it still CSE into one gather.
     """
     rep = PassReport("reshard-cse")
     roots = _roots(plan)
     seen: Dict[Tuple[int, tuple], object] = {}
     rewrite: Dict[int, object] = {}
+    canon: Dict[int, object] = {}  # alias write -> resolved value root
     keepalive: List[object] = []  # hold replaced keys so id()s stay unique
+
+    def _root(k):
+        while id(k) in canon:
+            k = canon[id(k)]
+        return k
+
     out: List[PlanStep] = []
     for step in plan.steps:
         if rewrite:
             step.reads = tuple(rewrite.get(id(k), k) for k in step.reads)
+        if _is_free_alias(step):
+            _canon_insert(canon, step)
         if step.kind == "reshard" and step.program is not None:
-            key = (id(step.reads[0]), step.program.dst.dims_mapping)
+            key = (id(_root(step.reads[0])), step.program.dst.dims_mapping)
             prior = seen.get(key)
             if prior is not None:
                 rep.removed_steps += 1
@@ -203,13 +546,15 @@ def reshard_cse(plan: PartitionPlan) -> PassReport:
 
 
 def dead_reshard_elim(plan: PartitionPlan) -> PassReport:
-    """Drop reshard steps whose result nothing reads.
+    """Drop reshard steps (and free aliases) whose result nothing reads.
 
     Arises from user annotations on values the program never consumes and
-    from CSE orphaning duplicates.  Iterates backwards so a chain of reshards
+    from CSE orphaning duplicates — alias-aware CSE in particular leaves
+    behind dead alias copies when it rewires a reshard past an inlined
+    body's annotate chain.  Iterates backwards so a chain of reshards
     feeding only a dead reshard dies with it.  No-op reshards (source already
     matching the target) are never emitted by the builder, so this pass only
-    sees real collectives.
+    sees real collectives (plus zero-cost aliases).
     """
     rep = PassReport("dead-reshard-elim")
     roots = _roots(plan)
@@ -220,18 +565,20 @@ def dead_reshard_elim(plan: PartitionPlan) -> PassReport:
     keep = [True] * len(plan.steps)
     for i in range(len(plan.steps) - 1, -1, -1):
         step = plan.steps[i]
-        if step.kind != "reshard" or step.program is None:
+        is_reshard = step.kind == "reshard" and step.program is not None
+        if not is_reshard and not _is_free_alias(step):
             continue
         w = step.writes[0]
         if w in roots or nreads.get(id(w), 0) > 0:
             continue
         keep[i] = False
         rep.removed_steps += 1
-        rep.wire_bytes_saved += step.program.cost_bytes
-        rep.launch_s_saved += COLLECTIVE_LAUNCH_S * sum(
-            1 for ps in step.program.steps if ps.op != "dynamic_slice"
-        )
-        plan.stats.remove_program(step.program)
+        if is_reshard:
+            rep.wire_bytes_saved += step.program.cost_bytes
+            rep.launch_s_saved += COLLECTIVE_LAUNCH_S * sum(
+                1 for ps in step.program.steps if ps.op != "dynamic_slice"
+            )
+            plan.stats.remove_program(step.program)
         for k in step.reads:
             nreads[id(k)] -= 1
     plan.steps[:] = [s for s, f in zip(plan.steps, keep) if f]
@@ -514,6 +861,140 @@ def fuse_collectives(plan: PartitionPlan, bucket_bytes: Optional[float] = None) 
 
 
 # ---------------------------------------------------------------------------------
+# pass 7: overlap-aware list scheduling
+# ---------------------------------------------------------------------------------
+
+
+def _step_durations(step: PlanStep, mesh) -> Tuple[float, float]:
+    """(compute_s, comm_s) of one step under the roofline constants.
+
+    Wire steps occupy the interconnect; compute steps occupy the FLOPs unit;
+    a pjit/scan call step occupies *both* for the duration of its (trip-
+    multiplied) inner program, since its internal schedule is opaque here.
+    """
+    if step.kind == "reshard" and step.program is not None:
+        launches = sum(
+            1 for ps in step.program.steps if ps.op != "dynamic_slice"
+        )
+        return 0.0, (step.program.cost_bytes / ICI_BW
+                     + launches * COLLECTIVE_LAUNCH_S)
+    if step.kind == "collective":
+        return 0.0, (_psum_wire_bytes(mesh, step.axes, step.in_bytes) / ICI_BW
+                     + COLLECTIVE_LAUNCH_S)
+    if step.kind == "fused":
+        return 0.0, (getattr(step, "_wire_bytes", 0.0) / ICI_BW
+                     + COLLECTIVE_LAUNCH_S)
+    comm = 0.0
+    if step.inner is not None:
+        trips = step.call.get("trips", 1)
+        comm = trips * (
+            whole_wire_bytes(step.inner) / ICI_BW
+            + whole_collective_launches(step.inner) * COLLECTIVE_LAUNCH_S
+        )
+    return step.flops / PEAK_FLOPS, comm
+
+
+def schedule_overlap(plan: PartitionPlan) -> PassReport:
+    """Reorder dataflow-independent steps to hide collective time behind
+    compute, and record the max-of-terms overlap model.
+
+    Greedy list scheduling onto a two-resource machine (compute unit,
+    interconnect): among the dependency-ready steps, always place the one
+    that can start earliest, preferring a wire step on ties so collectives
+    issue as soon as their inputs exist and compute fills the wire time.
+    Slot times come from :func:`repro.analysis.roofline.overlap_time_s` —
+    a call step running compute and inner collectives concurrently costs
+    ``max`` of the two terms plus the unhidden sliver, not their sum.
+
+    Pure reordering: zero bytes or launches change, and the emitted order is
+    a topological order of the dataflow, so execution semantics are
+    untouched.  The report carries ``overlap_ratio`` = modeled makespan over
+    the serial reference (1.0 = nothing hidden) and the term totals in
+    ``detail``.
+    """
+    rep = PassReport("overlap-schedule")
+    steps = plan.steps
+    n = len(steps)
+    mesh = plan.mesh
+    durs = [_step_durations(s, mesh) for s in steps]
+    producer: Dict[int, int] = {}
+    for j, s in enumerate(steps):
+        for w in s.writes:
+            producer[id(w)] = j
+    deps: List[set] = []
+    for j, s in enumerate(steps):
+        d = set()
+        for r in s.reads:
+            if isinstance(r, excore.Literal):
+                continue
+            p = producer.get(id(r))
+            if p is not None and p != j:
+                d.add(p)
+        deps.append(d)
+    succs: List[List[int]] = [[] for _ in range(n)]
+    indeg = [0] * n
+    for j, d in enumerate(deps):
+        indeg[j] = len(d)
+        for p in d:
+            succs[p].append(j)
+    finish = [0.0] * n
+    dep_ready = [0.0] * n  # max finish over scheduled deps, kept incrementally
+    ready = [j for j in range(n) if indeg[j] == 0]
+    tc = tm = 0.0  # resource availability: compute, interconnect
+    order: List[int] = []
+    while ready:
+        # the resource clocks move every iteration, so candidate start times
+        # cannot be precomputed — but dep_ready can, which keeps the pick
+        # loop O(|ready|) instead of O(|ready| · deps)
+        best = None
+        for j in ready:
+            dc, dm = durs[j]
+            start = dep_ready[j]
+            if dc > 0.0:
+                start = max(start, tc)
+            if dm > 0.0:
+                start = max(start, tm)
+            dur = overlap_time_s(dc, dm) if (dc > 0.0 and dm > 0.0) else dc + dm
+            key = (start, 0 if (dm > 0.0 and dc == 0.0) else 1, j)
+            if best is None or key < best[0]:
+                best = (key, j, start + dur)
+        key, j, f = best
+        ready.remove(j)
+        order.append(j)
+        finish[j] = f
+        dc, dm = durs[j]
+        if dc > 0.0:
+            tc = f
+        if dm > 0.0:
+            tm = f
+        for k in succs[j]:
+            indeg[k] -= 1
+            if finish[j] > dep_ready[k]:
+                dep_ready[k] = finish[j]
+            if indeg[k] == 0:
+                ready.append(k)
+    assert len(order) == n, "schedule_overlap: dependency cycle in plan steps"
+    compute_total = sum(d[0] for d in durs)
+    comm_total = sum(d[1] for d in durs)
+    serial = sum(
+        overlap_time_s(dc, dm) if (dc > 0.0 and dm > 0.0) else dc + dm
+        for dc, dm in durs
+    )
+    makespan = max(finish, default=0.0)
+    rep.moved_steps = sum(1 for pos, j in enumerate(order) if pos != j)
+    rep.overlap_ratio = makespan / serial if serial > 0.0 else 1.0
+    rep.detail = {
+        "compute_s": compute_total,
+        "comm_s": comm_total,
+        "serial_s": serial,
+        "overlapped_s": makespan,
+    }
+    if rep.moved_steps:
+        plan.steps[:] = [steps[j] for j in order]
+    return rep
+
+
+# ---------------------------------------------------------------------------------
 # the pipeline
 # ---------------------------------------------------------------------------------
 
@@ -543,30 +1024,37 @@ def _wire_bytes(plan: PartitionPlan) -> float:
 
 def optimize_plan(plan: PartitionPlan,
                   bucket_bytes: Optional[float] = None) -> PartitionPlan:
-    """Run the whole-plan pass pipeline (CSE → DCE → fusion) on ``plan``.
+    """Run the whole-program pass pipeline (inline → hoist → CSE → DCE →
+    alias-sink → fusion → overlap-schedule) on ``plan``.
 
     Mutates ``plan.steps``/``plan.stats`` in place (inner pjit/scan plans are
     captured by reference in step closures) and attaches an :class:`OptReport`
-    with before/after wire bytes and collective-launch counts.
+    with before/after whole-program wire bytes and collective-launch counts
+    plus the overlap-schedule model.
     """
     steps_before = len(plan.steps)
-    coll_before = count_collective_launches(plan.steps)
-    bytes_before = _wire_bytes(plan)
+    coll_before = whole_collective_launches(plan)
+    bytes_before = whole_wire_bytes(plan)
     reports = [
+        inline_pjit(plan),
+        hoist_scan_invariants(plan),
         reshard_cse(plan),
         dead_reshard_elim(plan),
         sink_output_aliases(plan),
         fuse_collectives(plan, bucket_bytes),
+        schedule_overlap(plan),
     ]
+    sched = reports[-1]
     plan.stats.steps = len(plan.steps)
     plan.opt_report = OptReport(
         passes=reports,
         steps_before=steps_before,
         steps_after=len(plan.steps),
         collectives_before=coll_before,
-        collectives_after=count_collective_launches(plan.steps),
+        collectives_after=whole_collective_launches(plan),
         wire_bytes_before=bytes_before,
-        wire_bytes_after=_wire_bytes(plan),
+        wire_bytes_after=whole_wire_bytes(plan),
+        overlap=dict(sched.detail, ratio=sched.overlap_ratio),
     )
     from .plan import plan_peak_bytes
 

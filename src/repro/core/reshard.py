@@ -22,9 +22,13 @@ axis on another dim so slices can shrink it before it returns.
 
 ``reshard_local(x, cur, tgt)`` is the plan-then-execute convenience used by
 the dynamic reference partitioner; the compiled-plan path
-(``core/plan.py``) calls ``plan_reshard`` once at plan time and replays the
-program on every execution.  All dims are assumed evenly divisible (uneven
-dims are padded to multiples beforehand, §4.1 — see sharding.pad_to_multiple).
+(``core/plan.py``) calls ``plan_reshard`` once at plan time, emits the result
+as a first-class reshard step, and replays the program on every execution —
+whether the step executes where the builder put it is then the whole-program
+optimizer's business (``core/plan_opt.py``: CSE across call boundaries once
+pjit bodies are inlined, hoisting out of scan bodies, fusion, overlap
+scheduling).  All dims are assumed evenly divisible (uneven dims are padded
+to multiples beforehand, §4.1 — see sharding.pad_to_multiple).
 """
 from __future__ import annotations
 
