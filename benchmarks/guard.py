@@ -18,6 +18,11 @@ regresses:
 * autoshard cells — the search stops finding a feasible assignment, the
   searched modeled cost exceeds the hand-annotated baseline or regresses vs
   the committed record, or the assignment breaks its memory budget;
+* pipeline cells (§3.3 stage-stacked pipelining) — no pipeline decision is
+  feasible any more, the searched stage count loses to the handpicked one,
+  the bubble fraction drifts from (S−1)/(M+S−1), modeled ppermute bytes or
+  the pipelined cost regress, or a cell where pipelining matched/beat (or
+  uniquely fit the memory budget vs) pure tensor stops doing so;
 * lattice telemetry — a reshard in the benchmark set starts hitting the
   node/depth caps of the branch-and-bound search;
 * cache cells — the per-runner or process-level hit rate drops.
@@ -134,6 +139,38 @@ def _check_autoshard_cell(msgs, name, base, fresh):
                     f"over budget {fresh['budget_bytes']:.3e}B")
 
 
+def _check_pipeline_cell(msgs, name, base, fresh):
+    """§3.3 pipeline cells: the searched stage count must never lose to the
+    handpicked reference (it is a point in the decision space), the bubble
+    must match its closed form (S−1)/(M+S−1), the modeled ppermute traffic
+    and pipeline cost must not regress, and a cell where pipelining beat (or
+    was the only fit for) pure tensor must stay that way."""
+    if base.get("pipeline_feasible") and not fresh.get("pipeline_feasible"):
+        _fail(msgs, f"{name}: no pipeline decision is feasible any more")
+        return
+    if not fresh.get("pipeline_feasible"):
+        return
+    if fresh["ratio_vs_handpicked"] > 1.0 + _EPS:
+        _fail(msgs, f"{name}: searched stage count worse than handpicked "
+                    f"(ratio {fresh['ratio_vs_handpicked']:.3f} > 1.0)")
+    dec = fresh["chosen"]
+    want_bubble = (dec["num_stages"] - 1) / (
+        dec["num_microbatches"] + dec["num_stages"] - 1)
+    if abs(fresh["bubble_fraction"] - want_bubble) > _EPS:
+        _fail(msgs, f"{name}: bubble {fresh['bubble_fraction']:.4f} != "
+                    f"closed form {want_bubble:.4f}")
+    if base.get("pipeline_feasible"):
+        for k in ("pipeline_total_s", "ppermute_bytes"):
+            if base.get(k) is not None and fresh[k] > base[k] * (1 + _EPS):
+                _fail(msgs, f"{name}: {k} {base[k]:.3e} -> {fresh[k]:.3e}")
+        if base.get("pipeline_chosen") and not fresh.get("pipeline_chosen"):
+            _fail(msgs, f"{name}: pipelining no longer at or below the best "
+                        f"pure-tensor assignment")
+        if base.get("mixed") and not fresh.get("mixed"):
+            _fail(msgs, f"{name}: chosen assignment no longer mixes pipeline "
+                        f"and tensor axes")
+
+
 def _check_lattice(msgs, base, fresh):
     b = base.get("lattice_telemetry")
     f = fresh.get("lattice_telemetry")
@@ -168,7 +205,8 @@ def compare(base: dict, fresh: dict):
     for kind, checker in (("cells", _check_reshard_cell),
                           ("opt_cells", _check_opt_cell),
                           ("inline_cells", _check_inline_cell),
-                          ("autoshard_cells", _check_autoshard_cell)):
+                          ("autoshard_cells", _check_autoshard_cell),
+                          ("pipeline_cells", _check_pipeline_cell)):
         base_cells = {c["name"]: c for c in base.get(kind, [])}
         fresh_cells = {c["name"]: c for c in fresh.get(kind, [])}
         for name, bc in base_cells.items():
@@ -206,7 +244,8 @@ def main() -> int:
         return 1
     ncells = (len(base.get("cells", [])) + len(base.get("opt_cells", []))
               + len(base.get("inline_cells", []))
-              + len(base.get("autoshard_cells", [])))
+              + len(base.get("autoshard_cells", []))
+              + len(base.get("pipeline_cells", [])))
     path = plan_smoke.write_artifact(fresh)
     print(f"bench-guard: OK ({ncells} cells, no regressions vs committed baseline)")
     print(f"# artifact refreshed: {path}")

@@ -67,6 +67,49 @@ def plan_build_report():
     return time_plan_builds(mesh, opt_programs + inline_programs)
 
 
+def pipeline_perf_report(repeats: int = 2):
+    """Micro-timings of the §3.3 pipeline path per bench cell: tracing the
+    stage-stacked registry loss and one cost-only lowering of it.  Recorded
+    into ``BENCH_plan.json["pipeline_build_ms"]`` — never guarded (wall time
+    is machine-dependent; the modeled numbers in ``pipeline_cells`` are the
+    guarded surface)."""
+    from repro import autoshard
+    from repro.core.plan import lower_for_cost
+    from repro.core.sharding import Mesh
+    from repro.pipeline.schedule import PipelineDecision
+
+    from .plan_smoke import _PIPELINE_CASES
+
+    mesh = Mesh.create((2, 4), ("data", "model"))
+    rows = []
+    for name, arch, rk, batch, seq, _budget, stage_axes, mb in _PIPELINE_CASES:
+        ax = (stage_axes or ("model",))[0]
+        dec = PipelineDecision(ax, mesh.axis_size(ax), mb or 2)
+
+        def trace():
+            return autoshard.registry_pipeline_problem(
+                arch, mesh, dec, batch, seq, rk)
+
+        closed, baseline, _ = trace()
+
+        def best(fn):
+            b = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                fn()
+                b = min(b, (time.perf_counter() - t0) * 1e3)
+            return b
+
+        rows.append({
+            "name": name,
+            "decision": dec.as_dict(),
+            "trace_ms": best(trace),
+            "cost_lower_ms": best(
+                lambda: lower_for_cost(closed, baseline, mesh)),
+        })
+    return rows
+
+
 def show(rec, base=None):
     from repro.analysis.roofline import terms_from_artifact
 
@@ -105,6 +148,9 @@ def main():
     ap.add_argument("--plan-build", action="store_true",
                     help="print plan-build micro-timings for the smoke "
                          "benchmark programs and exit")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="print §3.3 pipeline trace/lowering micro-timings "
+                         "for the pipeline bench cells and exit")
     args = ap.parse_args()
     if args.plan_build:
         for row in plan_build_report():
@@ -112,8 +158,17 @@ def main():
                   f"opt={row['build_opt_ms']:.2f}ms "
                   f"passes=+{row['pass_overhead_ms']:.2f}ms")
         return
+    if args.pipeline:
+        for row in pipeline_perf_report():
+            d = row["decision"]
+            print(f"pipeline_build/{row['name']} "
+                  f"[{d['stage_axis']}xS{d['num_stages']}xM"
+                  f"{d['num_microbatches']}]: trace={row['trace_ms']:.1f}ms "
+                  f"cost_lower={row['cost_lower_ms']:.1f}ms")
+        return
     if args.arch is None or args.shape is None or args.tag is None:
-        ap.error("arch, shape and --tag are required unless --plan-build")
+        ap.error("arch, shape and --tag are required unless --plan-build "
+                 "or --pipeline")
     overrides = json.loads(args.overrides)
     rec = dryrun_cell(
         args.arch, args.shape, strategy=args.strategy,

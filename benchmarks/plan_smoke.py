@@ -337,6 +337,123 @@ def _inline_cells():
 
 
 # ---------------------------------------------------------------------------------
+# pipeline cells: §3.3 stage-stacked pipelining searched jointly with tensor
+# sharding on two registry configs
+# ---------------------------------------------------------------------------------
+
+# (name, arch, reduce_k, batch, seq, budget, stage_axes): small batch
+# exhausts the data axis.  Cell 1's budget sits below the best pure-tensor
+# peak — the regime where microbatched pipelining is how the step FITS (the
+# shifting buffer holds one microbatch per stage row, so its live peak is
+# the lower one); its stage axis is pinned to `model`, the classic
+# PP-over-model × DP-over-data mix.  Cell 2's budget admits both pure tensor
+# and pipelining, and the searched pipeline point beats the searched pure-
+# tensor assignment outright on modeled seconds — the acceptance cell for
+# "mixed assignment at modeled cost <= best pure tensor".
+_PIPELINE_CASES = (
+    # (name, arch, reduce_k, batch, seq, budget, stage_axes, microbatches)
+    ("pipeline_qwen1_5_0_5b", "qwen1.5-0.5b", 6, 4, 32, 35e6, ("model",), None),
+    ("pipeline_phi4_mini_3_8b", "phi4-mini-3.8b", 8, 4, 16, 80e6, None, 2),
+)
+_PIPELINE_KNOBS = dict(top_n=3, sa_steps=4, beam_width=3, max_candidates=8)
+
+
+def _pipeline_cells():
+    from repro import autoshard
+    from repro.autoshard.space import pipeline_decisions
+    from repro.core.sharding import Mesh
+    from repro.pipeline import PipelineConfig
+    from repro.pipeline.schedule import schedule_cost
+
+    mesh = Mesh.create((2, 4), ("data", "model"))
+
+    def fin(x):
+        return x if x is not None and np.isfinite(x) else None
+
+    cells = []
+    for name, arch, rk, batch, seq, budget, stage_axes, mb in _PIPELINE_CASES:
+        pcfg = PipelineConfig(max_stages=4, stage_axes=stage_axes,
+                              num_microbatches=mb)
+        cfg = autoshard.AutoshardConfig(budget_bytes=budget, **_PIPELINE_KNOBS)
+        t0 = time.perf_counter()
+        closed, baseline = autoshard.registry_problem(arch, mesh, batch, seq, rk)
+        pure = autoshard.solve_problem(closed, mesh, cfg, baseline=baseline)
+        from repro.configs.registry import get_config
+        from repro.launch.train import reduced_config
+
+        rcfg = reduced_config(get_config(arch), rk)
+        decisions = pipeline_decisions(mesh, rcfg.num_layers, batch, pcfg)
+        handpicked = None  # first decision = the handpicked reference
+        best = None  # cheapest searched pipeline point
+        for dec in decisions:
+            try:
+                cp, bp, state_shape = autoshard.registry_pipeline_problem(
+                    arch, mesh, dec, batch, seq, rk)
+            except ValueError:
+                continue
+            r = autoshard.solve_problem(cp, mesh, cfg, baseline=bp)
+            ent = (dec, r, cp, state_shape)
+            if handpicked is None:
+                handpicked = ent
+            if r.evaluation.feasible and (
+                    best is None or r.evaluation.score < best[1].evaluation.score):
+                best = ent
+        ms = (time.perf_counter() - t0) * 1e3
+        cell = {
+            "name": name,
+            "arch": arch,
+            "mesh": list(mesh.shape),
+            "reduce_k": rk,
+            "batch": batch,
+            "seq": seq,
+            "budget_bytes": budget,
+            "decisions_searched": len(decisions),
+            "pure_feasible": bool(pure.evaluation.feasible),
+            "pure_total_s": fin(pure.evaluation.score),
+            "pipeline_feasible": bool(
+                best is not None and best[1].evaluation.feasible),
+            "search_ms": ms,
+        }
+        if best is not None:
+            dec, r, cp, state_shape = best
+            sched = schedule_cost(cp, r.assignment, mesh, dec,
+                                  state_shape=state_shape)
+            hp_score = handpicked[1].evaluation.score
+            # the §3.3 decision contract: the searched stage count never
+            # loses to the handpicked one (it is a point in the search)
+            cell.update({
+                "chosen": dec.as_dict(),
+                "bubble_fraction": sched.bubble,
+                "ppermute_bytes": sched.ppermute_bytes,
+                "ppermute_launches": sched.ppermute_launches,
+                "microbatch_activation_bytes": sched.microbatch_activation_bytes,
+                "pipeline_total_s": fin(r.evaluation.score),
+                "pipeline_peak_bytes": fin(r.evaluation.cost.peak_bytes),
+                "handpicked": handpicked[0].as_dict(),
+                "handpicked_total_s": fin(hp_score),
+                "ratio_vs_handpicked": (
+                    r.evaluation.score / hp_score
+                    if np.isfinite(hp_score) and hp_score else 1.0),
+                # <= 1.0 means pipelining matches-or-beats the best pure-
+                # tensor point (inf pure = only pipelining fits the budget)
+                "ratio_vs_pure_tensor": (
+                    r.evaluation.score / pure.evaluation.score
+                    if pure.evaluation.feasible and pure.evaluation.score
+                    else 0.0),
+                "pipeline_chosen": bool(
+                    r.evaluation.feasible
+                    and r.evaluation.score <= pure.evaluation.score),
+                "mixed": bool(any(
+                    s is not None and any(
+                        a != dec.stage_axis
+                        for dm in s.dims_mapping for a in dm)
+                    for s in r.assignment)),
+            })
+        cells.append(cell)
+    return cells
+
+
+# ---------------------------------------------------------------------------------
 # autoshard cells: searched-vs-hand-annotated modeled cost per registry config
 # ---------------------------------------------------------------------------------
 
@@ -505,6 +622,7 @@ def smoke_record() -> dict:
     rec["opt_cells"] = _opt_cells()
     rec["inline_cells"] = _inline_cells()
     rec["autoshard_cells"] = _autoshard_cells()
+    rec["pipeline_cells"] = _pipeline_cells()
     rec.update(_cache_cell())
     rec["lattice_telemetry"] = {
         "cells": grid_telemetry,
@@ -512,9 +630,10 @@ def smoke_record() -> dict:
     }
     # plan-build micro-timings (benchmarks/perf.py): the pass pipeline's
     # compile-time cost — recorded in the artifact, never guarded
-    from .perf import plan_build_report
+    from .perf import pipeline_perf_report, plan_build_report
 
     rec["plan_build_ms"] = plan_build_report()
+    rec["pipeline_build_ms"] = pipeline_perf_report()
     return rec
 
 
@@ -567,6 +686,21 @@ def rows(rec: dict = None):
             f"ratio={cell['ratio_vs_baseline']:.3f} "
             f"peak={cell['searched_peak_bytes']/1e6:.1f}MB "
             f"evals={cell['evals']} search={cell['search_ms']:.0f}ms",
+        ))
+    for cell in rec.get("pipeline_cells", []):
+        if not cell.get("pipeline_feasible"):
+            out.append((f"pipeline/{cell['arch']}", 0.0, "no feasible decision"))
+            continue
+        dec = cell["chosen"]
+        out.append((
+            f"pipeline/{cell['arch']}", 0.0,
+            f"{dec['stage_axis']}xS{dec['num_stages']}xM{dec['num_microbatches']} "
+            f"bubble={cell['bubble_fraction']:.3f} "
+            f"ppermute={cell['ppermute_bytes']:.2e}B/{cell['ppermute_launches']} "
+            f"pipe={cell['pipeline_total_s']:.3e}s "
+            f"pure={cell['pure_total_s'] if cell['pure_total_s'] is not None else 'inf'} "
+            f"vs_handpicked={cell['ratio_vs_handpicked']:.3f} "
+            f"chosen={cell['pipeline_chosen']} mixed={cell['mixed']}",
         ))
     lt = rec.get("lattice_telemetry", {})
     if lt:

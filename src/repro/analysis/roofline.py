@@ -97,6 +97,19 @@ def collective_time_s(kind: str, group_size: int, in_bytes: float) -> float:
     return COLLECTIVE_LAUNCH_S + collective_wire_bytes(kind, group_size, in_bytes) / ICI_BW
 
 
+def ppermute_time_s(in_bytes: float, group_size: int = 2) -> float:
+    """Modeled wall time of one CollectivePermute hop (§3.3 pipeline shift).
+
+    The shifting-buffer ppermute is a single neighbor hop: every device
+    forwards its boundary stage row once, so the wire cost is the payload
+    itself (``collective_wire_bytes("collective-permute") = B`` — no (n-1)
+    ring factor, the defining advantage over gather-based stage handoff)
+    plus one launch.  ``group_size <= 1`` (stage dim unsharded) is free wire.
+    """
+    return COLLECTIVE_LAUNCH_S + collective_wire_bytes(
+        "collective-permute", group_size, in_bytes) / ICI_BW
+
+
 def fusion_bucket_bytes() -> float:
     """Bucket-size cap for collective fusion (``core/plan_opt.py``).
 

@@ -21,6 +21,7 @@ from .api import (
     assignment_from_json,
     clear_assignment_cache,
     load,
+    registry_pipeline_problem,
     registry_problem,
     sharding_from_spec,
     solve,
@@ -35,13 +36,15 @@ from .space import (
     candidate_shardings,
     fits_budget,
     local_bytes,
+    pipeline_decisions,
 )
 
 __all__ = [
     "AutoshardConfig", "AutoshardResult", "Evaluation", "Evaluator",
     "SearchResult", "assignment_bytes", "assignment_from_json",
     "candidate_shardings", "clear_assignment_cache", "fits_budget",
-    "load", "local_bytes", "registry_problem", "search",
+    "load", "local_bytes", "pipeline_decisions",
+    "registry_pipeline_problem", "registry_problem", "search",
     "sharding_from_spec", "solve", "solve_jaxpr", "solve_jaxpr_cached",
     "solve_problem",
 ]

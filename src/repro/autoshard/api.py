@@ -52,6 +52,12 @@ class AutoshardConfig:
     seed: int = 0
     max_candidates: int = 16
     optimize: bool = True  # run plan_opt passes inside cost-only scoring
+    # optional memory *term* (not the hard budget): overshoot above
+    # ``soft_budget_bytes`` is priced into the objective at ``mem_weight``
+    # (PlanCost.mem_s) so tied assignments rank by live memory.  Off by
+    # default — zero weight leaves every existing score bit-identical.
+    mem_weight: float = 0.0
+    soft_budget_bytes: Optional[float] = None
 
     def cache_key(self) -> tuple:
         return dataclasses.astuple(self)
@@ -72,6 +78,9 @@ class AutoshardResult:
     searched_invars: Tuple[int, ...] = ()
     baseline: Optional[Evaluation] = None
     arch: str = ""
+    # pipeline search outcome: None for pure-tensor assignments, else the
+    # chosen decision + schedule terms (repro.pipeline ScheduleCost dict)
+    pipeline: Optional[Dict] = None
 
     @property
     def cost(self):
@@ -111,6 +120,7 @@ class AutoshardResult:
                 self.baseline_cost.as_dict()
                 if self.baseline_cost is not None else None
             ),
+            "pipeline": dict(self.pipeline) if self.pipeline else None,
         }
 
     def dump(self, path: str) -> str:
@@ -158,7 +168,8 @@ def solve_problem(closed, mesh: Mesh,
     searched space).  This is the shared core of :func:`solve` (registry
     configs) and :func:`solve_jaxpr` (bare jaxprs)."""
     ev = Evaluator(closed, mesh, budget_bytes=config.budget_bytes,
-                   optimize=config.optimize)
+                   optimize=config.optimize, mem_weight=config.mem_weight,
+                   soft_budget_bytes=config.soft_budget_bytes)
     base_ev = ev(list(baseline)) if baseline is not None else None
     res = search(
         ev, mesh,
@@ -296,16 +307,131 @@ def registry_problem(arch: str, mesh: Mesh, batch: int = 8, seq: int = 32,
     return closed, baseline
 
 
+def registry_pipeline_problem(arch: str, mesh: Mesh, decision,
+                              batch: int = 8, seq: int = 32,
+                              reduce_k: int = 16):
+    """Trace one registry config's loss in §3.3 stage-stacked pipelined form
+    (``repro.pipeline.stages.pipelined_loss_fn`` under ``decision``) and
+    derive the pipelined hand-annotated baseline: stacked-layer leaves get
+    the stage axis on their leading dim, then the Table-1 spec on the body
+    dims (axes the stage dim already uses are dropped); every other invar
+    keeps its unpipelined Table-1 spec.
+
+    Returns ``(closed_jaxpr, baseline_assignment, state_shape)`` —
+    ``state_shape`` is the global shifting-buffer shape for the schedule
+    cost model's activation-memory term.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import get_strategy
+    from repro.configs.registry import default_strategy, get_config
+    from repro.launch.train import reduced_config
+    from repro.models import api as model_api
+    from repro.models.layers import is_param, tree_shapes, tree_specs
+    from repro.pipeline.stages import pipelined_loss_fn
+
+    cfg = reduced_config(get_config(arch), reduce_k).with_(
+        attn_chunk=16, remat="none"
+    )
+    if cfg.num_layers % decision.num_stages:
+        raise ValueError(
+            f"{arch}: {cfg.num_layers} layers not divisible into "
+            f"{decision.num_stages} stages"
+        )
+    st = get_strategy(default_strategy(arch))
+    if model_api.pipeline_boundary(cfg, st) is None:
+        raise ValueError(f"{arch}: no stackable-layer boundary")
+    tree = model_api.param_tree(cfg, st)
+    S = decision.num_stages
+
+    def stage_stack_decl(p):
+        # (L, ...) declaration -> (S, L/S, ...); specs gain the stage axis on
+        # dim 0 (the leading None came from models.layers.stacked)
+        L = p["shape"][0]
+        spec = p["spec"]
+        entries = tuple(spec) if spec is not None else (None,)
+        return {
+            **p,
+            "shape": (S, L // S) + tuple(p["shape"][1:]),
+            "spec": P(*((decision.stage_axis,) + entries)),
+        }
+
+    tree["layers"] = jax.tree_util.tree_map(
+        stage_stack_decl, tree["layers"], is_leaf=is_param
+    )
+    shapes = tree_shapes(tree)
+    batch_in = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    closed = jax.make_jaxpr(
+        lambda p, b: pipelined_loss_fn(cfg, st, p, b, decision, mesh)
+    )(shapes, batch_in)
+    batch_specs = {k: P(("data",)) for k in batch_in}
+    spec_leaves = jax.tree_util.tree_leaves(
+        (tree_specs(tree), batch_specs),
+        is_leaf=lambda x: x is None or isinstance(x, P),
+    )
+    assert len(spec_leaves) == len(closed.jaxpr.invars), (
+        len(spec_leaves), len(closed.jaxpr.invars)
+    )
+    baseline = [
+        sharding_from_spec(mesh, s, tuple(v.aval.shape))
+        for s, v in zip(spec_leaves, closed.jaxpr.invars)
+    ]
+    mb = batch // decision.num_microbatches
+    state_shape = (S, mb, seq, cfg.d_model)
+    return closed, baseline, state_shape
+
+
 def solve(arch: str, mesh: Optional[Mesh] = None,
           config: AutoshardConfig = AutoshardConfig(),
-          batch: int = 8, seq: int = 32, reduce_k: int = 16) -> AutoshardResult:
+          batch: int = 8, seq: int = 32, reduce_k: int = 16,
+          pipeline=None) -> AutoshardResult:
     """Annotation-free sharding for a registry config on ``mesh``.
 
     Searches the input/parameter assignment for the (reduced) config's loss
     step, scores the hand-annotated Table-1 baseline as an extra search
     point, and returns the winner — by construction the searched assignment's
     modeled cost never exceeds the baseline's.
+
+    With ``pipeline`` (a :class:`repro.pipeline.PipelineConfig`) the decision
+    space widens to §3.3 stage-stacked pipelining: every (stage axis, stage
+    count, microbatch count) point is rewritten via
+    ``repro.pipeline.stages.pipelined_loss_fn`` and searched *jointly* with
+    tensor sharding over the remaining axes; the cheapest feasible point —
+    pipelined or pure-tensor — wins (a pipelined point also wins exact ties,
+    it strictly reduces live activation memory).  The chosen decision and its
+    schedule terms land in ``result.pipeline``.
     """
     mesh = mesh if mesh is not None else Mesh.create((2, 4), ("data", "model"))
     closed, baseline = registry_problem(arch, mesh, batch, seq, reduce_k)
-    return solve_problem(closed, mesh, config, baseline=baseline, arch=arch)
+    best = solve_problem(closed, mesh, config, baseline=baseline, arch=arch)
+    if pipeline is None:
+        return best
+    from repro.configs.registry import get_config
+    from repro.launch.train import reduced_config
+    from repro.pipeline.schedule import schedule_cost
+
+    from .space import pipeline_decisions
+
+    cfg = reduced_config(get_config(arch), reduce_k)
+    for dec in pipeline_decisions(mesh, cfg.num_layers, batch, pipeline):
+        try:
+            closed_p, baseline_p, state_shape = registry_pipeline_problem(
+                arch, mesh, dec, batch, seq, reduce_k
+            )
+        except ValueError:
+            continue
+        res = solve_problem(closed_p, mesh, config, baseline=baseline_p,
+                            arch=arch)
+        if not res.evaluation.feasible:
+            continue
+        if res.evaluation.score <= best.evaluation.score:
+            sched = schedule_cost(closed_p, res.assignment, mesh, dec,
+                                  state_shape=state_shape)
+            res.pipeline = sched.as_dict()
+            best = res
+    return best

@@ -48,14 +48,23 @@ class Evaluation:
 
 
 class Evaluator:
-    """Memoizing cost-only evaluator for one (jaxpr, mesh, budget) problem."""
+    """Memoizing cost-only evaluator for one (jaxpr, mesh, budget) problem.
+
+    ``budget_bytes`` is the *hard* per-device constraint (over it =
+    infeasible).  ``mem_weight`` / ``soft_budget_bytes`` enable the optional
+    memory *term*: overshoot above the soft budget is priced into the
+    candidate's ``total_s`` (``PlanCost.mem_s``), so otherwise-tied
+    assignments rank by live memory.  Off by default (weight 0)."""
 
     def __init__(self, closed, mesh: Mesh, budget_bytes: Optional[float] = None,
-                 optimize: bool = True):
+                 optimize: bool = True, mem_weight: float = 0.0,
+                 soft_budget_bytes: Optional[float] = None):
         self.closed = closed
         self.mesh = mesh
         self.budget_bytes = budget_bytes
         self.optimize = optimize
+        self.mem_weight = mem_weight
+        self.soft_budget_bytes = soft_budget_bytes
         self.cache: Dict[tuple, Evaluation] = {}
         self.lowerings = 0  # actual (non-memoized) cost lowerings
 
@@ -77,6 +86,11 @@ class Evaluator:
         except PlanError as e:
             ev = Evaluation(None, False, f"plan: {e}")
         else:
+            if self.mem_weight and self.soft_budget_bytes is not None:
+                cost = dataclasses.replace(
+                    cost, mem_weight=self.mem_weight,
+                    soft_budget_bytes=self.soft_budget_bytes,
+                )
             if self.budget_bytes is not None and cost.peak_bytes > self.budget_bytes:
                 ev = Evaluation(cost, False, "over memory budget")
             else:

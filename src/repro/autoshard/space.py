@@ -118,6 +118,47 @@ def fits_budget(
     return assignment_bytes(shapes, dtype_bytes, assignment) <= budget_bytes
 
 
+# ---------------------------------------------------------------------------------
+# pipeline decision variables (§3.3 stage-stacked pipelining)
+# ---------------------------------------------------------------------------------
+
+
+def pipeline_decisions(mesh: Mesh, num_layers: int, batch: int, pcfg):
+    """Enumerate the pipeline points of the search space.
+
+    One decision = (stage mesh axis, stage count, microbatch count).  Stage
+    counts are multiples of the axis size (each device row holds an equal
+    number of stage slots, so the shifting buffer's ppermute moves exactly
+    one boundary row) that divide the layer count and respect
+    ``pcfg.max_stages``; microbatch counts must divide the batch.  Returns
+    ``repro.pipeline.schedule.PipelineDecision`` objects, deterministic
+    order (axis listing, then S, then M) — the first entry is the
+    "handpicked" reference the benchmark ratio is measured against.
+    """
+    from repro.pipeline.schedule import PipelineDecision
+
+    axes = pcfg.stage_axes if pcfg.stage_axes is not None else mesh.axis_names
+    if pcfg.num_microbatches is not None:
+        m_opts = (pcfg.num_microbatches,)
+    else:
+        m_opts = tuple(pcfg.microbatch_options)
+    out = []
+    for ax in axes:
+        if ax not in mesh.axis_names:
+            continue
+        n = mesh.axis_size(ax)
+        if n < 2:
+            continue
+        s = n
+        while s <= pcfg.max_stages:
+            if num_layers % s == 0:
+                for m in m_opts:
+                    if m >= 1 and batch % m == 0:
+                        out.append(PipelineDecision(ax, s, m))
+            s += n
+    return out
+
+
 def swap_axes(s: MaybeSharding, a: str, b: str) -> MaybeSharding:
     """Exchange two mesh axes everywhere in one sharding (search move)."""
     if s is None:

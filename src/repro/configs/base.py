@@ -65,6 +65,10 @@ class ModelConfig:
     param_dtype: str = "float32"
     remat: str = "dots"  # none | dots | full
     scan_layers: bool = True
+    # pipeline (§3.3): the layer stack is homogeneous, so the pipeline
+    # subsystem may stage-stack it (models.api.pipeline_boundary).  Configs
+    # whose stack interleaves heterogeneous blocks declare False.
+    stackable_layers: bool = True
     scan_unroll: int = 1
     attn_chunk: int = 1024  # kv-chunked attention block size
     shard_kv_seq: bool = False  # decode: shard the kv-cache SEQ dim on X

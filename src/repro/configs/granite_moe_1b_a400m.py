@@ -7,4 +7,5 @@ CONFIG = ModelConfig(
     num_layers=24, d_model=1024, num_heads=16, num_kv_heads=8,
     d_ff=512, vocab_size=49155, mlp="swiglu", rope=True,
     moe=True, num_experts=32, top_k=8, moe_every=1,
+    stackable_layers=False,  # MoE FFN: aux-loss carry breaks the homogeneous-layer contract
 )

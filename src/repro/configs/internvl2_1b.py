@@ -7,4 +7,5 @@ CONFIG = ModelConfig(
     num_layers=24, d_model=896, num_heads=14, num_kv_heads=2,
     d_ff=4864, vocab_size=151655, mlp="swiglu", rope=True,
     num_prefix_tokens=256,
+    stackable_layers=False,  # ViT-prefix fusion sits inside the decode stack
 )

@@ -8,4 +8,5 @@ CONFIG = ModelConfig(
     d_ff=24576, vocab_size=65536, mlp="swiglu", rope=False,
     moe=True, num_experts=16, top_k=2, moe_every=2,
     ssm=True, ssm_state=128, ssm_head_dim=64, ssm_expand=2, attn_every=8,
+    stackable_layers=False,  # mamba/attention 1:7 interleave: heterogeneous stack
 )

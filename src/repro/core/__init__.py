@@ -18,3 +18,4 @@ from .sharding import (
 from .annotate import annotate, mesh_split_annotate
 from .propagation import propagate, Propagation
 from .apply import gspmd_jit, eval_with_constraints
+from .shift import stage_shift, take_stage_row

@@ -346,7 +346,11 @@ class SpmdPartitioner:
             outs = inner.run(closed.jaxpr, closed.consts, *consts, *carry, *x)
             return tuple(outs[:nk]), tuple(outs[nk:])
 
-        carry, ys = lax.scan(body, tuple(init), tuple(xs), length=p.get("length"))
+        # grad-of-scan is a reverse scan; replaying it forward permutes the
+        # per-trip xs/ys (same fix as the compiled-plan path)
+        carry, ys = lax.scan(body, tuple(init), tuple(xs),
+                             length=p.get("length"),
+                             reverse=bool(p.get("reverse", False)))
         outs = list(carry) + list(ys)
         # index-based classification: outputs [0, nk) are carries, the rest are
         # stacked ys that grow a leading (unsharded) scan dim.  (A membership

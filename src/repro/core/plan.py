@@ -635,6 +635,8 @@ class PlanBuilder:
             self._pjit(idx, eqn)
         elif name == "scan":
             self._scan(idx, eqn)
+        elif name == "stage_shift":
+            self._stage_shift(eqn)
         elif name == "iota":
             self._iota(eqn)
         else:
@@ -955,6 +957,110 @@ class PlanBuilder:
             * (int(np.prod(rsh)) // max(rsh[0], 1)),
         ))
 
+    def _stage_shift(self, eqn) -> None:
+        """§3.3 shifting buffer: ``out[0]=x, out[s]=state[s-1]`` (or the
+        mirror image under ``reverse``).
+
+        * stage dim replicated — one local concatenate, no communication;
+        * stage dim on ONE mesh axis — three steps: slice the boundary stage
+          row, ppermute it one position along the axis (a first-class
+          ``collective`` step, so plan_opt prices/schedules/fuses it), and
+          stitch the received row in front of the remaining local rows (the
+          injection row replaces the received one on the edge device);
+        * stage dim on stacked axes — gather the stage dim first (correct
+          fallback; the pipeline subsystem never emits this layout).
+        """
+        from jax import numpy as jnp
+
+        sv, xv = eqn.invars[0], eqn.invars[1]
+        ov = eqn.outvars[0]
+        reverse = bool(eqn.params["reverse"])
+        s = self.sharding_of(sv)
+        # the injected row must agree with the state's trailing dims and be
+        # replicated along the stage axis (it enters on one edge device)
+        x_tgt = Sharding(self.mesh, s.dims_mapping[1:])
+        xk = self.reshard_operand(xv, x_tgt)
+        axes = s.dims_mapping[0]
+        n = 1
+        for a in axes:
+            n *= self.mesh.axis_size(a)
+        if n > 1 and len(axes) > 1:
+            # stacked stage axes: fall back to an unsharded stage dim
+            s = s.with_dim(0, ())
+            sk = self.reshard_operand(sv, s)
+            axes, n = (), 1
+        else:
+            sk = sv
+        self.set_sharding(ov, s)
+        lshape = shard_shape(self._gshape(sv), s)
+        dbytes, dtype = self._dbytes(sv), self._dtype(sv)
+        out_bytes = _nbytes_of(lshape, dbytes)
+        if n <= 1:
+            # local shift: the full stage dim lives on every device
+            def run(env, reads, writes, reverse=reverse):
+                st, x = _read(env, reads[0]), _read(env, reads[1])
+                if reverse:
+                    _write(env, writes[0],
+                           jnp.concatenate([st[1:], x[None]], axis=0))
+                else:
+                    _write(env, writes[0],
+                           jnp.concatenate([x[None], st[:-1]], axis=0))
+
+            self.emit(PlanStep(
+                "compute", (sk, xk), (ov,), run, op="stage_shift",
+                lshape=lshape, dbytes=dbytes, dtype=dtype,
+                flops=float(np.prod(lshape or (1,))), wbytes=(out_bytes,),
+            ))
+            return
+        ax = axes[0]
+        bshape = (1,) + tuple(lshape[1:])
+        bbytes = _nbytes_of(bshape, dbytes)
+        # step 1: boundary row (last local stage row forward, first reverse)
+        bproxy = ProxyVar("shift.boundary")
+
+        def run_b(env, reads, writes, reverse=reverse):
+            st = _read(env, reads[0])
+            _write(env, writes[0], st[:1] if reverse else st[-1:])
+
+        self.emit(PlanStep(
+            "compute", (sk,), (bproxy,), run_b, op="shift-boundary",
+            lshape=lshape, dbytes=dbytes, dtype=dtype, wbytes=(bbytes,),
+        ))
+        # step 2: one neighbor hop along the stage axis — a pure collective
+        perm = tuple(
+            (i + 1, i) for i in range(n - 1)
+        ) if reverse else tuple((i, i + 1) for i in range(n - 1))
+        rproxy = ProxyVar("shift.recv")
+
+        def run_p(env, reads, writes, ax=ax, perm=perm):
+            _write(env, writes[0], lax.ppermute(_read(env, reads[0]), ax,
+                                                list(perm)))
+
+        self.stats.count("collective-permute")
+        self.emit(PlanStep(
+            "collective", (bproxy,), (rproxy,), run_p, op="ppermute",
+            axes=(ax,), lshape=bshape, dbytes=dbytes, dtype=dtype,
+            wbytes=(bbytes,), call={"perm": perm},
+        ))
+        # step 3: stitch — edge device takes the injected row instead
+        def run_c(env, reads, writes, ax=ax, n=n, reverse=reverse):
+            recv, st, x = (_read(env, reads[0]), _read(env, reads[1]),
+                           _read(env, reads[2]))
+            idx = lax.axis_index(ax)
+            if reverse:
+                row = jnp.where(idx == n - 1, x, recv[0])
+                out = jnp.concatenate([st[1:], row[None]], axis=0)
+            else:
+                row = jnp.where(idx == 0, x, recv[0])
+                out = jnp.concatenate([row[None], st[:-1]], axis=0)
+            _write(env, writes[0], out)
+
+        self.emit(PlanStep(
+            "compute", (rproxy, sk, xk), (ov,), run_c, op="shift-stitch",
+            lshape=lshape, dbytes=dbytes, dtype=dtype,
+            flops=float(np.prod(lshape or (1,))), wbytes=(out_bytes,),
+        ))
+
     def _iota(self, eqn) -> None:
         prim, params, ov = eqn.primitive, eqn.params, eqn.outvars[0]
         self.set_sharding(ov, replicated(self.mesh, len(params["shape"])))
@@ -1081,9 +1187,10 @@ class PlanBuilder:
                 osh = Sharding(self.mesh, ((),) + ysh.dims_mapping)
             self.set_sharding(ov, osh)
         length = p.get("length")
+        reverse = bool(p.get("reverse", False))
 
         def run(env, reads, writes, plan=inner_plan, carry_fix=carry_fix,
-                nc=nc, nk=nk, length=length):
+                nc=nc, nk=nk, length=length, reverse=reverse):
             vals = [_read(env, k) for k in reads]
             consts = vals[:nc]
             init = tuple(vals[nc : nc + nk])
@@ -1097,7 +1204,11 @@ class PlanBuilder:
                 )
                 return new_carry, tuple(outs[nk:])
 
-            carry, ys = lax.scan(body_fn, init, xs, length=length)
+            # grad-of-scan lowers to a reverse scan: xs are consumed (and ys
+            # emitted) back to front — replaying it forward silently permutes
+            # every per-trip value
+            carry, ys = lax.scan(body_fn, init, xs, length=length,
+                                 reverse=reverse)
             for w, o in zip(writes, list(carry) + list(ys)):
                 _write(env, w, o)
 
@@ -1317,8 +1428,19 @@ class PlanCost:
     collective term (wire bytes / ICI bandwidth + per-launch overhead),
     combined by :func:`repro.analysis.roofline.overlap_time_s` — the dominant
     term bounds the step, the smaller one is mostly hidden behind it.
-    ``peak_bytes`` is a constraint, not a term — the search rejects
-    assignments above the budget.
+
+    ``wire_bytes`` / ``launches`` are **whole-program**: inner pjit/scan plans
+    contribute at trip count (a psum a scan body replays L times costs L
+    launches here), matching ``total_flops``'s trip-multiplied compute — this
+    is what makes pipeline-loop pricing honest (per-tick ppermute/psum × the
+    ``M + S − 1`` tick count).
+
+    ``peak_bytes`` is by default a constraint, not a term — the search rejects
+    assignments above the hard budget.  With ``mem_weight > 0`` and a
+    ``soft_budget_bytes`` set, :attr:`mem_s` additionally prices the overshoot
+    above the *soft* budget (overshoot bytes re-streamed at HBM bandwidth,
+    scaled by the weight) into :attr:`total_s`, so two otherwise-equal
+    assignments rank by live memory.  Off by default (``mem_weight = 0``).
     """
 
     wire_bytes: float
@@ -1327,6 +1449,8 @@ class PlanCost:
     ideal_flops_per_device: float
     peak_bytes: float
     steps: int
+    soft_budget_bytes: Optional[float] = None
+    mem_weight: float = 0.0
 
     @property
     def collective_s(self) -> float:
@@ -1347,10 +1471,21 @@ class PlanCost:
         return max(self.flops_per_device - self.ideal_flops_per_device, 0.0) / PEAK_FLOPS
 
     @property
+    def mem_s(self) -> float:
+        """Soft-budget memory term: overshoot bytes / HBM bandwidth, weighted.
+        Zero when disabled (no soft budget / zero weight) or under budget."""
+        if not self.mem_weight or self.soft_budget_bytes is None:
+            return 0.0
+        from repro.analysis.roofline import HBM_BW
+
+        return self.mem_weight * max(
+            self.peak_bytes - self.soft_budget_bytes, 0.0) / HBM_BW
+
+    @property
     def total_s(self) -> float:
         from repro.analysis.roofline import overlap_time_s
 
-        return overlap_time_s(self.compute_s, self.collective_s)
+        return overlap_time_s(self.compute_s, self.collective_s) + self.mem_s
 
     def as_dict(self) -> Dict:
         return {
@@ -1363,18 +1498,25 @@ class PlanCost:
             "collective_s": self.collective_s,
             "compute_s": self.compute_s,
             "imbalance_s": self.imbalance_s,
+            "mem_s": self.mem_s,
             "total_s": self.total_s,
         }
 
 
 def plan_cost(plan: PartitionPlan) -> PlanCost:
-    """Price an already-lowered plan under the roofline cost model."""
+    """Price an already-lowered plan under the roofline cost model.
+
+    Collective terms are whole-program (inner pjit/scan bodies at trip count,
+    via ``plan_opt.whole_wire_bytes`` / ``whole_collective_launches``) so the
+    autoshard objective sees the same cost the overlap scheduler prices — the
+    PR 4 open item ("scan-body collectives invisible to the objective") is
+    closed here."""
     from repro.analysis.jaxpr_cost import count_flops
-    from .plan_opt import _wire_bytes, count_collective_launches
+    from .plan_opt import whole_collective_launches, whole_wire_bytes
 
     return PlanCost(
-        wire_bytes=_wire_bytes(plan),
-        launches=count_collective_launches(plan.steps),
+        wire_bytes=whole_wire_bytes(plan),
+        launches=whole_collective_launches(plan),
         flops_per_device=plan.total_flops(),
         ideal_flops_per_device=count_flops(plan.jaxpr) / max(plan.mesh.size, 1),
         peak_bytes=plan.peak_bytes,  # filled by build()/optimize_plan()

@@ -35,7 +35,14 @@ Passes (in pipeline order):
 6. **collective fusion / bucketing** (:func:`fuse_collectives`) — coalesces
    same-key collectives on independent values into a single launch over a
    flattened, concatenated buffer: trailing AllReduces (psum/pmax/pmin split
-   out of einsum/reduce lowering) and single-AllGather reshard steps.  The
+   out of einsum/reduce lowering), single-AllGather reshard steps, and
+   CollectivePermutes with identical (axis, permutation) — the §3.3 pipeline
+   shift emits one ppermute per shifting-buffer leaf per tick, and leaves of
+   the same tick share a launch.  ppermute enters as a first-class
+   ``collective`` step at lowering time (inside the pipeline scan body), so
+   the ordering invariants below apply to it unchanged: it reaches fusion as
+   ordinary bucketable work and the overlap scheduler afterwards prices it on
+   the interconnect resource like any other wire step.  The
    bucket size is capped by the roofline-priced threshold
    (:func:`repro.analysis.roofline.fusion_bucket_bytes`): fusing trades one
    collective launch per member for an extra HBM round-trip of the bucket, so
@@ -691,9 +698,30 @@ def _fused_gather_run(axis, n, specs):
     return run
 
 
+def _fused_ppermute_run(axis, perm, shapes):
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+
+    def run(env, reads, writes, axis=axis, perm=perm, shapes=shapes,
+            sizes=sizes):
+        flats = [jnp.ravel(_read(env, k)) for k in reads]
+        buf = jnp.concatenate(flats) if len(flats) > 1 else flats[0]
+        buf = lax.ppermute(buf, axis, list(perm))
+        off = 0
+        for w, shp, n in zip(writes, shapes, sizes):
+            _write(env, w, jnp.reshape(buf[off:off + n], shp))
+            off += n
+
+    return run
+
+
 def _fuse_key(step: PlanStep, mesh) -> Optional[tuple]:
     """Bucket key, or None when the step is not fusable."""
     if step.kind == "collective":
+        if step.op == "ppermute":
+            # only identical permutations batch into one launch (same axis,
+            # same source→dest pairs — e.g. several pytree leaves of one
+            # shifting buffer moving the same pipeline tick)
+            return ("ppermute", step.axes, step.call.get("perm"), step.dtype)
         return ("psum", step.axes, step.reduce_op, step.dtype)
     if step.kind == "reshard" and step.program is not None:
         ps = step.program.steps
@@ -831,6 +859,22 @@ def fuse_collectives(plan: PartitionPlan, bucket_bytes: Optional[float] = None) 
             # stats: k psum launches (one count per axis each) become one
             plan.stats.count("all-reduce", -len(group) * len(axes))
             plan.stats.count("fused-all-reduce", 1)
+        elif key[0] == "ppermute":
+            axes, perm, dtype = key[1], key[2], key[3]
+            run = _fused_ppermute_run(axes[0], perm,
+                                      [g.lshape for g in group])
+            n = mesh.axis_size(axes[0])
+            wire = collective_wire_bytes("collective-permute", n, total_bytes)
+            fused = PlanStep(
+                "fused", reads, writes, run, op="fused-ppermute", axes=axes,
+                lshape=(int(sum(
+                    int(np.prod(g.lshape)) if g.lshape else 1 for g in group)),),
+                dbytes=group[0].dbytes, dtype=dtype,
+                wbytes=tuple(g.in_bytes for g in group),
+                call={"perm": perm},
+            )
+            plan.stats.count("collective-permute", -len(group))
+            plan.stats.count("fused-collective-permute", 1)
         else:
             axis, dtype = key[1], key[2]
             n = mesh.axis_size(axis)
@@ -879,7 +923,12 @@ def _step_durations(step: PlanStep, mesh) -> Tuple[float, float]:
         return 0.0, (step.program.cost_bytes / ICI_BW
                      + launches * COLLECTIVE_LAUNCH_S)
     if step.kind == "collective":
-        return 0.0, (_psum_wire_bytes(mesh, step.axes, step.in_bytes) / ICI_BW
+        if step.op == "ppermute":
+            from repro.analysis.roofline import ppermute_time_s
+
+            n = mesh.axis_size(step.axes[0]) if step.axes else 1
+            return 0.0, ppermute_time_s(step.in_bytes, n)
+        return 0.0, (_collective_step_wire_bytes(mesh, step) / ICI_BW
                      + COLLECTIVE_LAUNCH_S)
     if step.kind == "fused":
         return 0.0, (getattr(step, "_wire_bytes", 0.0) / ICI_BW
@@ -1009,6 +1058,16 @@ def _psum_wire_bytes(mesh, axes, in_bytes: float) -> float:
     )
 
 
+def _collective_step_wire_bytes(mesh, step: PlanStep) -> float:
+    """Wire bytes of one ``collective`` step: ppermute moves its payload once
+    along the stage axis (``collective_wire_bytes("collective-permute")``);
+    everything else is an AllReduce priced per axis."""
+    if step.op == "ppermute":
+        n = mesh.axis_size(step.axes[0]) if step.axes else 1
+        return collective_wire_bytes("collective-permute", n, step.in_bytes)
+    return _psum_wire_bytes(mesh, step.axes, step.in_bytes)
+
+
 def _wire_bytes(plan: PartitionPlan) -> float:
     total = 0.0
     mesh = plan.mesh
@@ -1016,7 +1075,7 @@ def _wire_bytes(plan: PartitionPlan) -> float:
         if s.kind == "reshard" and s.program is not None:
             total += s.program.cost_bytes
         elif s.kind == "collective":
-            total += _psum_wire_bytes(mesh, s.axes, s.in_bytes)
+            total += _collective_step_wire_bytes(mesh, s)
         elif s.kind == "fused":
             total += getattr(s, "_wire_bytes", 0.0)
     return total

@@ -326,6 +326,28 @@ def rule_conv(eqn, in_sh, out_sh, direction):
     return in_sh, out_sh
 
 
+def rule_stage_shift(eqn, in_sh, out_sh, direction):
+    """§3.3 shifting buffer: the shift permutes data *along* the stage dim, so
+    every dim's sharding passes straight through (the stage dim's included —
+    each slot moves globally, landing on the neighbor shard via ppermute at
+    partition time).  The injected row ``x`` (rank-1 lower) aligns with the
+    state's trailing dims."""
+    from .sharding import Sharding
+
+    s_state, s_x = in_sh
+    (s_out,) = out_sh
+    cands = [s for s in (s_state, s_out) if s is not None]
+    if s_x is not None:
+        # lift the injected row to state rank with an unsharded stage dim;
+        # merge fails (None) when x reuses the stage axis — leave it alone
+        cands.append(Sharding(s_x.mesh, ((),) + s_x.dims_mapping))
+    m = _merge_many(cands)
+    if m is None:
+        return in_sh, out_sh
+    x_new = Sharding(m.mesh, m.dims_mapping[1:])
+    return [m, x_new], [m]
+
+
 # ---------------------------------------------------------------------------------
 # registry + priorities
 # ---------------------------------------------------------------------------------
@@ -362,6 +384,8 @@ RULES["argmin"] = rule_argminmax
 for n in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
           "reduce_or", "argmax", "argmin"):
     PRIORITY[n] = 2
+RULES["stage_shift"] = rule_stage_shift
+PRIORITY["stage_shift"] = 1
 RULES["dot_general"] = rule_dot_general
 PRIORITY["dot_general"] = 2
 RULES["conv_general_dilated"] = rule_conv

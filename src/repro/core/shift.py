@@ -1,0 +1,100 @@
+"""The stage-shift primitive: GSPMD §3.3's shifting buffer as one op.
+
+Pipeline parallelism reduces to tensor sharding by stacking per-stage state on
+a leading ``stage`` dimension and, once per tick, shifting that buffer one
+stage to the right while injecting a fresh microbatch at stage 0:
+
+    out[0] = x          (the injected microbatch)
+    out[s] = state[s-1] (stage s picks up stage s-1's output)
+
+``stage_shift(state, x)`` is that whole data movement as a single primitive so
+the partition-plan compiler can lower it *structurally* instead of pattern-
+matching rolls:
+
+* stage dim replicated  -> one local concatenate (no communication);
+* stage dim sharded on a mesh axis -> a boundary-row exchange: each device
+  sends its last local stage row to its right neighbor (``lax.ppermute`` over
+  ``[(i, i+1)]``) and stitches the received row in front of its remaining
+  rows.  The ppermute is emitted as a first-class ``collective`` PlanStep
+  (``core/plan.py``), so the whole-plan optimizer prices, schedules, and can
+  fuse it like any other collective.
+
+The op is linear in ``(state, x)``; its transpose is the mirror-image shift
+(``reverse=True``: out[s] = state[s+1], out[S-1] = x) plus a masked row-sum
+for the injected operand, so pipelined models differentiate through the
+standard machinery and the backward pass carries the opposite-direction
+ppermute — exactly GSPMD's backward pipeline flow.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import core
+from jax.interpreters import ad, mlir
+
+try:
+    Primitive = core.Primitive
+except AttributeError:  # pragma: no cover
+    from jax.extend.core import Primitive
+
+stage_shift_p = Primitive("stage_shift")
+
+
+def _impl(state, x, *, reverse):
+    if reverse:
+        return jnp.concatenate([state[1:], x[None]], axis=0)
+    return jnp.concatenate([x[None], state[:-1]], axis=0)
+
+
+stage_shift_p.def_impl(_impl)
+
+
+def _abstract(state, x, *, reverse):
+    assert tuple(x.shape) == tuple(state.shape[1:]), (state.shape, x.shape)
+    assert x.dtype == state.dtype, (state.dtype, x.dtype)
+    return state
+
+
+stage_shift_p.def_abstract_eval(_abstract)
+
+
+def _transpose(ct, state, x, *, reverse):
+    if isinstance(ct, ad.Zero):  # pragma: no cover - defensive
+        return [ct, ct]
+    num_stages = ct.shape[0]
+    zero_row = jnp.zeros(ct.shape[1:], ct.dtype)
+    ct_state = stage_shift_p.bind(ct, zero_row, reverse=not reverse)
+    # the injected row's cotangent: out[0] = x forward, out[S-1] = x reverse.
+    # Expressed as a masked row-sum (not ct[row]) so the sharded stage dim
+    # lowers to a local reduce + psum instead of a full stage-dim gather.
+    row = num_stages - 1 if reverse else 0
+    mask = (jnp.arange(num_stages) == row).astype(ct.dtype)
+    ct_x = jnp.sum(ct * mask.reshape((num_stages,) + (1,) * (ct.ndim - 1)), axis=0)
+    return [ct_state, ct_x]
+
+
+ad.deflinear2(stage_shift_p, _transpose)
+
+mlir.register_lowering(
+    stage_shift_p, mlir.lower_fun(_impl, multiple_results=False)
+)
+
+
+def stage_shift(state, x, reverse: bool = False):
+    """Shift the stage-stacked buffer one slot (``out[0]=x, out[s]=state[s-1]``).
+
+    ``state`` has a leading stage dim S; ``x`` is one stage row (the fresh
+    microbatch entering stage 0).  ``reverse=True`` is the mirror image
+    (``out[S-1]=x, out[s]=state[s+1]``), used by the transpose/backward pass.
+    """
+    return stage_shift_p.bind(state, x, reverse=bool(reverse))
+
+
+def take_stage_row(state, row: int):
+    """Read one stage row as a masked row-sum: ``state[row]`` without slicing
+    the (possibly sharded) stage dim — lowers to local reduce + psum over the
+    stage mesh axis, the per-tick output-collection collective of §3.3."""
+    num_stages = state.shape[0]
+    mask = (jnp.arange(num_stages) == row).astype(state.dtype)
+    return jnp.sum(
+        state * mask.reshape((num_stages,) + (1,) * (state.ndim - 1)), axis=0
+    )

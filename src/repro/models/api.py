@@ -5,10 +5,18 @@ Every family exposes:
   loss_fn(cfg, st, params, batch)  scalar training loss
   decode_step(cfg, st, params, token, cache, pos) -> (logits, new_cache)
   cache_shapes(cfg, st, batch, max_len) -> dict of cache array shapes
+
+Families with a homogeneous layer stack additionally declare a
+**stackable-layer boundary** (:func:`pipeline_boundary`): the prologue /
+layer-body / epilogue decomposition the pipeline subsystem
+(``repro.pipeline``) may rewrite into GSPMD §3.3 stage-stacked form.  A
+config opts out with ``ModelConfig.stackable_layers = False`` (set in the
+registry for families whose stack is not homogeneous: MoE-every-k
+superblocks, hybrid attn/ssm interleaves, encoder-decoder, VLM prefixes).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +47,69 @@ def loss_fn(cfg: ModelConfig, st: Strategy, params, batch):
 
 def decode_step(cfg: ModelConfig, st: Strategy, params, token, cache, pos):
     return family_module(cfg).decode_step(cfg, st, params, token, cache, pos)
+
+
+class PipelineBoundary(NamedTuple):
+    """The stackable-layer region of one family's training loss.
+
+    ``prologue(params, tokens) -> x`` (embedding; full batch),
+    ``layer(lp, x, extra) -> x`` (ONE homogeneous layer — same in/out avals,
+    no aux carry), ``epilogue(params, x, batch) -> loss`` (final norm +
+    logits + xent).  ``layers_key`` names the stacked-params subtree
+    (leaves with a leading layer dim) the pipeline stage-stacks.
+    """
+
+    prologue: Callable
+    layer: Callable
+    epilogue: Callable
+    layers_key: str
+
+
+def pipeline_boundary(cfg: ModelConfig, st: Strategy) -> Optional[PipelineBoundary]:
+    """The family's stackable-layer boundary, or None when the stack is not
+    homogeneous (MoE superblocks, hybrid interleaves, encdec, vlm) or the
+    config declares ``stackable_layers=False``."""
+    from .layers import (
+        embed_lookup, rms_norm, softmax_xent, streamed_xent, unembed_logits,
+    )
+
+    if not cfg.stackable_layers:
+        return None
+
+    def prologue(params, tokens):
+        return embed_lookup(cfg, st, params["embed"], tokens)
+
+    def epilogue(params, x, batch):
+        x = rms_norm(x, params["final_ln"])
+        if cfg.xent_chunk:
+            return streamed_xent(
+                cfg, st, x, params["embed"]["embedding"], batch["labels"]
+            )
+        logits = unembed_logits(cfg, st, params["embed"], x)
+        return softmax_xent(cfg, st, logits, batch["labels"])
+
+    if cfg.family == "dense" and not cfg.moe:
+        from .transformer import decoder_layer, superblock
+
+        if superblock(cfg) != 1:
+            return None
+
+        def layer(lp, x, positions):
+            return decoder_layer(cfg, st, lp, x, positions)[0]
+
+        return PipelineBoundary(prologue, layer, epilogue, "layers")
+    if cfg.family == "ssm":
+        from .ssm import ssm_forward
+
+        def layer(lp, x, _extra):
+            h = rms_norm(x, lp["ln"])
+            return st.constrain(
+                x + ssm_forward(cfg, st, lp["mixer"], h),
+                "batch", "seq", "embed",
+            )
+
+        return PipelineBoundary(prologue, layer, epilogue, "layers")
+    return None
 
 
 def cache_shapes(cfg: ModelConfig, st: Strategy, batch: int, max_len: int) -> Dict[str, tuple]:

@@ -1,0 +1,48 @@
+"""repro.pipeline — GSPMD §3.3 pipeline parallelism as a first-class
+subsystem over partition plans.
+
+The paper's reduction: pipeline parallelism *is* tensor sharding.  Stack the
+per-stage weights on a leading ``stage`` dimension, vmap one stage body over
+it, shard that dimension on a mesh axis, and express the cross-stage handoff
+as a shifting buffer whose per-tick slide is a CollectivePermute — no MPMD
+runtime, no per-stage programs.
+
+Layout of the subsystem:
+
+* ``stages.py`` — the rewrite itself: :func:`~repro.pipeline.stages
+  .stage_stack_params` (``(L, …) → (S, L/S, …)``), :func:`~repro.pipeline
+  .stages.pipelined_apply` (the ``M + S − 1``-tick shifting-buffer scan built
+  on ``core.shift.stage_shift``), and :func:`~repro.pipeline.stages
+  .pipelined_loss_fn` (a registry config's loss with the declared
+  stackable-layer region pipelined).  Everything lowers through the ordinary
+  ``core/plan.py`` → ``core/plan_opt.py`` pipeline: the per-tick ppermute and
+  the output-collection psum are first-class PlanSteps the optimizer prices,
+  fuses, and overlap-schedules.
+* ``schedule.py`` — the schedule cost model: bubble fraction
+  ``(S−1)/(M+S−1)``, tick counts, per-tick ppermute wire bytes, microbatch
+  activation memory (:class:`~repro.pipeline.schedule.ScheduleCost`), plus
+  the search-facing :class:`~repro.pipeline.schedule.PipelineConfig` /
+  :class:`~repro.pipeline.schedule.PipelineDecision` decision variables that
+  ``autoshard.solve(..., pipeline=...)`` enumerates jointly with tensor
+  sharding.
+
+The older ``core/pipeline.py`` wrapper (XLA-lowered roll + annotation) stays
+as the §3.3 schedule-math reference (GPipe vs circular bubble ratios); this
+subsystem is the partition-plan-native implementation.
+"""
+from .schedule import (
+    PipelineConfig,
+    PipelineDecision,
+    ScheduleCost,
+    bubble_fraction,
+    pipeline_ticks,
+    plan_ppermute_bytes,
+    schedule_cost,
+)
+from .stages import pipelined_apply, pipelined_loss_fn, stage_stack_params
+
+__all__ = [
+    "PipelineConfig", "PipelineDecision", "ScheduleCost", "bubble_fraction",
+    "pipeline_ticks", "pipelined_apply", "pipelined_loss_fn",
+    "plan_ppermute_bytes", "schedule_cost", "stage_stack_params",
+]

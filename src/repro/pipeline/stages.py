@@ -1,0 +1,174 @@
+"""Stage-stacked pipelining: rewrite a layer stack into GSPMD §3.3 form.
+
+Given a homogeneous layer body and per-layer params stacked on a leading
+``L`` dim, :func:`pipelined_apply` rewrites the stack into the paper's
+pipeline-as-sharding form:
+
+* **stack** — params reshape to a leading ``stage`` dim
+  (:func:`stage_stack_params`: ``(L, …) → (S, L/S, …)``; stage ``s`` holds
+  layers ``[s·L/S, (s+1)·L/S)`` contiguously — the GPipe placement);
+* **vmap** — ONE stage body (fold the stage's layer slice) is vectorized over
+  the stage dim, so all stages are one SPMD computation;
+* **shift** — data moves between stages through the shifting buffer: a scan
+  over ``T = M + S − 1`` ticks whose body calls
+  :func:`repro.core.shift.stage_shift` (inject microbatch ``t`` at stage 0,
+  slide every stage's state one slot right) and collects stage ``S−1``'s
+  output through a masked row-sum (:func:`repro.core.shift.take_stage_row`).
+
+Invariants the rewrite relies on (and the partition plan preserves):
+
+* stages are homogeneous — the layer body's input/output avals match, so one
+  vmapped body serves every stage and every tick;
+* the shifting buffer's layout is ``(S, microbatch…)`` with the stage dim
+  leading; sharding that dim on a mesh axis (the ``mesh``/``stage_axis``
+  annotation) is the *entire* distribution story — ``core/plan.py`` lowers
+  the shift to a boundary-row CollectivePermute and the row-sum to a psum,
+  both first-class PlanSteps inside the tick scan body, which
+  ``core/plan_opt.py`` prices at trip count, can fuse (same-perm ppermutes),
+  and overlap-schedules;
+* only microbatch ``t − s`` occupies stage ``s`` at tick ``t``; slots outside
+  that diagonal hold zeros/garbage whose outputs are never collected, so the
+  pipelined program is *mathematically equal* (bit-identical — verified on
+  the multidev harness) to running each microbatch through the plain stack.
+
+:func:`pipelined_loss_fn` applies the rewrite to a registry config through
+the stackable-layer boundary the model family declares
+(``models.api.pipeline_boundary``): embedding prologue → pipelined stack →
+loss epilogue, with the batch split into ``M`` microbatches.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.annotate import annotate
+from repro.core.shift import stage_shift, take_stage_row
+from repro.core.sharding import Mesh, Sharding
+
+from .schedule import PipelineDecision
+
+
+def stage_stack_params(params, num_stages: int):
+    """Reshape per-layer stacked params ``(L, …)`` to stage-stacked
+    ``(S, L/S, …)``: stage ``s`` holds layers ``[s·L/S, (s+1)·L/S)``."""
+
+    def mk(p):
+        L = p.shape[0]
+        assert L % num_stages == 0, (L, num_stages)
+        return jnp.reshape(p, (num_stages, L // num_stages) + p.shape[1:])
+
+    return jax.tree_util.tree_map(mk, params)
+
+
+def _stage_constrain(v, mesh: Optional[Mesh], stage_axis: Optional[str]):
+    if mesh is None or stage_axis is None:
+        return v
+    return annotate(
+        v, Sharding(mesh, ((stage_axis,),) + ((),) * (v.ndim - 1))
+    )
+
+
+def pipelined_apply(
+    layer_fn: Callable,
+    stacked_params,
+    microbatches,
+    *,
+    num_stages: int,
+    mesh: Optional[Mesh] = None,
+    stage_axis: Optional[str] = None,
+    extra=None,
+):
+    """Run ``layer_fn(lp, x, extra) -> x`` as an S-stage GPipe pipeline.
+
+    ``stacked_params``: pytree with leading dims ``(S, L/S, …)`` (see
+    :func:`stage_stack_params`); ``microbatches``: ``(M, mb…)`` inputs.
+    Returns the ``(M, mb…)`` final-layer outputs.  With ``mesh``/
+    ``stage_axis`` the shifting buffer's stage dim is annotated so the
+    partitioner shards it — pipelining *as* sharding; without them the same
+    program runs locally (the reference semantics).
+    """
+    S = int(num_stages)
+    M = int(microbatches.shape[0])
+    row_shape = tuple(microbatches.shape[1:])
+    layers_per_stage = jax.tree_util.tree_leaves(stacked_params)[0].shape[1]
+
+    def _layer_slice(i):
+        # layer i of every stage: slice dim 1 OUTSIDE the vmap, with explicit
+        # slice+reshape (both sharding-preserving plan ops) — indexing inside
+        # the vmapped body would lower to `gather`, whose only partitioning is
+        # full replication (an all-gather of the whole stack per tick)
+        def mk(t):
+            sl = lax.slice_in_dim(t, i, i + 1, axis=1)
+            return lax.reshape(sl, t.shape[:1] + t.shape[2:])
+
+        return jax.tree_util.tree_map(mk, stacked_params)
+
+    vlayer = jax.vmap(
+        lambda lp, h: layer_fn(lp, h, extra), in_axes=(0, 0)
+    )
+
+    def stage_sweep(state):
+        for i in range(layers_per_stage):
+            state = vlayer(_layer_slice(i), state)
+        return state
+    state0 = _stage_constrain(
+        jnp.zeros((S,) + row_shape, microbatches.dtype), mesh, stage_axis
+    )
+    if S > 1:
+        pad = jnp.zeros((S - 1,) + row_shape, microbatches.dtype)
+        xs = jnp.concatenate([microbatches, pad], axis=0)
+    else:
+        xs = microbatches
+
+    def tick(state, x_t):
+        state = stage_shift(state, x_t)
+        state = _stage_constrain(state, mesh, stage_axis)
+        state = stage_sweep(state)
+        state = _stage_constrain(state, mesh, stage_axis)
+        return state, take_stage_row(state, S - 1)
+
+    _, ys = lax.scan(tick, state0, xs)  # T = M + S - 1 ticks
+    return ys[S - 1:]
+
+
+# ---------------------------------------------------------------------------------
+# registry configs: pipeline the declared stackable-layer region
+# ---------------------------------------------------------------------------------
+
+
+def pipelined_loss_fn(cfg, st, params, batch, decision: PipelineDecision,
+                      mesh: Optional[Mesh] = None):
+    """The registry config's training loss with the layer stack pipelined.
+
+    ``params`` must carry **stage-stacked** layers (leaves ``(S, L/S, …)``;
+    convert live params with :func:`stage_stack_params`).  The batch is split
+    into ``decision.num_microbatches`` along dim 0; prologue (embedding) and
+    epilogue (final norm + loss) run unpipelined on the full batch, exactly
+    as GSPMD keeps them outside the §3.3 region.
+    """
+    from repro.models import api as model_api
+
+    b = model_api.pipeline_boundary(cfg, st)
+    if b is None:
+        raise ValueError(
+            f"{cfg.name}: no stackable-layer boundary "
+            f"(family={cfg.family}, stackable_layers={cfg.stackable_layers})"
+        )
+    tokens = batch["tokens"]
+    B, SQ = tokens.shape
+    M = decision.num_microbatches
+    assert B % M == 0, (B, M)
+    mb = B // M
+    x = b.prologue(params, tokens)  # (B, SQ, D)
+    xs = jnp.reshape(x, (M, mb) + tuple(x.shape[1:]))
+    extra = jnp.broadcast_to(jnp.arange(SQ), (mb, SQ))  # per-mb positions
+    ys = pipelined_apply(
+        b.layer, params[b.layers_key], xs,
+        num_stages=decision.num_stages, mesh=mesh,
+        stage_axis=decision.stage_axis, extra=extra,
+    )
+    x = jnp.reshape(ys, (B,) + tuple(x.shape[1:]))
+    return b.epilogue(params, x, batch)
