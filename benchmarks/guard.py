@@ -23,6 +23,10 @@ regresses:
   the bubble fraction drifts from (S−1)/(M+S−1), modeled ppermute bytes or
   the pipelined cost regress, or a cell where pipelining matched/beat (or
   uniquely fit the memory budget vs) pure tensor stops doing so;
+* elastic cells (fault-tolerant recovery) — the modeled mesh-shrink restore
+  program regresses (wire bytes, launches, reshard seconds, or the
+  gather-all ratio), or the warm-started autoshard re-solve stops being
+  feasible / stops taking strictly fewer cost lowerings than the cold solve;
 * lattice telemetry — a reshard in the benchmark set starts hitting the
   node/depth caps of the branch-and-bound search;
 * cache cells — the per-runner or process-level hit rate drops.
@@ -139,6 +143,43 @@ def _check_autoshard_cell(msgs, name, base, fresh):
                     f"over budget {fresh['budget_bytes']:.3e}B")
 
 
+def _check_elastic_cell(msgs, name, base, fresh):
+    """Elastic-recovery cells (launch/elastic.py).
+
+    Reshard cells: the modeled restore program must not regress — wire
+    bytes, collective launches, or modeled reshard seconds grow, the program
+    loses to the gather-all reference, or leaves stop being resharded.
+    Warm-solve cells: the warm start must stay feasible and keep performing
+    strictly fewer cost lowerings than the cold solve, at no worse modeled
+    cost.  ``search_ms_*`` are wall-clock and never guarded."""
+    if "reshard_s" in fresh:
+        for k in ("wire_bytes", "launches", "reshard_s"):
+            if fresh[k] > base[k] * (1 + _EPS):
+                _fail(msgs, f"{name}: {k} {base[k]:.3e} -> {fresh[k]:.3e}")
+        if fresh["ratio_vs_gather_all"] > 1.0 + _EPS:
+            _fail(msgs, f"{name}: reshard program worse than gather-all "
+                        f"(ratio {fresh['ratio_vs_gather_all']:.3f} > 1.0)")
+        if fresh["resharded_leaves"] < base["resharded_leaves"]:
+            _fail(msgs, f"{name}: resharded leaves "
+                        f"{base['resharded_leaves']} -> "
+                        f"{fresh['resharded_leaves']}")
+        return
+    if not fresh.get("warm_feasible", False):
+        _fail(msgs, f"{name}: warm re-solve no longer feasible")
+        return
+    if not fresh.get("warm_started", False):
+        _fail(msgs, f"{name}: warm point no longer seeds the search")
+    if fresh["evals_warm"] >= fresh["evals_cold"]:
+        _fail(msgs, f"{name}: warm solve evals {fresh['evals_warm']} not "
+                    f"fewer than cold {fresh['evals_cold']}")
+    if fresh["evals_warm"] > base["evals_warm"]:
+        _fail(msgs, f"{name}: evals_warm {base['evals_warm']} -> "
+                    f"{fresh['evals_warm']}")
+    if fresh["ratio_warm_vs_cold"] > 1.0 + _EPS:
+        _fail(msgs, f"{name}: warm-started cost exceeds cold solve "
+                    f"(ratio {fresh['ratio_warm_vs_cold']:.3f})")
+
+
 def _check_pipeline_cell(msgs, name, base, fresh):
     """§3.3 pipeline cells: the searched stage count must never lose to the
     handpicked reference (it is a point in the decision space), the bubble
@@ -206,7 +247,8 @@ def compare(base: dict, fresh: dict):
                           ("opt_cells", _check_opt_cell),
                           ("inline_cells", _check_inline_cell),
                           ("autoshard_cells", _check_autoshard_cell),
-                          ("pipeline_cells", _check_pipeline_cell)):
+                          ("pipeline_cells", _check_pipeline_cell),
+                          ("elastic_cells", _check_elastic_cell)):
         base_cells = {c["name"]: c for c in base.get(kind, [])}
         fresh_cells = {c["name"]: c for c in fresh.get(kind, [])}
         for name, bc in base_cells.items():
@@ -245,7 +287,8 @@ def main() -> int:
     ncells = (len(base.get("cells", [])) + len(base.get("opt_cells", []))
               + len(base.get("inline_cells", []))
               + len(base.get("autoshard_cells", []))
-              + len(base.get("pipeline_cells", [])))
+              + len(base.get("pipeline_cells", []))
+              + len(base.get("elastic_cells", [])))
     path = plan_smoke.write_artifact(fresh)
     print(f"bench-guard: OK ({ncells} cells, no regressions vs committed baseline)")
     print(f"# artifact refreshed: {path}")

@@ -564,6 +564,113 @@ def _autoshard_cells():
     return cells
 
 
+_ELASTIC_ARCH = "qwen1.5-0.5b"
+
+
+def _elastic_cells():
+    """Elastic-recovery pricing (launch/elastic.py), two cells:
+
+    * ``elastic_reshard_qwen_shrink`` — the plan-lowered reshard program for
+      a registry-model mesh-shrink restore: parameters saved under the
+      Table-1 layout on (2,4), restored onto the surviving (2,2) mesh in the
+      DP-degraded layout (the graceful-fallback path), compiled by
+      ``core.plan.compile_state_reshard`` and priced on the roofline —
+      modeled reshard seconds, wire bytes, launches, and the ratio against
+      the gather-all reference.
+    * ``elastic_warm_solve_qwen`` — autoshard re-solve on the shrunk mesh,
+      warm-started from the prior (2,4) assignment (Automap-style) vs cold:
+      the warm solve must stay feasible and take strictly fewer cost
+      lowerings; ``search_ms_*`` are informational wall-clock.
+    """
+    import jax
+
+    from repro import autoshard
+    from repro.configs.base import get_strategy
+    from repro.configs.registry import default_strategy, get_config
+    from repro.core.plan import compile_state_reshard
+    from repro.core.sharding import Mesh, project_dims_mapping
+    from repro.launch.train import reduced_config
+    from repro.models import api as model_api
+    from repro.models.layers import tree_shapes, tree_specs
+    from repro.train.checkpoint import _flatten_with_paths
+
+    old = Mesh.create((2, 4), ("data", "model"))
+    new = Mesh.create((2, 2), ("data", "model"))
+    cells = []
+
+    # -- cell 1: mesh-shrink restore as a priced reshard program ------------
+    cfg = reduced_config(get_config(_ELASTIC_ARCH), 16).with_(
+        attn_chunk=16, remat="none")
+    st = get_strategy(default_strategy(_ELASTIC_ARCH))
+    tree = model_api.param_tree(cfg, st)
+    from jax.sharding import PartitionSpec as P
+
+    fill = lambda t: jax.tree_util.tree_map(
+        lambda s: s if s is not None else P(),
+        t, is_leaf=lambda x: x is None or isinstance(x, P))
+    shapes_flat, _ = _flatten_with_paths(tree_shapes(tree))
+    specs_flat, _ = _flatten_with_paths(fill(tree_specs(tree)))
+    items = []
+    for (key, sds), (_, spec) in zip(shapes_flat, specs_flat):
+        dims = tuple(
+            ((e,) if isinstance(e, str) else tuple(e or ()))
+            for e in list(spec)[:len(sds.shape)])
+        src = project_dims_mapping(new, dims, tuple(sds.shape))
+        dp = tuple(tuple(a for a in d if a == "data") for d in dims)
+        dst = project_dims_mapping(new, dp, tuple(sds.shape))
+        items.append((key, src, dst, tuple(sds.shape), str(sds.dtype)))
+    plan = compile_state_reshard(items, new)
+    rep = plan.report()
+    cells.append({
+        "name": "elastic_reshard_qwen_shrink",
+        "arch": _ELASTIC_ARCH,
+        "mesh_from": list(old.shape), "mesh_to": list(new.shape),
+        **{k: rep[k] for k in (
+            "leaves", "resharded_leaves", "wire_bytes", "launches",
+            "gather_all_bytes", "ratio_vs_gather_all", "reshard_s")},
+        "collectives": rep["collectives"],
+    })
+
+    # -- cell 2: warm vs cold re-solve on the shrunk mesh -------------------
+    cfg_s = autoshard.AutoshardConfig(top_n=3, sa_steps=6, max_candidates=8)
+    closed_old, base_old = autoshard.registry_problem(_ELASTIC_ARCH, old)
+    prior = autoshard.solve_problem(closed_old, old, cfg_s, baseline=base_old,
+                                    arch=_ELASTIC_ARCH)
+    closed_new, base_new = autoshard.registry_problem(_ELASTIC_ARCH, new)
+    inv_shapes = [tuple(v.aval.shape) for v in closed_new.jaxpr.invars]
+    warm_init = autoshard.remap_assignment(prior.assignment, new, inv_shapes)
+    t0 = time.perf_counter()
+    warm = autoshard.solve_problem(closed_new, new, cfg_s, baseline=base_new,
+                                   arch=_ELASTIC_ARCH, warm_start=warm_init)
+    warm_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    cold = autoshard.solve_problem(closed_new, new, cfg_s, baseline=base_new,
+                                   arch=_ELASTIC_ARCH)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+
+    def fin(x):
+        return x if x is not None and np.isfinite(x) else None
+
+    cells.append({
+        "name": "elastic_warm_solve_qwen",
+        "arch": _ELASTIC_ARCH,
+        "mesh_from": list(old.shape), "mesh_to": list(new.shape),
+        "warm_feasible": bool(warm.evaluation.feasible),
+        "warm_started": bool(warm.warm_started),
+        "cold_feasible": bool(cold.evaluation.feasible),
+        "evals_warm": warm.evals,
+        "evals_cold": cold.evals,
+        "search_ms_warm": warm_ms,   # informational, never guarded
+        "search_ms_cold": cold_ms,
+        "warm_total_s": fin(warm.evaluation.score),
+        "cold_total_s": fin(cold.evaluation.score),
+        "ratio_warm_vs_cold": (
+            warm.evaluation.score / cold.evaluation.score
+            if cold.evaluation.feasible and cold.evaluation.score else 1.0),
+    })
+    return cells
+
+
 def _cache_cell():
     import jax.numpy as jnp
 
@@ -623,6 +730,7 @@ def smoke_record() -> dict:
     rec["inline_cells"] = _inline_cells()
     rec["autoshard_cells"] = _autoshard_cells()
     rec["pipeline_cells"] = _pipeline_cells()
+    rec["elastic_cells"] = _elastic_cells()
     rec.update(_cache_cell())
     rec["lattice_telemetry"] = {
         "cells": grid_telemetry,
@@ -702,6 +810,24 @@ def rows(rec: dict = None):
             f"vs_handpicked={cell['ratio_vs_handpicked']:.3f} "
             f"chosen={cell['pipeline_chosen']} mixed={cell['mixed']}",
         ))
+    for cell in rec.get("elastic_cells", []):
+        if "reshard_s" in cell:
+            out.append((
+                f"elastic/{cell['name']}", 0.0,
+                f"leaves={cell['resharded_leaves']}/{cell['leaves']} "
+                f"wire={cell['wire_bytes']:.3e}B launches={cell['launches']} "
+                f"reshard={cell['reshard_s']:.3e}s "
+                f"vs_gather_all={cell['ratio_vs_gather_all']:.3f}",
+            ))
+        else:
+            out.append((
+                f"elastic/{cell['name']}", 0.0,
+                f"evals={cell['evals_warm']}w/{cell['evals_cold']}c "
+                f"search={cell['search_ms_warm']:.0f}/"
+                f"{cell['search_ms_cold']:.0f}ms "
+                f"ratio={cell['ratio_warm_vs_cold']:.3f} "
+                f"warm_started={cell['warm_started']}",
+            ))
     lt = rec.get("lattice_telemetry", {})
     if lt:
         c, t = lt["cells"], lt["total"]

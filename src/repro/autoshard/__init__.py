@@ -23,6 +23,8 @@ from .api import (
     load,
     registry_pipeline_problem,
     registry_problem,
+    remap_assignment,
+    restrict_assignment,
     sharding_from_spec,
     solve,
     solve_jaxpr,
@@ -44,7 +46,8 @@ __all__ = [
     "SearchResult", "assignment_bytes", "assignment_from_json",
     "candidate_shardings", "clear_assignment_cache", "fits_budget",
     "load", "local_bytes", "pipeline_decisions",
-    "registry_pipeline_problem", "registry_problem", "search",
+    "registry_pipeline_problem", "registry_problem", "remap_assignment",
+    "restrict_assignment", "search",
     "sharding_from_spec", "solve", "solve_jaxpr", "solve_jaxpr_cached",
     "solve_problem",
 ]

@@ -81,6 +81,9 @@ class AutoshardResult:
     # pipeline search outcome: None for pure-tensor assignments, else the
     # chosen decision + schedule terms (repro.pipeline ScheduleCost dict)
     pipeline: Optional[Dict] = None
+    # True when the search was warm-started from a prior assignment and the
+    # warm point was feasible (elastic recovery path — see launch/elastic.py)
+    warm_started: bool = False
 
     @property
     def cost(self):
@@ -121,6 +124,7 @@ class AutoshardResult:
                 if self.baseline_cost is not None else None
             ),
             "pipeline": dict(self.pipeline) if self.pipeline else None,
+            "warm_started": self.warm_started,
         }
 
     def dump(self, path: str) -> str:
@@ -153,6 +157,46 @@ def load(path: str) -> Tuple[Mesh, List[MaybeSharding]]:
         return assignment_from_json(json.load(f))
 
 
+def remap_assignment(assignment: Sequence[MaybeSharding], mesh: Mesh,
+                     shapes: Sequence[Sequence[int]]) -> List[MaybeSharding]:
+    """Re-express a (possibly foreign-mesh) assignment on ``mesh`` by name:
+    axes absent from the new mesh, reused, or no longer dividing the dim are
+    dropped (→ propagation handles them).  This is how a prior solve's JSON
+    dump becomes a warm start after an elastic mesh shrink/regrow."""
+    from repro.core.sharding import project_dims_mapping
+
+    out: List[MaybeSharding] = []
+    for s, shape in zip(assignment, shapes):
+        if s is None:
+            out.append(None)
+        else:
+            out.append(project_dims_mapping(mesh, s.dims_mapping, tuple(shape)))
+    out += [None] * (len(shapes) - len(out))
+    return out
+
+
+def restrict_assignment(assignment: Sequence[MaybeSharding], mesh: Mesh,
+                        shapes: Sequence[Sequence[int]],
+                        keep_axes: Sequence[str] = ("data",),
+                        ) -> List[MaybeSharding]:
+    """Degrade an assignment to only ``keep_axes`` (default: data-parallel
+    only) — the graceful-fallback layout when a warm re-solve is infeasible
+    under the shrunk mesh's memory budget."""
+    from repro.core.sharding import project_dims_mapping
+
+    keep = set(keep_axes)
+    out: List[MaybeSharding] = []
+    for s, shape in zip(assignment, shapes):
+        if s is None:
+            out.append(None)
+            continue
+        dm = tuple(tuple(a for a in axes if a in keep)
+                   for axes in s.dims_mapping)
+        out.append(project_dims_mapping(mesh, dm, tuple(shape)))
+    out += [None] * (len(shapes) - len(out))
+    return out
+
+
 # ---------------------------------------------------------------------------------
 # jaxpr-level solve + the process-level assignment cache
 # ---------------------------------------------------------------------------------
@@ -161,12 +205,19 @@ def load(path: str) -> Tuple[Mesh, List[MaybeSharding]]:
 def solve_problem(closed, mesh: Mesh,
                   config: AutoshardConfig = AutoshardConfig(),
                   baseline: Optional[Sequence[MaybeSharding]] = None,
-                  arch: str = "") -> AutoshardResult:
+                  arch: str = "",
+                  warm_start: Optional[Sequence[MaybeSharding]] = None,
+                  ) -> AutoshardResult:
     """Search one traced (closed) jaxpr, optionally against a hand-annotated
     ``baseline`` assignment scored as an extra search point — the returned
     result never costs more than the baseline (it is a valid point in the
     searched space).  This is the shared core of :func:`solve` (registry
-    configs) and :func:`solve_jaxpr` (bare jaxprs)."""
+    configs) and :func:`solve_jaxpr` (bare jaxprs).
+
+    ``warm_start`` (an assignment on ``mesh``, typically a prior result's
+    dump remapped via :func:`remap_assignment`) seeds the search: when the
+    warm point is feasible the greedy sweep is skipped entirely, so a warm
+    solve performs strictly fewer cost lowerings than a cold one."""
     ev = Evaluator(closed, mesh, budget_bytes=config.budget_bytes,
                    optimize=config.optimize, mem_weight=config.mem_weight,
                    soft_budget_bytes=config.soft_budget_bytes)
@@ -176,6 +227,7 @@ def solve_problem(closed, mesh: Mesh,
         top_n=config.top_n, beam_width=config.beam_width,
         sa_steps=config.sa_steps, seed=config.seed,
         max_candidates=config.max_candidates,
+        init_assignment=warm_start,
     )
     assignment, final = res.assignment, res.evaluation
     if base_ev is not None and base_ev.score < final.score:
@@ -183,7 +235,7 @@ def solve_problem(closed, mesh: Mesh,
     return AutoshardResult(
         mesh=mesh, assignment=assignment, evaluation=final, config=config,
         evals=ev.lowerings, searched_invars=res.searched_invars,
-        baseline=base_ev, arch=arch,
+        baseline=base_ev, arch=arch, warm_started=res.warm_used,
     )
 
 
@@ -389,7 +441,7 @@ def registry_pipeline_problem(arch: str, mesh: Mesh, decision,
 def solve(arch: str, mesh: Optional[Mesh] = None,
           config: AutoshardConfig = AutoshardConfig(),
           batch: int = 8, seq: int = 32, reduce_k: int = 16,
-          pipeline=None) -> AutoshardResult:
+          pipeline=None, warm_start=None) -> AutoshardResult:
     """Annotation-free sharding for a registry config on ``mesh``.
 
     Searches the input/parameter assignment for the (reduced) config's loss
@@ -408,7 +460,12 @@ def solve(arch: str, mesh: Optional[Mesh] = None,
     """
     mesh = mesh if mesh is not None else Mesh.create((2, 4), ("data", "model"))
     closed, baseline = registry_problem(arch, mesh, batch, seq, reduce_k)
-    best = solve_problem(closed, mesh, config, baseline=baseline, arch=arch)
+    if warm_start is not None:
+        # a prior-mesh assignment (e.g. ``load(dump_path)[1]``): remap by name
+        shapes = [tuple(v.aval.shape) for v in closed.jaxpr.invars]
+        warm_start = remap_assignment(warm_start, mesh, shapes)
+    best = solve_problem(closed, mesh, config, baseline=baseline, arch=arch,
+                         warm_start=warm_start)
     if pipeline is None:
         return best
     from repro.configs.registry import get_config

@@ -45,6 +45,7 @@ class SearchResult:
     evals: int  # cost lowerings actually performed
     searched_invars: Tuple[int, ...]  # invar indices the search touched
     history: List[float]  # best score after each accepted improvement
+    warm_used: bool = False  # init_assignment was feasible and seeded phase 2
 
 
 def _global_bytes(shape, db) -> float:
@@ -59,12 +60,19 @@ def search(
     sa_steps: int = 16,
     seed: int = 0,
     max_candidates: int = 16,
+    init_assignment: Optional[Sequence[MaybeSharding]] = None,
 ) -> SearchResult:
     """Find the cheapest feasible input-sharding assignment.
 
     Never returns something worse than the best point it scored; with zero
     feasible points the propagation default (all-``None``) is returned with an
     infeasible evaluation so callers can detect it.
+
+    ``init_assignment`` warm-starts the search (Automap-style): the point is
+    scored first and, when feasible, **replaces the phase-1 greedy sweep** —
+    refinement starts directly from it, so a warm solve performs strictly
+    fewer cost lowerings than a cold one (1 + sa_steps vs the full candidate
+    sweep).  An infeasible warm point falls back to the cold path.
     """
     rng = random.Random(seed)
     shapes = evaluator.invar_shapes()
@@ -79,6 +87,24 @@ def search(
                                    dbytes[i], evaluator.budget_bytes)
         for i in searched
     }
+
+    # -- phase 0: warm start (skips the greedy sweep when feasible) ---------
+    warm: Optional[List[MaybeSharding]] = None
+    if init_assignment is not None:
+        warm = list(init_assignment)[:n] + [None] * max(0, n - len(init_assignment))
+        warm = [
+            s if s is None or (s.mesh is mesh or s.mesh.shape == mesh.shape)
+            and _divisible_assignment(shapes[i], s) else None
+            for i, s in enumerate(warm)
+        ]
+        warm_ev = evaluator(warm)
+        if math.isfinite(warm_ev.score):
+            res = _refine(evaluator, mesh, rng, shapes, searched, spaces,
+                          beam_width, sa_steps, warm, warm_ev,
+                          [warm_ev.score])
+            res.warm_used = True
+            return res
+        warm = None  # infeasible warm point: cold path
 
     best: List[MaybeSharding] = [None] * n
     best_ev = evaluator(best)
@@ -97,6 +123,12 @@ def search(
         best[i] = cur_best
         history.append(best_ev.score)
 
+    return _refine(evaluator, mesh, rng, shapes, searched, spaces,
+                   beam_width, sa_steps, best, best_ev, history)
+
+
+def _refine(evaluator, mesh, rng, shapes, searched, spaces,
+            beam_width, sa_steps, best, best_ev, history) -> SearchResult:
     # -- phase 2: beam + annealing over neighborhood moves ------------------
     beam: List[Tuple[float, List[MaybeSharding]]] = [(best_ev.score, list(best))]
 

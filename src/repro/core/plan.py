@@ -1546,3 +1546,157 @@ def lower_for_cost(
     plan = compile_plan(closed, prop.result(), mesh, optimize=optimize,
                         cost_only=True)
     return plan_cost(plan)
+
+
+# ---------------------------------------------------------------------------------
+# state-reshard plans: cross-topology checkpoint restore as a compiled program
+# ---------------------------------------------------------------------------------
+#
+# Elastic restore ("save on mesh A, restore on mesh B") is a pure layout
+# problem: every leaf has a *source* sharding (the manifest's spec projected
+# onto the new mesh — axes that no longer exist or divide become replication)
+# and a *target* sharding (the new assignment).  Instead of host-mediated
+# ``device_put`` of every global array, the restore lowers one reshard
+# program per leaf via the cost-model planner and replays them all inside a
+# single ``shard_map`` region — priced with the same roofline model and
+# reported with the same :class:`PlanCost` as any partition plan.
+
+
+@dataclasses.dataclass
+class LeafReshard:
+    """One leaf's planned source→target layout change."""
+
+    key: str
+    src: Sharding
+    dst: Sharding
+    global_shape: Tuple[int, ...]
+    dtype: str
+    program: ReshardProgram
+
+    @property
+    def is_identity(self) -> bool:
+        return self.program.is_identity
+
+
+@dataclasses.dataclass
+class StateReshardPlan:
+    """A compiled cross-topology restore: per-leaf reshard programs on one
+    (target) mesh, priced like any other plan.
+
+    Planning is pure (no devices needed — the bench prices registry-sized
+    restores on meshes bigger than the host); :meth:`execute` replays every
+    program in a single jitted ``shard_map`` over the actual device mesh.
+    """
+
+    mesh: Mesh
+    leaves: List[LeafReshard]
+    stats: PlanStats
+    gather_all_bytes: float = 0.0  # reference: replicate-then-slice restore
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(l.program.cost_bytes for l in self.leaves)
+
+    @property
+    def launches(self) -> int:
+        return sum(
+            1 for l in self.leaves for s in l.program.steps
+            if s.op != "dynamic_slice"
+        )
+
+    @property
+    def resharded_leaves(self) -> int:
+        return sum(1 for l in self.leaves if not l.is_identity)
+
+    def cost(self) -> PlanCost:
+        """Roofline pricing: a restore is all-collective, so ``total_s`` is
+        the collective term (wire bytes / ICI + per-launch overhead)."""
+        peak = sum(
+            max(_nbytes_of(shard_shape(l.global_shape, l.src),
+                           int(np.dtype(l.dtype).itemsize)),
+                _nbytes_of(shard_shape(l.global_shape, l.dst),
+                           int(np.dtype(l.dtype).itemsize)))
+            for l in self.leaves
+        )
+        return PlanCost(
+            wire_bytes=self.wire_bytes, launches=self.launches,
+            flops_per_device=0.0, ideal_flops_per_device=0.0,
+            peak_bytes=peak, steps=len(self.leaves),
+        )
+
+    def report(self) -> Dict:
+        cost = self.cost()
+        return {
+            "leaves": len(self.leaves),
+            "resharded_leaves": self.resharded_leaves,
+            "wire_bytes": self.wire_bytes,
+            "launches": self.launches,
+            "gather_all_bytes": self.gather_all_bytes,
+            "ratio_vs_gather_all": (
+                self.wire_bytes / self.gather_all_bytes
+                if self.gather_all_bytes else 1.0
+            ),
+            "reshard_s": cost.collective_s,
+            "collectives": dict(self.stats.collectives),
+        }
+
+    def execute(self, jmesh, arrays):
+        """Replay every leaf program in one jitted shard_map region.
+
+        ``arrays`` are device arrays already laid out per the *source*
+        shardings (each host feeds its shard slice); the result tuple is laid
+        out per the target shardings.  One launch for the whole state — the
+        plan-lowered analogue of a per-leaf host-mediated ``device_put``.
+        """
+        import jax
+
+        from .compat import shard_map
+        from .sharding import to_partition_spec
+
+        progs = tuple(l.program for l in self.leaves)
+
+        def run(*xs):
+            return tuple(
+                execute_program(x, prog) for x, prog in zip(xs, progs)
+            )
+
+        f = shard_map(
+            run, mesh=jmesh,
+            in_specs=tuple(to_partition_spec(l.src) for l in self.leaves),
+            out_specs=tuple(to_partition_spec(l.dst) for l in self.leaves),
+        )
+        return jax.jit(f)(*arrays)
+
+
+def compile_state_reshard(items, mesh: Mesh) -> StateReshardPlan:
+    """Lower a cross-topology state restore into a :class:`StateReshardPlan`.
+
+    ``items`` is an iterable of ``(key, src, dst, global_shape, dtype)`` with
+    both shardings already on ``mesh`` (the *target* mesh — project manifest
+    specs with :func:`repro.core.sharding.project_dims_mapping` first).
+    Each leaf's program is cost-model-chosen by ``plan_reshard``; the
+    replicate-then-slice expression of the same restore is priced as the
+    ``gather_all_bytes`` reference.  Raises
+    :class:`~repro.core.collective_planner.PlanError` when some leaf layout
+    change is inexpressible.
+    """
+    from .collective_planner import _candidate_gather_all, simulate
+
+    leaves: List[LeafReshard] = []
+    stats = PlanStats()
+    gather_bytes = 0.0
+    for key, src, dst, shape, dtype in items:
+        shape = tuple(int(s) for s in shape)
+        db = int(np.dtype(dtype).itemsize)
+        local = shard_shape(shape, src)
+        prog = plan_reshard(src, dst, local, dtype_bytes=db)
+        stats.add_program(prog)
+        stats.steps += 1
+        ref_steps = _candidate_gather_all(src, dst, local)
+        if ref_steps is not None:
+            try:
+                gather_bytes += simulate(src, dst, ref_steps, local, db)
+            except PlanError:  # pragma: no cover - gather-all always simulates
+                pass
+        leaves.append(LeafReshard(key, src, dst, shape, str(dtype), prog))
+    return StateReshardPlan(mesh, leaves, stats, gather_bytes)

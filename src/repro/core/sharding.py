@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -306,6 +306,37 @@ def to_named_sharding(s: Sharding, jmesh):
     from jax.sharding import NamedSharding
 
     return NamedSharding(jmesh, to_partition_spec(s))
+
+
+def project_dims_mapping(
+    mesh: Mesh, dims_mapping: Sequence[Sequence[str]], shape: Sequence[int]
+) -> Sharding:
+    """Re-express a ``dims_mapping`` (possibly recorded on a *different* mesh)
+    on ``mesh``: keep each axis that exists on ``mesh``, is not already used by
+    an earlier dim, and divides the dim given the axes stacked before it; drop
+    the rest (they become replication).
+
+    This is the elastic-restore projection: a checkpoint manifest stores the
+    source sharding's dims_mapping by axis *name*, and after a mesh shrink the
+    same names exist with new sizes — the projected sharding is the closest
+    layout the new mesh can express, the source end of the plan-lowered
+    reshard program (``core/plan.compile_state_reshard``).
+    """
+    shape = tuple(int(s) for s in shape)
+    used: set = set()
+    out: List[Tuple[str, ...]] = []
+    for d, axes in enumerate(tuple(dims_mapping)[: len(shape)]):
+        kept: List[str] = []
+        n = 1
+        for a in axes:
+            if (a in mesh.axis_names and a not in used
+                    and shape[d] % (n * mesh.axis_size(a)) == 0):
+                kept.append(a)
+                used.add(a)
+                n *= mesh.axis_size(a)
+        out.append(tuple(kept))
+    out += [()] * (len(shape) - len(out))
+    return Sharding(mesh, tuple(out))
 
 
 def from_partition_spec(mesh: Mesh, rank: int, spec) -> Sharding:

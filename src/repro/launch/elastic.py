@@ -1,25 +1,350 @@
-"""Elastic scaling: restore a checkpoint onto a *different* mesh.
+"""Elastic meshes: fault-tolerant training as mesh re-derivation + reshard.
 
-On node failure/addition the coordinator rebuilds the mesh from the surviving
-device set and the job restores the last checkpoint with the new shardings —
-``checkpoint.restore`` device_puts every leaf with the target NamedSharding, so
-the reshard is a plain host-mediated load (on a real cluster, a distributed
-read where each host loads its shard slice).  This module provides the mesh
-re-derivation helper and is exercised in tests/test_checkpoint.py by saving on
-one mesh shape and restoring on another.
+GSPMD's premise is that a partitioned program is just annotations over a
+single-device program — so surviving a device failure is "re-derive the mesh,
+re-solve the annotations, reshard the state", not "restart the job".  This
+module is that recovery loop:
+
+* :class:`FaultInjector` — deterministic fault hooks for tests and drills:
+  device loss at a step (raises :class:`DeviceLossError` from inside
+  ``TrainLoop.run``), a crash mid-save (arms ``checkpoint.set_save_fault`` so
+  the atomic tmp-rename never commits), and a straggler stall (sleeps inside
+  the measured step so the loop's watchdog trips).
+* :func:`derive_mesh` — rebuild a ``(data, model)`` mesh over the surviving
+  device subset; returns both the planner mesh (``repro.core.Mesh``) and the
+  runtime ``jax.sharding.Mesh``.
+* :class:`ElasticCoordinator` — catches an injected device loss, shrinks the
+  world, re-derives the mesh, re-solves the sharding assignment with
+  ``autoshard.solve_problem`` **warm-started from the previous assignment's
+  JSON dump** (Automap-style: the warm point skips the greedy sweep, so
+  recovery search is strictly cheaper than the cold solve), restores the last
+  checkpoint onto the new mesh via the **plan-lowered reshard program**
+  (``checkpoint.restore_resharded`` → ``core.plan.StateReshardPlan``, priced
+  and reported like any other plan), swaps the jitted step into the existing
+  ``TrainLoop`` (``swap_plan``), and resumes from the manifest's data cursor —
+  all without a process restart.  If the warm re-solve fails feasibility
+  (memory budget on the shrunk mesh), it degrades gracefully to a
+  data-parallel-only assignment instead of aborting.
+
+Exercised in tests/test_elastic.py (single device: recovery mechanics, warm
+vs cold evals, DP degradation) and tests/multidev/test_elastic_multidev.py
+(8 fake devices: reshard-program restore bit-identical to the host-mediated
+path, continuous loss curve across a mid-training device loss).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
+
+from repro.core.sharding import Mesh
+
+from ..train import checkpoint as ckpt_lib
 
 
-def derive_mesh(n_devices: int, model_parallel: int = None):
-    """Largest (data, model) mesh for the surviving device count."""
-    mp = model_parallel or min(16, n_devices)
-    while n_devices % mp:
+class DeviceLossError(RuntimeError):
+    """Raised (by the fault hook) when devices drop out of the world."""
+
+    def __init__(self, step: int, lost: int = 1):
+        self.step, self.lost = step, lost
+        super().__init__(f"lost {lost} device(s) at step {step}")
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault injection for the elastic recovery loop.
+
+    Each fault fires once.  ``hook`` is installed as ``TrainLoop``'s
+    ``"fault"`` hook (called inside the measured step window);
+    ``arm_save_fault`` plumbs the crash-mid-save into
+    ``checkpoint.set_save_fault``.
+    """
+
+    device_loss_at: int = -1   # step at which devices drop
+    lose: int = 1              # how many
+    straggler_at: int = -1     # step to stall
+    stall_s: float = 0.0       # injected stall duration
+    crash_save_at_leaf: int = -1  # raise mid-save after writing k leaves
+    fired: set = dataclasses.field(default_factory=set)
+
+    def hook(self, step: int) -> None:
+        if step == self.straggler_at and "straggler" not in self.fired:
+            self.fired.add("straggler")
+            time.sleep(self.stall_s)
+        if step == self.device_loss_at and "device_loss" not in self.fired:
+            self.fired.add("device_loss")
+            raise DeviceLossError(step, self.lose)
+
+    def arm_save_fault(self) -> None:
+        if self.crash_save_at_leaf < 0:
+            return
+
+        def fault(i: int, key: str) -> None:
+            if i >= self.crash_save_at_leaf and "crash_save" not in self.fired:
+                self.fired.add("crash_save")
+                raise OSError(
+                    f"injected crash mid-save (leaf {i}: {key})")
+
+        ckpt_lib.set_save_fault(fault)
+
+    def disarm(self) -> None:
+        ckpt_lib.set_save_fault(None)
+
+
+def derive_mesh(n_devices: Optional[int] = None,
+                model_parallel: Optional[int] = None,
+                devices: Optional[Sequence] = None,
+                ) -> Tuple[Mesh, "jax.sharding.Mesh"]:
+    """Largest ``(data, model)`` mesh over the surviving devices.
+
+    Returns ``(planner_mesh, jax_mesh)``.  ``devices`` pins an explicit
+    subset (the post-loss world); otherwise the first ``n_devices`` of
+    ``jax.devices()`` are used.  ``model_parallel`` is clamped to the largest
+    divisor of the world size ≤ the requested value, so a mesh that lost a
+    node still derives.
+    """
+    if devices is None:
+        devices = jax.devices()
+        if n_devices is not None:
+            devices = devices[:n_devices]
+    devices = list(devices)
+    n = len(devices)
+    mp = model_parallel or min(16, n)
+    mp = min(mp, n)
+    while n % mp:
         mp -= 1
-    from repro.core.compat import make_jax_mesh
+    shape = (n // mp, mp)
+    mesh = Mesh.create(shape, ("data", "model"))
+    jmesh = jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), ("data", "model"))
+    return mesh, jmesh
 
-    return make_jax_mesh((n_devices // mp, mp), ("data", "model"))
+
+def state_partition_specs(cfg, st, opt, tc) -> Dict[str, Any]:
+    """PartitionSpec tree shaped like the train-loop state (params, opt
+    state sharded like params, replicated step) — the restore target specs
+    for a cross-topology checkpoint load."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..models import api
+    from ..models.layers import tree_shapes, tree_specs
+    from ..train.optimizer import opt_state_specs
+
+    tree = api.param_tree(cfg, st)
+    pspecs = tree_specs(tree)
+    ospecs = opt_state_specs(opt, pspecs, tree_shapes(tree))
+    fill = lambda t: jax.tree_util.tree_map(
+        lambda s: s if s is not None else P(),
+        t, is_leaf=lambda x: x is None or isinstance(x, P))
+    spec_state = {"params": fill(pspecs), "opt": fill(ospecs), "step": P()}
+    if tc.compress_grads:
+        spec_state["ef"] = fill(pspecs)
+    return spec_state
+
+
+def specs_by_key(spec_state) -> Dict[str, Any]:
+    """Flatten a spec tree to the checkpoint's ``/``-joined leaf keys."""
+    flat, _ = ckpt_lib._flatten_with_paths(spec_state)
+    return dict(flat)
+
+
+def sharding_problem(cfg, st, mesh: Mesh, local_batch: int, seq_len: int):
+    """Trace ``cfg``'s loss annotation-free and build the Table-1 baseline
+    assignment on ``mesh`` (mirrors ``autoshard.registry_problem`` for a
+    config that need not live in the registry).  Pure — needs no devices, so
+    warm-vs-cold solve comparisons run on any mesh shape."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import autoshard
+    from ..models import api
+    from ..models.layers import tree_shapes, tree_specs
+
+    tree = api.param_tree(cfg, st)
+    shapes = tree_shapes(tree)
+    batch_in = {
+        "tokens": jax.ShapeDtypeStruct((local_batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((local_batch, seq_len), jnp.int32),
+    }
+    closed = jax.make_jaxpr(
+        lambda p, b: api.loss_fn(cfg, st, p, b)
+    )(shapes, batch_in)
+    spec_leaves = jax.tree_util.tree_leaves(
+        (tree_specs(tree), {k: P(("data",)) for k in batch_in}),
+        is_leaf=lambda x: x is None or isinstance(x, P),
+    )
+    baseline = [
+        autoshard.sharding_from_spec(mesh, s, tuple(v.aval.shape))
+        for s, v in zip(spec_leaves, closed.jaxpr.invars)
+    ]
+    return closed, baseline
+
+
+class ElasticCoordinator:
+    """Drive a :class:`~repro.train.loop.TrainLoop` through injected faults.
+
+    One instance owns the device world, the current mesh pair, the last
+    autoshard assignment (dumped to JSON next to the checkpoints), and the
+    recovery log.  ``run()`` returns ``(state, losses)`` exactly like
+    ``TrainLoop.run`` — with ``losses`` continuous across recoveries.
+    """
+
+    def __init__(self, cfg, st, opt, tc, pipeline, *,
+                 n_devices: Optional[int] = None,
+                 model_parallel: Optional[int] = None,
+                 autoshard_config=None,
+                 injector: Optional[FaultInjector] = None,
+                 hooks: Optional[Dict[str, Callable]] = None,
+                 max_recoveries: int = 3):
+        from repro import autoshard
+        from ..train.loop import TrainLoop
+
+        self.cfg, self.st, self.opt, self.tc = cfg, st, opt, tc
+        self.pipeline = pipeline
+        self.model_parallel = model_parallel
+        self.devices = list(jax.devices())[:n_devices]
+        self.mesh, self.jmesh = derive_mesh(
+            devices=self.devices, model_parallel=model_parallel)
+        self.ashard_config = autoshard_config or autoshard.AutoshardConfig(
+            top_n=4, sa_steps=4)
+        self.injector = injector
+        self.max_recoveries = max_recoveries
+        self.recoveries: List[Dict] = []
+        # keyed by step: a post-recovery replay of an uncheckpointed step
+        # overwrites rather than duplicates, so the returned curve is one
+        # loss per step — continuous across recoveries
+        self.losses: Dict[int, float] = {}
+        self.assignment = None   # last AutoshardResult
+        self.degraded = False    # True after a DP-only fallback
+        self.dump_path = (os.path.join(tc.ckpt_dir, "assignment.json")
+                          if tc.ckpt_dir else None)
+        loop_hooks = dict(hooks or {})
+        if injector is not None:
+            loop_hooks["fault"] = injector.hook
+            injector.arm_save_fault()
+        loop_hooks["metrics"] = lambda step, loss: self.losses.__setitem__(
+            step, loss)
+        if self.dump_path:
+            loop_hooks.setdefault(
+                "ckpt_extra",
+                lambda: {"assignment_path": self.dump_path,
+                         "mesh": {"shape": list(self.mesh.shape),
+                                  "axes": list(self.mesh.axis_names)}})
+        self.loop = TrainLoop(cfg, st, opt, tc, pipeline, hooks=loop_hooks)
+
+    # -- sharding re-solve ---------------------------------------------------
+    def _problem(self, mesh: Mesh):
+        dc = self.pipeline.cfg
+        return sharding_problem(self.cfg, self.st, mesh,
+                                self.pipeline.local_batch, dc.seq_len)
+
+    def solve_assignment(self, warm=None):
+        """(Re-)solve the sharding assignment on the current mesh.  ``warm``
+        is a prior-mesh assignment (e.g. ``autoshard.load(dump)[1]``); when
+        the warm/cold solve is infeasible under the budget, degrade to the
+        data-parallel-only restriction of the baseline."""
+        from repro import autoshard
+
+        closed, baseline = self._problem(self.mesh)
+        shapes = [tuple(v.aval.shape) for v in closed.jaxpr.invars]
+        ws = (autoshard.remap_assignment(warm, self.mesh, shapes)
+              if warm is not None else None)
+        res = autoshard.solve_problem(
+            closed, self.mesh, self.ashard_config,
+            baseline=baseline, warm_start=ws)
+        self.degraded = False
+        if not res.evaluation.feasible:
+            dp = autoshard.restrict_assignment(baseline, self.mesh, shapes)
+            res = autoshard.solve_problem(
+                closed, self.mesh,
+                dataclasses.replace(self.ashard_config, top_n=0, sa_steps=0),
+                baseline=dp, warm_start=dp)
+            res.assignment = dp
+            self.degraded = True
+        self.assignment = res
+        if self.dump_path:
+            os.makedirs(os.path.dirname(self.dump_path), exist_ok=True)
+            res.dump(self.dump_path)
+        return res
+
+    # -- recovery ------------------------------------------------------------
+    def _recover(self, err: DeviceLossError) -> Tuple[Any, Optional[int]]:
+        """Shrink the world, re-derive the mesh, warm re-solve, reshard-
+        restore, swap the plan.  Returns ``(state, start_step)`` to resume
+        from (``(None, None)`` = no checkpoint yet: reinit)."""
+        from repro import autoshard
+        from ..train.loop import make_train_step
+
+        survivors = max(len(self.devices) - err.lost, 1)
+        self.devices = self.devices[:survivors]
+        old_shape = self.mesh.shape
+        self.mesh, self.jmesh = derive_mesh(
+            devices=self.devices, model_parallel=self.model_parallel)
+        warm = None
+        if self.dump_path and os.path.exists(self.dump_path):
+            warm = autoshard.load(self.dump_path)[1]
+        res = self.solve_assignment(warm=warm)
+        event = {
+            "step": err.step, "lost": err.lost,
+            "mesh": {"from": list(old_shape), "to": list(self.mesh.shape)},
+            "warm_started": res.warm_started,
+            "degraded": self.degraded,
+            "evals": res.evals,
+        }
+        state, start = None, None
+        if self.tc.ckpt_dir and ckpt_lib.latest_step(self.tc.ckpt_dir) is not None:
+            from ..train.loop import init_state
+
+            target = init_state(self.cfg, self.st, self.opt, self.tc,
+                                self.loop.rng)
+            specs = specs_by_key(
+                state_partition_specs(self.cfg, self.st, self.opt, self.tc))
+            state, manifest, report = ckpt_lib.restore_resharded(
+                self.tc.ckpt_dir, target, self.mesh, self.jmesh,
+                target_specs=specs)
+            start = int(manifest.get("extra", {}).get(
+                "data_cursor", manifest["step"]))
+            event["reshard"] = {
+                k: report[k] for k in
+                ("leaves", "resharded_leaves", "wire_bytes", "launches",
+                 "reshard_s", "step")
+            }
+        self.loop.swap_plan(
+            make_train_step(self.cfg, self.st, self.opt, self.tc))
+        self.recoveries.append(event)
+        return state, start
+
+    def run(self):
+        """Train to completion, recovering in-process from injected faults."""
+        from repro.core.compat import set_mesh
+
+        if self.assignment is None:
+            self.solve_assignment()
+        state, start = None, None
+        attempts = 0
+        while True:
+            try:
+                with set_mesh(self.jmesh):
+                    final, _ = self.loop.run(
+                        initial_state=state, start_step=start)
+                return final, [self.losses[s] for s in sorted(self.losses)]
+            except DeviceLossError as e:
+                attempts += 1
+                if attempts > self.max_recoveries:
+                    raise
+                state, start = self._recover(e)
+            except OSError:
+                # crash mid-save: the atomic tmp-rename never committed, so
+                # the last intact step is still the restore point; disarm the
+                # injector and resume from it on the same mesh
+                attempts += 1
+                if attempts > self.max_recoveries:
+                    raise
+                if self.injector is not None:
+                    self.injector.disarm()
+                state, start = None, None
+                self.recoveries.append({"crash_save": True})

@@ -1,22 +1,99 @@
-"""Fault-tolerant checkpointing with elastic (reshard-on-load) restore.
+"""Fault-tolerant sharded checkpointing with plan-lowered elastic restore.
 
-Layout:  <dir>/step_<N>/  with one ``.npy`` per leaf + ``manifest.json``
-(tree structure, shapes, dtypes, step, data-pipeline cursor, config fingerprint).
-Writes are atomic: a ``.tmp-`` directory is renamed into place only after fsync,
-so a crash mid-save never corrupts the latest checkpoint.  ``restore`` device_puts
-each leaf with the *target* sharding — restoring onto a different mesh shape
-(elastic scale-up/down) is therefore free.
+Layout:  ``<dir>/step_<N>/`` with one ``.npy`` per leaf + ``manifest.json``.
+The manifest (format 2) stores, per leaf, the file name, shape, dtype, a
+content checksum (crc32), and the **partition spec** the leaf was saved under
+(its ``dims_mapping`` by mesh-axis name — auto-derived from the leaf's
+``NamedSharding`` or passed explicitly), plus the saving mesh and the caller's
+``extra`` dict (data cursor, autoshard assignment, …).
+
+Writes are atomic: a ``.tmp-`` directory is renamed into place only after
+fsync, so a crash mid-save never corrupts the latest checkpoint (the orphan
+tmp dir is inert — ``latest_step`` only counts directories with a manifest).
+
+Restores are *verified* and *resilient*:
+
+* every leaf's checksum is validated — a flipped byte raises a typed
+  :class:`CheckpointCorruptError` (which leaf, which step, which file)
+  instead of silently loading garbage;
+* transient I/O errors are retried with backoff (:func:`io_retries`);
+* when no explicit ``step`` was requested, a corrupt/unreadable step falls
+  back to the previous intact ``step_N`` directory;
+* a manifest/target mismatch raises a ``KeyError`` naming the missing leaf,
+  the step, and the available keys — or, under ``strict=False``, skips the
+  leaf and reports it in ``manifest["restore_report"]``.
+
+Cross-topology restore (``restore_resharded``) is a **plan-lowered reshard
+program**, not a host-mediated ``device_put``: each manifest spec is
+projected onto the new mesh (axes that no longer exist or divide become
+replication — ``core/sharding.project_dims_mapping``), the cost-model planner
+lowers one collective program per leaf
+(``core/plan.compile_state_reshard``), and all programs replay in a single
+jitted ``shard_map`` — priced and reported like any other plan.  This is the
+elastic-training restore path (``launch/elastic.py``).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
 import time
-from typing import Any, Dict, Optional
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+FORMAT = 2
+
+
+class CheckpointError(Exception):
+    """Base for checkpoint failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A shard failed checksum validation (or was unreadable/garbled)."""
+
+    def __init__(self, step: int, key: str, path: str, detail: str = ""):
+        self.step, self.key, self.path = step, key, path
+        super().__init__(
+            f"checkpoint step {step} corrupt: leaf '{key}' at {path}"
+            + (f" ({detail})" if detail else "")
+        )
+
+
+# -- I/O retry policy (transient FS errors on network storage) -------------------
+_IO_RETRIES = 3
+_IO_BACKOFF_S = 0.05
+
+# fault-injection hook (armed by launch/elastic.FaultInjector and tests):
+# called as fn(leaf_index, key) before each leaf write; raising simulates a
+# crash mid-save — the tmp dir is left behind, the final dir never appears.
+_SAVE_FAULT: Optional[Callable[[int, str], None]] = None
+
+
+def set_save_fault(fn: Optional[Callable[[int, str], None]]) -> None:
+    global _SAVE_FAULT
+    _SAVE_FAULT = fn
+
+
+def _retry(fn, desc: str, retries: int = None, backoff: float = None):
+    retries = _IO_RETRIES if retries is None else retries
+    backoff = _IO_BACKOFF_S if backoff is None else backoff
+    last = None
+    for attempt in range(max(retries, 1)):
+        try:
+            return fn()
+        except (OSError, ValueError) as e:  # ValueError: truncated .npy
+            last = e
+            if attempt + 1 < retries:
+                time.sleep(backoff * (2 ** attempt))
+    raise last if last is not None else OSError(f"retry exhausted: {desc}")
+
+
+def _checksum(arr: np.ndarray) -> str:
+    return f"crc32:{zlib.crc32(np.ascontiguousarray(arr).tobytes()):08x}"
 
 
 def _flatten_with_paths(tree):
@@ -30,8 +107,69 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
-def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None):
-    """Atomic checkpoint save.  ``state`` is any pytree of arrays."""
+def _spec_of_leaf(leaf) -> Tuple[Optional[List[List[str]]], Optional[Dict]]:
+    """(dims_mapping, mesh dict) from a leaf's NamedSharding, or (None, None)."""
+    sh = getattr(leaf, "sharding", None)
+    spec = getattr(sh, "spec", None)
+    jm = getattr(sh, "mesh", None)
+    if spec is None or jm is None:
+        return None, None
+    rank = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    dm: List[List[str]] = []
+    for e in list(spec)[:rank]:
+        if e is None:
+            dm.append([])
+        elif isinstance(e, str):
+            dm.append([e])
+        else:
+            dm.append(list(e))
+    dm += [[] for _ in range(rank - len(dm))]
+    mesh_d = {
+        "shape": [int(s) for s in np.shape(getattr(jm, "devices", ()))]
+        or list(getattr(jm, "axis_sizes", ())),
+        "axes": list(getattr(jm, "axis_names", ())),
+    }
+    return dm, mesh_d
+
+
+def _spec_entry(specs, key: str, leaf) -> Tuple[Optional[List[List[str]]],
+                                                Optional[Dict]]:
+    """Resolve the recorded spec for one leaf: explicit ``specs`` (dict or
+    callable) wins, else auto-derive from the leaf's NamedSharding."""
+    ent = None
+    if callable(specs):
+        ent = specs(key)
+    elif specs is not None:
+        ent = specs.get(key)
+    if ent is None:
+        return _spec_of_leaf(leaf)
+    # explicit entry: a repro Sharding, a PartitionSpec, or a dims_mapping seq
+    if hasattr(ent, "dims_mapping"):  # repro Sharding
+        mesh = ent.mesh
+        return ([list(a) for a in ent.dims_mapping],
+                {"shape": list(mesh.shape), "axes": list(mesh.axis_names)})
+    rank = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    dm = []
+    for e in list(ent)[:rank]:
+        if e is None:
+            dm.append([])
+        elif isinstance(e, str):
+            dm.append([e])
+        else:
+            dm.append(list(e))
+    dm += [[] for _ in range(rank - len(dm))]
+    return dm, None
+
+
+def save(ckpt_dir: str, step: int, state,
+         extra: Optional[Dict[str, Any]] = None, specs=None) -> str:
+    """Atomic checkpoint save.  ``state`` is any pytree of arrays.
+
+    ``specs`` optionally names each leaf's partition spec (dict key →
+    Sharding / PartitionSpec / dims_mapping, or a callable); leaves carrying a
+    ``NamedSharding`` record their spec automatically.  ``extra`` lands in
+    the manifest verbatim (the training loop stores its data cursor there).
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}-{os.getpid()}")
@@ -39,14 +177,24 @@ def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     leaves, _ = _flatten_with_paths(state)
-    manifest = {"step": step, "time": time.time(), "leaves": [], "extra": extra or {}}
-    for key, leaf in leaves:
+    manifest = {
+        "format": FORMAT, "step": step, "time": time.time(),
+        "mesh": None, "leaves": [], "extra": extra or {},
+    }
+    for i, (key, leaf) in enumerate(leaves):
+        if _SAVE_FAULT is not None:
+            _SAVE_FAULT(i, key)
+        dm, mesh_d = _spec_entry(specs, key, leaf)
         arr = np.asarray(jax.device_get(leaf))
         fname = key.replace("/", "__") + ".npy"
         np.save(os.path.join(tmp, fname), arr)
-        manifest["leaves"].append(
-            {"key": key, "file": fname, "shape": arr.shape, "dtype": str(arr.dtype)}
-        )
+        if mesh_d is not None and manifest["mesh"] is None:
+            manifest["mesh"] = mesh_d
+        manifest["leaves"].append({
+            "key": key, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "checksum": _checksum(arr),
+            "spec": dm,
+        })
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -57,33 +205,123 @@ def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def intact_steps(ckpt_dir: str) -> List[int]:
+    """All steps with a committed manifest, ascending."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(d.split("_")[1])
         for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
-    ]
-    return max(steps) if steps else None
+        if d.startswith("step_")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
+    )
 
 
-def restore(ckpt_dir: str, target, step: Optional[int] = None, sharding_for=None):
-    """Restore into the structure of ``target`` (a pytree of arrays or
-    ShapeDtypeStructs).  ``sharding_for(leaf_path_key)`` may return a Sharding to
-    device_put with — the elastic-resharding hook."""
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = intact_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _load_manifest(ckpt_dir: str, step: int) -> Dict:
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+
+    def rd():
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+
+    try:
+        return _retry(rd, f"manifest step {step}")
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(step, "<manifest>",
+                                     os.path.join(d, "manifest.json"), str(e))
+
+
+def _load_leaf(ckpt_dir: str, step: int, info: Dict,
+               verify: bool = True) -> np.ndarray:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", info["file"])
+    try:
+        arr = _retry(lambda: np.load(path), f"leaf {info['key']}")
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(step, info["key"], path, str(e))
+    if verify and info.get("checksum"):
+        got = _checksum(arr)
+        if got != info["checksum"]:
+            raise CheckpointCorruptError(
+                step, info["key"], path,
+                f"checksum {got} != recorded {info['checksum']}")
+    if list(arr.shape) != list(info.get("shape", arr.shape)):
+        raise CheckpointCorruptError(
+            step, info["key"], path,
+            f"shape {list(arr.shape)} != recorded {info['shape']}")
+    return arr
+
+
+def _missing_key_error(key: str, step: int, by_key: Dict) -> KeyError:
+    avail = sorted(by_key)
+    shown = ", ".join(avail[:12]) + (" …" if len(avail) > 12 else "")
+    return KeyError(
+        f"checkpoint step {step} has no leaf '{key}' for the restore target "
+        f"(manifest has {len(avail)} leaves: {shown}); pass strict=False to "
+        f"skip missing leaves"
+    )
+
+
+def _candidate_steps(ckpt_dir: str, step: Optional[int]) -> List[int]:
+    """Steps to try, newest first.  Explicit ``step`` pins exactly one (no
+    fallback); ``None`` walks every intact step until one restores."""
+    if step is not None:
+        return [step]
+    steps = intact_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    return steps[::-1]
+
+
+def restore(ckpt_dir: str, target, step: Optional[int] = None,
+            sharding_for=None, strict: bool = True, verify: bool = True):
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``sharding_for(leaf_path_key)`` may return a Sharding
+    to device_put with.
+
+    Checksums are validated (``verify=False`` skips), I/O is retried with
+    backoff, and — when ``step`` is ``None`` — a corrupt step falls back to
+    the previous intact one.  ``strict=False`` keeps the target's value for
+    leaves missing from the manifest and reports them in
+    ``manifest["restore_report"]["missing"]``.
+    """
+    fell_back: List[int] = []
+    last_err: Optional[Exception] = None
+    for s in _candidate_steps(ckpt_dir, step):
+        try:
+            out, manifest = _restore_step(
+                ckpt_dir, s, target, sharding_for, strict, verify)
+            manifest["restore_report"]["fell_back_from"] = fell_back
+            return out, manifest
+        except CheckpointCorruptError as e:
+            fell_back.append(s)
+            last_err = e
+    raise last_err
+
+
+def _restore_step(ckpt_dir, step, target, sharding_for, strict, verify):
+    manifest = _load_manifest(ckpt_dir, step)
     by_key = {l["key"]: l for l in manifest["leaves"]}
     leaves, treedef = _flatten_with_paths(target)
     out = []
+    missing: List[str] = []
     for key, tgt in leaves:
-        info = by_key[key]
-        arr = np.load(os.path.join(d, info["file"]))
+        info = by_key.pop(key, None)
+        if info is None:
+            if strict:
+                raise _missing_key_error(key, step,
+                                         {l["key"]: l for l in manifest["leaves"]})
+            missing.append(key)
+            if hasattr(tgt, "dtype") and not hasattr(tgt, "__array__"):
+                # abstract target (ShapeDtypeStruct): materialize zeros
+                tgt = jax.numpy.zeros(tgt.shape, tgt.dtype)
+            out.append(tgt)
+            continue
+        arr = _load_leaf(ckpt_dir, step, info, verify=verify)
         want_dtype = tgt.dtype if hasattr(tgt, "dtype") else arr.dtype
         arr = arr.astype(want_dtype)
         sh = None
@@ -92,10 +330,129 @@ def restore(ckpt_dir: str, target, step: Optional[int] = None, sharding_for=None
         elif hasattr(tgt, "sharding") and tgt.sharding is not None:
             sh = tgt.sharding
         out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    manifest["restore_report"] = {
+        "step": step, "missing": missing, "unused": sorted(by_key),
+    }
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 
 
-def cleanup(ckpt_dir: str, keep: int = 3):
+# ---------------------------------------------------------------------------------
+# cross-topology restore: a plan-lowered reshard program on the new mesh
+# ---------------------------------------------------------------------------------
+
+
+def _as_target_sharding(mesh, spec, shape):
+    """Resolve one target-spec entry to a Sharding on ``mesh`` (projected:
+    axes absent from the mesh or non-dividing are dropped)."""
+    from repro.core.sharding import project_dims_mapping, replicated
+
+    if spec is None:
+        return replicated(mesh, len(shape))
+    if hasattr(spec, "dims_mapping"):
+        return project_dims_mapping(mesh, spec.dims_mapping, shape)
+    dm = []
+    for e in list(spec)[:len(shape)]:
+        if e is None:
+            dm.append(())
+        elif isinstance(e, str):
+            dm.append((e,))
+        else:
+            dm.append(tuple(e))
+    return project_dims_mapping(mesh, dm, shape)
+
+
+def plan_restore_reshard(manifest: Dict, target_leaves, mesh,
+                         target_specs=None):
+    """Compile the manifest→target reshard program (pure planning).
+
+    ``target_leaves`` is the ``(key, leaf)`` list of the restore target;
+    ``target_specs`` maps key → Sharding / PartitionSpec / dims_mapping (dict
+    or callable; missing/None = replicated).  Source shardings come from the
+    manifest specs projected onto ``mesh``.  Returns
+    ``repro.core.plan.StateReshardPlan``.
+    """
+    from repro.core.plan import compile_state_reshard
+    from repro.core.sharding import project_dims_mapping
+
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    items = []
+    for key, tgt in target_leaves:
+        info = by_key[key]
+        shape = tuple(info["shape"])
+        src = project_dims_mapping(mesh, [tuple(a) for a in info["spec"] or []],
+                                   shape)
+        spec = None
+        if callable(target_specs):
+            spec = target_specs(key)
+        elif target_specs is not None:
+            spec = target_specs.get(key)
+        dst = _as_target_sharding(mesh, spec, shape)
+        items.append((key, src, dst, shape, info["dtype"]))
+    return compile_state_reshard(items, mesh)
+
+
+def restore_resharded(ckpt_dir: str, target, mesh, jmesh,
+                      target_specs=None, step: Optional[int] = None,
+                      strict: bool = True, verify: bool = True):
+    """Restore onto a *different* mesh via a plan-lowered reshard program.
+
+    Each leaf is loaded under its **source** layout (the manifest spec
+    projected onto the new mesh — the stand-in for a distributed read where
+    every host loads its shard slice), then one compiled
+    :class:`~repro.core.plan.StateReshardPlan` moves the whole state to the
+    **target** layout in a single jitted ``shard_map`` launch.  Returns
+    ``(tree, manifest, report)`` where ``report`` is the plan's priced
+    summary (wire bytes, launches, modeled reshard seconds) plus the restore
+    bookkeeping of :func:`restore`.
+    """
+    from jax.sharding import NamedSharding
+
+    from repro.core.sharding import to_partition_spec
+
+    fell_back: List[int] = []
+    last_err: Optional[Exception] = None
+    for s in _candidate_steps(ckpt_dir, step):
+        try:
+            manifest = _load_manifest(ckpt_dir, s)
+            by_key = {l["key"]: l for l in manifest["leaves"]}
+            leaves, treedef = _flatten_with_paths(target)
+            missing = [k for k, _ in leaves if k not in by_key]
+            if missing and strict:
+                raise _missing_key_error(missing[0], s, by_key)
+            present = [(k, t) for k, t in leaves if k in by_key]
+            plan = plan_restore_reshard(manifest, present, mesh, target_specs)
+            arrays = []
+            for (key, tgt), leaf in zip(present, plan.leaves):
+                arr = _load_leaf(ckpt_dir, s, by_key[key], verify=verify)
+                want = tgt.dtype if hasattr(tgt, "dtype") else arr.dtype
+                arrays.append(jax.device_put(
+                    arr.astype(want),
+                    NamedSharding(jmesh, to_partition_spec(leaf.src))))
+            moved = plan.execute(jmesh, arrays) if arrays else ()
+            by_out = dict(zip((k for k, _ in present), moved))
+            out = []
+            for key, tgt in leaves:
+                if key in by_out:
+                    out.append(by_out[key])
+                else:
+                    if hasattr(tgt, "dtype") and not hasattr(tgt, "__array__"):
+                        tgt = jax.numpy.zeros(tgt.shape, tgt.dtype)
+                    out.append(tgt)
+            report = plan.report()
+            report.update({"step": s, "missing": missing,
+                           "unused": sorted(set(by_key) - {k for k, _ in leaves}),
+                           "fell_back_from": fell_back})
+            manifest["restore_report"] = report
+            return jax.tree_util.tree_unflatten(treedef, out), manifest, report
+        except CheckpointCorruptError as e:
+            fell_back.append(s)
+            last_err = e
+    raise last_err
+
+
+def cleanup(ckpt_dir: str, keep: int = 3, remove_tmp: bool = False):
+    """Drop all but the newest ``keep`` steps; ``remove_tmp`` also clears
+    orphan ``.tmp-`` dirs left by crashed saves (never the committed steps)."""
     if not os.path.isdir(ckpt_dir):
         return
     steps = sorted(
@@ -103,3 +460,7 @@ def cleanup(ckpt_dir: str, keep: int = 3):
     )
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    if remove_tmp:
+        for d in os.listdir(ckpt_dir):
+            if d.startswith(".tmp-"):
+                shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

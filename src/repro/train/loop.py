@@ -110,6 +110,16 @@ def init_state(cfg: ModelConfig, st: Strategy, opt: Optimizer, tc: TrainConfig, 
     return state
 
 
+def _ambient_mesh():
+    """The ambient concrete jax mesh, or None outside any mesh context."""
+    from ..core.compat import get_abstract_mesh
+
+    m = get_abstract_mesh()
+    if m is None or getattr(m, "empty", True):
+        return None
+    return m if isinstance(m, jax.sharding.Mesh) else None
+
+
 class TrainLoop:
     """Drives training with checkpoint/restart and a straggler watchdog."""
 
@@ -123,19 +133,63 @@ class TrainLoop:
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.step_times = []
 
+    def swap_plan(self, step_fn) -> None:
+        """Replace the jitted step without restarting the process — the
+        elastic-recovery path after a mesh change (new assignment → new
+        partitioned step function)."""
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        self.step_times = []  # old timings are not comparable post-reshard
+
+    def _ckpt_extra(self, step: int) -> Dict[str, Any]:
+        """Manifest ``extra``: the data cursor (next batch index) is the
+        authoritative resume point — restart replays nothing and skips
+        nothing.  A ``ckpt_extra`` hook merges coordinator state (e.g. the
+        autoshard assignment dump) into the same manifest."""
+        extra = {"data_cursor": step + 1}
+        if "ckpt_extra" in self.hooks:
+            extra.update(self.hooks["ckpt_extra"]() or {})
+        return extra
+
     def _restore_or_init(self):
+        """Returns ``(state, start_step)``; start comes from the manifest's
+        data cursor (not the state leaf), so the pipeline resumes exactly
+        where the checkpoint left off."""
         state = init_state(self.cfg, self.st, self.opt, self.tc, self.rng)
+        start = 0
         if self.tc.ckpt_dir:
             last = ckpt_lib.latest_step(self.tc.ckpt_dir)
             if last is not None:
-                state, manifest = ckpt_lib.restore(self.tc.ckpt_dir, state, last)
-                if "log" in self.hooks:
-                    self.hooks["log"](f"restored checkpoint step={last}")
-        return state
+                # under an ambient mesh, land every leaf replicated on it so
+                # the jitted step's constraints can reshard device-side (the
+                # restarted-on-a-new-mesh path); otherwise plain device_put
+                sharding_for = None
+                amesh = _ambient_mesh()
+                if amesh is not None:
+                    from jax.sharding import NamedSharding, PartitionSpec
 
-    def run(self):
-        state = self._restore_or_init()
-        start = int(jax.device_get(state["step"]))
+                    sharding_for = (
+                        lambda key: NamedSharding(amesh, PartitionSpec()))
+                state, manifest = ckpt_lib.restore(
+                    self.tc.ckpt_dir, state, last, sharding_for=sharding_for)
+                start = int(manifest.get("extra", {}).get(
+                    "data_cursor", manifest["step"]))
+                if "log" in self.hooks:
+                    self.hooks["log"](
+                        f"restored checkpoint step={last} cursor={start}")
+        return state, start
+
+    def run(self, initial_state=None, start_step: Optional[int] = None):
+        """Train until ``tc.steps``.  ``initial_state``/``start_step`` let a
+        coordinator resume mid-process after an elastic reshard (skipping the
+        checkpoint-restore path it already performed)."""
+        if initial_state is not None:
+            state = initial_state
+            start = (start_step if start_step is not None
+                     else int(jax.device_get(state["step"])))
+        else:
+            state, start = self._restore_or_init()
+            if start_step is not None:
+                start = start_step
         losses = []
         for step in range(start, self.tc.steps):
             if step == self.tc.fail_at_step:
@@ -144,11 +198,18 @@ class TrainLoop:
                 k: jnp.asarray(v) for k, v in self.pipeline.batch_at(step).items()
             }
             t0 = time.perf_counter()
+            if "fault" in self.hooks:
+                # fault-injection point (launch/elastic.FaultInjector): sits
+                # after t0 so an injected straggler stall lands in the
+                # measured dt and trips the watchdog below
+                self.hooks["fault"](step)
             state, metrics = self.step_fn(state, batch)
             loss = float(jax.device_get(metrics["loss"]))
             dt = time.perf_counter() - t0
             self.step_times.append(dt)
             losses.append(loss)
+            if "metrics" in self.hooks:
+                self.hooks["metrics"](step, loss)
             # straggler watchdog (real deployment: report to coordinator,
             # trigger backup-worker promotion; here: hook + log)
             if len(self.step_times) >= 8:
@@ -156,10 +217,12 @@ class TrainLoop:
                 if dt > self.tc.straggler_factor * med and "straggler" in self.hooks:
                     self.hooks["straggler"](step, dt, med)
             if self.tc.ckpt_dir and (step + 1) % self.tc.ckpt_every == 0:
-                ckpt_lib.save(self.tc.ckpt_dir, step + 1, state)
+                ckpt_lib.save(self.tc.ckpt_dir, step + 1, state,
+                              extra=self._ckpt_extra(step))
                 ckpt_lib.cleanup(self.tc.ckpt_dir, self.tc.keep_ckpts)
             if "log" in self.hooks and step % self.tc.log_every == 0:
                 self.hooks["log"](f"step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
         if self.tc.ckpt_dir:
-            ckpt_lib.save(self.tc.ckpt_dir, self.tc.steps, state)
+            ckpt_lib.save(self.tc.ckpt_dir, self.tc.steps, state,
+                          extra=self._ckpt_extra(self.tc.steps - 1))
         return state, losses

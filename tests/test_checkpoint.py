@@ -1,0 +1,220 @@
+"""Checkpoint robustness: manifest specs + checksums, atomic saves, typed
+corruption errors with step fallback, strict/lenient tree mismatch, retry on
+transient I/O, and the plan-lowered cross-topology restore (pure planning +
+single-device execution; the real 8-device reshard runs in
+tests/multidev/test_elastic_multidev.py)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sharding import Mesh, mesh_split, replicated
+from repro.train import checkpoint as ckpt
+
+STATE = {
+    "params": {
+        "w": np.arange(32.0, dtype=np.float32).reshape(4, 8),
+        "b": np.ones((8,), np.float32),
+    },
+    "step": np.asarray(3, np.int32),
+}
+
+
+def test_roundtrip_and_manifest_contents(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, STATE, extra={"data_cursor": 3})
+    restored, manifest = ckpt.restore(d, STATE)
+    for a, b in zip(jax.tree_util.tree_leaves(STATE),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["format"] == ckpt.FORMAT
+    assert manifest["extra"]["data_cursor"] == 3
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    assert set(by_key) == {"params/w", "params/b", "step"}
+    for l in manifest["leaves"]:
+        assert l["checksum"].startswith("crc32:")
+    assert manifest["restore_report"]["missing"] == []
+
+
+def test_manifest_records_partition_specs(tmp_path):
+    """Explicit specs (and mesh) land in the manifest — the source layout for
+    a later cross-topology restore."""
+    mesh = Mesh.create((2, 4), ("data", "model"))
+    specs = {"params/w": mesh_split(2, mesh, ["data", "model"])}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE, specs=specs)
+    with open(os.path.join(d, "step_00000001", "manifest.json")) as f:
+        man = json.load(f)
+    by_key = {l["key"]: l for l in man["leaves"]}
+    assert by_key["params/w"]["spec"] == [["data"], ["model"]]
+    assert man["mesh"] == {"shape": [2, 4], "axes": ["data", "model"]}
+
+
+def test_atomic_save_crash_leaves_latest_intact(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE)
+
+    def boom(i, key):
+        if i >= 1:
+            raise OSError("injected crash mid-save")
+
+    ckpt.set_save_fault(boom)
+    try:
+        with pytest.raises(OSError, match="injected crash"):
+            ckpt.save(d, 2, STATE)
+    finally:
+        ckpt.set_save_fault(None)
+    # the crashed save left only a tmp dir; the committed step is untouched
+    assert ckpt.latest_step(d) == 1
+    assert any(x.startswith(".tmp-") for x in os.listdir(d))
+    restored, manifest = ckpt.restore(d, STATE)
+    assert manifest["step"] == 1
+    # cleanup(remove_tmp=True) clears the orphan without touching steps
+    ckpt.cleanup(d, keep=3, remove_tmp=True)
+    assert not any(x.startswith(".tmp-") for x in os.listdir(d))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_cleanup_keeps_newest_n(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, STATE)
+    ckpt.cleanup(d, keep=2)
+    assert ckpt.intact_steps(d) == [4, 5]
+
+
+def _corrupt_leaf(d, step, fname="params__w.npy"):
+    path = os.path.join(d, f"step_{step:08d}", fname)
+    arr = np.load(path)
+    arr.flat[0] += 1.0
+    np.save(path, arr)
+
+
+def test_corruption_raises_typed_error(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE)
+    _corrupt_leaf(d, 1)
+    with pytest.raises(ckpt.CheckpointCorruptError, match="params/w") as ei:
+        ckpt.restore(d, STATE, step=1)
+    assert ei.value.step == 1 and ei.value.key == "params/w"
+    # verify=False loads the garbage on request (escape hatch)
+    restored, _ = ckpt.restore(d, STATE, step=1, verify=False)
+    assert float(np.asarray(restored["params"]["w"]).flat[0]) == 1.0
+
+
+def test_corruption_falls_back_to_previous_intact_step(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE)
+    ckpt.save(d, 2, STATE)
+    _corrupt_leaf(d, 2)
+    restored, manifest = ckpt.restore(d, STATE)  # step=None: newest first
+    assert manifest["step"] == 1
+    assert manifest["restore_report"]["fell_back_from"] == [2]
+    # a garbled manifest also falls back
+    with open(os.path.join(d, "step_00000002", "manifest.json"), "w") as f:
+        f.write("{not json")
+    _, manifest = ckpt.restore(d, STATE)
+    assert manifest["step"] == 1
+
+
+def test_missing_leaf_keyerror_context_and_strict_false(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE)
+    target = {"params": dict(STATE["params"], extra=np.zeros(2, np.float32)),
+              "step": STATE["step"]}
+    with pytest.raises(KeyError) as ei:
+        ckpt.restore(d, target, step=1)
+    msg = str(ei.value)
+    assert "params/extra" in msg and "step 1" in msg and "params/w" in msg
+    restored, manifest = ckpt.restore(d, target, step=1, strict=False)
+    assert manifest["restore_report"]["missing"] == ["params/extra"]
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["extra"]), np.zeros(2, np.float32))
+    # unused manifest leaves are reported too
+    small = {"step": STATE["step"]}
+    _, manifest = ckpt.restore(d, small, step=1, strict=False)
+    assert sorted(manifest["restore_report"]["unused"]) == [
+        "params/b", "params/w"]
+
+
+def test_transient_io_errors_are_retried(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE)
+    monkeypatch.setattr(ckpt, "_IO_BACKOFF_S", 0.001)
+    real_load = np.load
+    fails = {"n": 2}
+
+    def flaky(path, *a, **kw):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+        return real_load(path, *a, **kw)
+
+    monkeypatch.setattr(np, "load", flaky)
+    restored, manifest = ckpt.restore(d, STATE, step=1)
+    assert manifest["step"] == 1 and fails["n"] == 0
+
+
+def test_state_reshard_plan_pure_planning():
+    """Planning a mesh-shrink restore needs no devices: (2,4) specs project
+    onto (2,2) and the compiled program is priced against gather-all."""
+    from repro.core.plan import compile_state_reshard
+    from repro.core.sharding import project_dims_mapping
+
+    new = Mesh.create((2, 2), ("data", "model"))
+    saved_spec = (("data",), ("model",))
+    shape = (16, 32)
+    src = project_dims_mapping(new, saved_spec, shape)
+    dst = mesh_split(2, new, [-1, "model"])
+    plan = compile_state_reshard(
+        [("w", src, dst, shape, "float32"),
+         ("b", replicated(new, 1), replicated(new, 1), (32,), "float32")],
+        new)
+    rep = plan.report()
+    assert rep["leaves"] == 2 and rep["resharded_leaves"] == 1
+    assert rep["wire_bytes"] > 0 and rep["reshard_s"] > 0
+    assert rep["ratio_vs_gather_all"] <= 1.0 + 1e-9
+
+
+def test_restore_resharded_single_device(tmp_path):
+    """End-to-end restore_resharded on the 1-device mesh: values identical
+    to the host-mediated restore, report populated."""
+    from repro.core.compat import make_jax_mesh
+
+    d = str(tmp_path / "ck")
+    mesh = Mesh.create((1, 1), ("data", "model"))
+    jmesh = make_jax_mesh((1, 1), ("data", "model"))
+    specs = {"params/w": mesh_split(2, mesh, ["data", "model"])}
+    ckpt.save(d, 1, STATE, specs=specs)
+    target = jax.tree_util.tree_map(jnp.asarray, STATE)
+    restored, manifest, report = ckpt.restore_resharded(
+        d, target, mesh, jmesh,
+        target_specs={"params/w": (("model",), ("data",))})
+    for a, b in zip(jax.tree_util.tree_leaves(STATE),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert report["leaves"] == 3 and report["step"] == 1
+    assert manifest["restore_report"] is report
+
+
+def test_restore_resharded_fallback_and_strict(tmp_path):
+    from repro.core.compat import make_jax_mesh
+
+    d = str(tmp_path / "ck")
+    mesh = Mesh.create((1, 1), ("data", "model"))
+    jmesh = make_jax_mesh((1, 1), ("data", "model"))
+    ckpt.save(d, 1, STATE)
+    ckpt.save(d, 2, STATE)
+    _corrupt_leaf(d, 2)
+    _, manifest, report = ckpt.restore_resharded(d, STATE, mesh, jmesh)
+    assert report["step"] == 1 and report["fell_back_from"] == [2]
+    target = {"params": dict(STATE["params"], extra=np.zeros(2, np.float32)),
+              "step": STATE["step"]}
+    with pytest.raises(KeyError, match="params/extra"):
+        ckpt.restore_resharded(d, target, mesh, jmesh, step=1)
+    _, _, report = ckpt.restore_resharded(d, target, mesh, jmesh, step=1,
+                                          strict=False)
+    assert report["missing"] == ["params/extra"]
