@@ -27,6 +27,11 @@ regresses:
   program regresses (wire bytes, launches, reshard seconds, or the
   gather-all ratio), or the warm-started autoshard re-solve stops being
   feasible / stops taking strictly fewer cost lowerings than the cold solve;
+* guard cells (numerics sentinels) — the guard epilogue's modeled overhead
+  exceeds its hard 1%-of-total_s cap, regresses vs the committed record, or
+  the epilogue stops emitting its steps/collective;
+* verifier telemetry — the bench run stops verifying plans, or a committed
+  record carries static-verifier violations (want exactly 0);
 * lattice telemetry — a reshard in the benchmark set starts hitting the
   node/depth caps of the branch-and-bound search;
 * cache cells — the per-runner or process-level hit rate drops.
@@ -212,6 +217,43 @@ def _check_pipeline_cell(msgs, name, base, fresh):
                         f"and tensor axes")
 
 
+def _check_guard_cell(msgs, name, base, fresh):
+    """Guarded-execution cells: the numerics-sentinel epilogue's modeled
+    overhead must stay under its hard cap (≤ 1% of the unguarded total_s)
+    and must not regress vs the committed record; the epilogue must keep
+    emitting its steps (a zero-step guard means the sentinels silently
+    vanished from the lowering)."""
+    cap = fresh.get("overhead_cap")
+    if cap is not None and fresh["overhead_ratio"] > cap + _EPS:
+        _fail(msgs, f"{name}: sentinel overhead {fresh['overhead_ratio']*100:.3f}% "
+                    f"over the {cap*100:.0f}% cap")
+    if fresh["overhead_ratio"] > base["overhead_ratio"] * (1 + 0.25) + _EPS:
+        _fail(msgs, f"{name}: overhead_ratio {base['overhead_ratio']:.2e} -> "
+                    f"{fresh['overhead_ratio']:.2e}")
+    if fresh["guard_steps"] <= 0:
+        _fail(msgs, f"{name}: guard epilogue emits no steps "
+                    f"({fresh['guard_steps']})")
+    if fresh["guard_launches"] <= 0:
+        _fail(msgs, f"{name}: guard reduction no longer a collective launch")
+
+
+def _check_plan_verify(msgs, base, fresh):
+    """Verifier telemetry: every bench lowering runs through the static plan
+    verifier (plans_verified > 0) and a committed record must be violation-
+    free (violations raise in strict mode, so > 0 here means someone ran
+    with strict=False and shipped a bad plan)."""
+    pv = fresh.get("plan_verify")
+    if pv is None:
+        if base.get("plan_verify") is not None:
+            _fail(msgs, "plan_verify: telemetry section missing from fresh run")
+        return
+    if pv.get("plans_verified", 0) <= 0:
+        _fail(msgs, "plan_verify: no plans were verified during the bench run")
+    if pv.get("violations", 0) > 0:
+        _fail(msgs, f"plan_verify: {pv['violations']} violation(s) in a "
+                    f"committed record (want 0)")
+
+
 def _check_lattice(msgs, base, fresh):
     b = base.get("lattice_telemetry")
     f = fresh.get("lattice_telemetry")
@@ -248,7 +290,8 @@ def compare(base: dict, fresh: dict):
                           ("inline_cells", _check_inline_cell),
                           ("autoshard_cells", _check_autoshard_cell),
                           ("pipeline_cells", _check_pipeline_cell),
-                          ("elastic_cells", _check_elastic_cell)):
+                          ("elastic_cells", _check_elastic_cell),
+                          ("guard_cells", _check_guard_cell)):
         base_cells = {c["name"]: c for c in base.get(kind, [])}
         fresh_cells = {c["name"]: c for c in fresh.get(kind, [])}
         for name, bc in base_cells.items():
@@ -263,6 +306,7 @@ def compare(base: dict, fresh: dict):
     _check_cache(msgs, "plan_cache", base, fresh)
     _check_cache(msgs, "process_plan_cache", base, fresh)
     _check_lattice(msgs, base, fresh)
+    _check_plan_verify(msgs, base, fresh)
     return msgs, info
 
 
@@ -288,7 +332,8 @@ def main() -> int:
               + len(base.get("inline_cells", []))
               + len(base.get("autoshard_cells", []))
               + len(base.get("pipeline_cells", []))
-              + len(base.get("elastic_cells", [])))
+              + len(base.get("elastic_cells", []))
+              + len(base.get("guard_cells", [])))
     path = plan_smoke.write_artifact(fresh)
     print(f"bench-guard: OK ({ncells} cells, no regressions vs committed baseline)")
     print(f"# artifact refreshed: {path}")

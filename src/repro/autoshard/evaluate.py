@@ -16,6 +16,13 @@ whose modeled per-device live-memory peak exceeds the budget, are
 
 Evaluations are memoized by assignment (the search revisits neighborhoods),
 and the evaluator counts lowerings for the benchmark cell.
+
+Cost-only lowerings are *verified* like executable ones: ``compile_plan``
+runs the static plan verifier (:mod:`repro.core.plan_verify`) on every
+candidate plan, so an optimizer-pass bug surfaces during the search instead
+of silently skewing scores.  A :class:`~repro.core.plan_verify.PlanVerifyError`
+is recorded as an infeasible candidate with a distinct ``verify:`` reason —
+visible in search telemetry rather than folded into ordinary plan failures.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ import numpy as np
 
 from repro.core.collective_planner import PlanError
 from repro.core.plan import PlanCost, lower_for_cost
+from repro.core.plan_verify import PlanVerifyError
 from repro.core.sharding import Mesh, Sharding
 
 from .space import MaybeSharding
@@ -83,6 +91,10 @@ class Evaluator:
             cost = lower_for_cost(
                 self.closed, list(assignment), self.mesh, optimize=self.optimize
             )
+        except PlanVerifyError as e:
+            # verifier hit on a candidate plan = optimizer-pass bug, not an
+            # inexpressible layout; keep the search alive but say which it was
+            ev = Evaluation(None, False, f"verify: {e}")
         except PlanError as e:
             ev = Evaluation(None, False, f"plan: {e}")
         else:

@@ -1,14 +1,74 @@
-"""Version bridges for the jax APIs the partitioner depends on.
+"""Version bridges for the jax APIs the partitioner depends on — and the
+repo-wide numeric tolerance policy.
 
 The partitioner executes local programs under ``shard_map``; the surface for
 that function has moved twice (``jax.experimental.shard_map.shard_map`` with
 ``check_rep`` -> ``jax.shard_map`` with ``check_vma``).  Everything in
 ``repro.core`` goes through this module so the rest of the code can assume one
 stable spelling.
+
+**Tolerance policy** (:data:`TOLERANCES`, :func:`assert_close`): partitioned
+programs are *mathematically* identical to their single-device references but
+not *bitwise* — sharded contractions commit to a different reduction order
+(psum over per-shard partials), so results drift by a few ULP per reduction
+depth.  Instead of each test hand-picking an rtol, tests name the comparison
+class:
+
+========== ============== =================================================
+kind        rtol / atol    when
+========== ============== =================================================
+exact       0 / 0          same reduction order — must be bit-identical
+                           (e.g. replaying the same plan, reshard restore)
+f32         1e-6 / 1e-6    elementwise or unsharded-contraction f32: no
+                           reduction reorder, only fusion differences
+f32_dot     1e-5 / 1e-5    one sharded contraction (matmul/einsum whose
+                           reduction dim is split: psum reorders the sum)
+ulp         2e-5 / 1e-8    gradients through sharded einsums — the known
+                           ULP-close backward-einsum gap (ROADMAP): reverse
+                           AD stacks a second reduction reorder on top
+f32_chain   1e-4 / 1e-5    multi-op chains (halo/conv pipelines, MLP
+                           towers): reorders compound per layer
+coarse      1e-3 / 1e-3    bf16-compute paths or deep mixed chains
+loss_curve  5e-2 / 0       training-loss trajectories across recoveries:
+                           optimizer noise amplifies per-step drift
+========== ============== =================================================
+
+Tightening a class is always safe; loosening one (or adding an ad-hoc rtol
+in a test) needs a comment explaining which new reduction reorder justifies
+it.
 """
 from __future__ import annotations
 
 import jax
+
+# kind -> (rtol, atol); see module docstring for the policy table
+TOLERANCES = {
+    "exact": (0.0, 0.0),
+    "f32": (1e-6, 1e-6),
+    "f32_dot": (1e-5, 1e-5),
+    "ulp": (2e-5, 1e-8),
+    "f32_chain": (1e-4, 1e-5),
+    "coarse": (1e-3, 1e-3),
+    "loss_curve": (5e-2, 0.0),
+}
+
+
+def assert_close(got, want, kind: str = "f32", **kwargs):
+    """``np.testing.assert_allclose`` under the named tolerance class.
+
+    Extra kwargs pass through (``err_msg``, ...); overriding ``rtol``/``atol``
+    directly is deliberately not supported — change the class or the policy.
+    """
+    import numpy as np
+
+    if kind not in TOLERANCES:
+        raise KeyError(
+            f"unknown tolerance class {kind!r}; one of {sorted(TOLERANCES)}")
+    if "rtol" in kwargs or "atol" in kwargs:
+        raise TypeError("assert_close takes a tolerance class, not rtol/atol")
+    rtol, atol = TOLERANCES[kind]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol, **kwargs)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):

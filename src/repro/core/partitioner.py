@@ -521,7 +521,7 @@ def clear_process_plan_cache() -> None:
 
 def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
                    optimize: bool = True, process_cache: bool = True,
-                   autoshard=None):
+                   autoshard=None, verify=None, guard=None):
     """Partition ``fn`` with the reference partitioner and return a callable that
     runs the SPMD program over ``jmesh`` via shard_map.
 
@@ -551,9 +551,21 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
     jaxpr digest + mesh + config, so repeat call sites pay for the search
     once.
 
+    ``verify`` controls the static plan verifier
+    (:func:`repro.core.plan_verify.verify_plan`) on compiled plans: ``None``
+    defers to the module default (on unless ``REPRO_PLAN_VERIFY=0``),
+    ``True``/``False`` force it.  ``guard`` (a
+    :class:`repro.core.plan.GuardConfig`) appends runtime numerics-sentinel
+    steps to the plan; the runner host-checks the sentinel vector after each
+    call and raises :class:`repro.core.plan.NumericsFault` with per-leaf
+    provenance when a guarded output is non-finite or exceeds
+    ``guard.max_abs``.  Guards require ``compile_plans=True``.
+
     The returned runner exposes ``runner.cache_stats`` (hits/misses) and
     ``runner.plans`` (cache-key → PartitionPlan) for tests and reporting.
     """
+    if guard is not None and not compile_plans:
+        raise ValueError("spmd_partition: guard= requires compile_plans=True")
     cache: Dict[tuple, _CacheEntry] = {}
     stats = PlanCacheStats()
 
@@ -565,6 +577,7 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
                 _jaxpr_digest(closed), mesh.structural_key(), _jmesh_key(jmesh),
                 tuple(_aval_key(a) for a in args), compile_plans, optimize,
                 autoshard.cache_key() if autoshard is not None else None,
+                verify, guard,
             )
             entry = _PROCESS_CACHE.get(pkey)
             if entry is not None:
@@ -599,7 +612,14 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
         if compile_plans:
             from .plan import compile_plan
 
-            plan = compile_plan(closed, prop.result(), mesh, optimize=optimize)
+            plan = compile_plan(closed, prop.result(), mesh,
+                                optimize=optimize, verify=verify, guard=guard)
+            if guard is not None:
+                # the guard epilogue appends a sentinel vector output — derive
+                # the shard_map out_specs from the plan, not the jaxpr outvars
+                out_specs = tuple(
+                    to_partition_spec(sh) for sh in plan.out_shardings
+                )
 
             def local_fn(*local_args):
                 outs = plan.execute(*local_args)
@@ -632,8 +652,22 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
             cache[key] = entry
         else:
             stats.record_hit()
-        return entry.call(*args)
+        outs = entry.call(*args)
+        if guard is not None and entry.plan is not None \
+                and entry.plan.guard is not None:
+            from .plan import NumericsFault, guard_faults
 
+            gi = entry.plan.guard
+            outs = list(outs)
+            gvec = outs.pop(gi.out_index)
+            faults = guard_faults(gi.config, jax.device_get(gvec), gi.leaves)
+            runner.calls += 1
+            if faults:
+                raise NumericsFault(runner.calls - 1, faults)
+            return tuple(outs) if len(outs) > 1 else outs[0]
+        return outs
+
+    runner.calls = 0
     runner.cache_stats = stats
     runner.plans = cache
     return runner

@@ -294,6 +294,7 @@ class PartitionPlan:
     stats: PlanStats
     opt_report: Optional[object] = None  # plan_opt.OptReport after optimization
     peak_bytes: float = 0.0  # modeled per-device live-memory peak (cost model)
+    guard: Optional["GuardInfo"] = None  # sentinel epilogue metadata
 
     def execute(self, *args):
         """Run the plan on local shards (inside a shard_map region)."""
@@ -310,6 +311,188 @@ class PartitionPlan:
         """Modeled per-device FLOPs of one plan execution (scan bodies are
         already multiplied by trip count at emit time)."""
         return sum(s.flops for s in self.steps)
+
+
+# ---------------------------------------------------------------------------------
+# runtime numerics sentinels: plan-lowered guard epilogue steps
+# ---------------------------------------------------------------------------------
+#
+# A guarded plan appends a fused non-finite / abs-max check over selected
+# outputs as *first-class steps*: one local stat step per guarded tensor, one
+# pack step, and one cross-device pmax collective — priced by the roofline and
+# visible to collective fusion and the overlap scheduler like any other
+# collective.  The guard vector becomes an extra plan output (replicated,
+# shape ``(2 * n_leaves,)``: per leaf ``[nonfinite_count, abs_max]``); the
+# host side turns a tripped guard into a typed :class:`NumericsFault` with
+# per-leaf provenance (``guard_faults``).  Under pmax the non-finite count
+# reduces to the max per-device count — still > 0 iff any shard anywhere held
+# a non-finite value — which lets one launch carry both stats.
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Selects the tensors the numerics sentinel watches and its thresholds.
+
+    Plan-level fields (``append_guard_steps`` / ``spmd_partition(guard=)``):
+    ``outputs`` picks plan output indices (``None`` = all), ``names`` labels
+    them for provenance.  Train-level fields (``make_train_step``): ``grads``
+    / ``loss`` / ``moments`` select state leaves; ``max_grad_norm`` bounds
+    the global gradient norm.  ``rewind_after`` is the skip/rewind policy
+    knob: K consecutive faulted steps escalate from batch-skip to
+    rewind-to-last-intact-checkpoint (``train/loop.py`` + ``launch/elastic``).
+    """
+
+    outputs: Optional[Tuple[int, ...]] = None
+    names: Optional[Tuple[str, ...]] = None
+    max_abs: float = float("inf")
+    grads: bool = True
+    loss: bool = True
+    moments: bool = False
+    max_grad_norm: float = float("inf")
+    rewind_after: int = 3
+
+
+@dataclasses.dataclass
+class GuardInfo:
+    """Provenance attached to a guarded plan: which leaves the guard vector's
+    rows describe, and where the vector lands in the plan outputs."""
+
+    leaves: Tuple[str, ...]
+    config: GuardConfig
+    out_index: int
+
+
+class NumericsFault(RuntimeError):
+    """A runtime numerics sentinel tripped.
+
+    ``faults`` carries per-leaf provenance: dicts with ``leaf`` (name),
+    ``kind`` (``nonfinite`` / ``absmax`` / ``grad_norm``), and ``value``.
+    ``consecutive`` counts back-to-back faulted steps (the skip/rewind
+    escalation counter).
+    """
+
+    def __init__(self, step: int, faults, consecutive: int = 1):
+        self.step = int(step)
+        self.faults = tuple(faults)
+        self.consecutive = int(consecutive)
+        leaves = ", ".join(
+            f"{f['leaf']}[{f['kind']}={f['value']:.3g}]" for f in self.faults
+        ) or "<none>"
+        super().__init__(
+            f"numerics fault at step {self.step} "
+            f"({self.consecutive} consecutive): {leaves}"
+        )
+
+
+def guard_faults(config: GuardConfig, stats, leaves) -> List[Dict]:
+    """Decode a guard vector into per-leaf fault records (empty = clean).
+
+    ``stats`` is the plan's guard output — ``(2k,)`` packed as
+    ``[nonfinite, absmax]`` per leaf — already reduced across devices.
+    """
+    a = np.asarray(stats, dtype=np.float64).reshape(len(leaves), 2)
+    faults: List[Dict] = []
+    for name, (nonfin, amax) in zip(leaves, a):
+        if nonfin > 0 or not np.isfinite(amax):
+            faults.append({"leaf": name, "kind": "nonfinite",
+                           "value": float(nonfin)})
+        elif amax > config.max_abs:
+            faults.append({"leaf": name, "kind": "absmax",
+                           "value": float(amax)})
+    return faults
+
+
+def _guard_stat_run(env, reads, writes):
+    from jax import numpy as jnp
+
+    x = jnp.asarray(_read(env, reads[0]))
+    nonfin = jnp.sum(~jnp.isfinite(x)).astype(jnp.float32)
+    amax = (jnp.max(jnp.abs(x.astype(jnp.float32)))
+            if x.size else jnp.float32(0.0))
+    _write(env, writes[0], jnp.stack([nonfin, amax]))
+
+
+def _guard_pack_run(env, reads, writes):
+    from jax import numpy as jnp
+
+    _write(env, writes[0], jnp.concatenate([_read(env, r) for r in reads]))
+
+
+def append_guard_steps(plan: PartitionPlan, guard: GuardConfig,
+                       cost_only: bool = False) -> PartitionPlan:
+    """Append the numerics-sentinel epilogue to ``plan`` (in place).
+
+    Runs *before* the optimizer pipeline so the guard's pmax is fused and
+    scheduled like any other collective.  Adds one plan output (the guard
+    vector) and records :class:`GuardInfo` on the plan; outputs selected by
+    ``guard.outputs`` (``None`` = all non-literal outputs).
+    """
+    from .reshard import shard_shape as _shard_shape
+
+    n_out = len(plan.out_keys)
+    sel = guard.outputs if guard.outputs is not None else tuple(range(n_out))
+    entries = []
+    for pos, i in enumerate(sel):
+        if not 0 <= i < n_out:
+            raise ValueError(f"guard output index {i} out of range 0..{n_out - 1}")
+        k = plan.out_keys[i]
+        if isinstance(k, excore.Literal):
+            continue
+        if i >= len(plan.jaxpr.outvars):
+            continue  # already-appended guard output (double guard)
+        v = plan.jaxpr.outvars[i]
+        name = (guard.names[pos]
+                if guard.names is not None and pos < len(guard.names)
+                else f"out[{i}]")
+        lshape = _shard_shape(tuple(v.aval.shape), plan.out_shardings[i])
+        db = int(np.dtype(v.aval.dtype).itemsize)
+        entries.append((name, k, lshape, db, str(np.dtype(v.aval.dtype))))
+    if not entries:
+        return plan
+    stat_keys = []
+    for name, k, lshape, db, dt in entries:
+        p = ProxyVar(f"guard:{name}")
+        step = PlanStep(
+            "compute", (k,), (p,), _guard_stat_run, op="guard-stat",
+            lshape=lshape, dbytes=db, dtype=dt,
+            # two reduction passes over the local shard (isfinite-count + absmax)
+            flops=2.0 * float(np.prod(lshape or (1,))),
+            wbytes=(8.0,),
+        )
+        if cost_only:
+            step.run = _cost_only_run
+        plan.steps.append(step)
+        stat_keys.append(p)
+    k2 = 2 * len(entries)
+    packed = ProxyVar("guard:pack")
+    pack = PlanStep(
+        "compute", tuple(stat_keys), (packed,), _guard_pack_run,
+        op="guard-pack", lshape=(k2,), dbytes=4, dtype="float32",
+        wbytes=(4.0 * k2,),
+    )
+    if cost_only:
+        pack.run = _cost_only_run
+    plan.steps.append(pack)
+    axes = tuple(plan.mesh.axis_names)
+    gout = ProxyVar("guard:out")
+    coll = PlanStep(
+        "collective", (packed,), (gout,), _collective_run(axes, "max"),
+        op="all-reduce", axes=axes, reduce_op="max",
+        lshape=(k2,), dbytes=4, dtype="float32",
+        wbytes=(4.0 * k2,),
+    )
+    if cost_only:
+        coll.run = _cost_only_run
+    plan.stats.count("all-reduce", len(axes))
+    plan.steps.append(coll)
+    plan.out_keys.append(gout)
+    plan.out_shardings.append(replicated(plan.mesh, 1))
+    plan.stats.steps = len(plan.steps)
+    plan.guard = GuardInfo(
+        leaves=tuple(e[0] for e in entries), config=guard,
+        out_index=len(plan.out_keys) - 1,
+    )
+    return plan
 
 
 # ---------------------------------------------------------------------------------
@@ -1341,6 +1524,8 @@ def compile_plan(
     mesh: Mesh,
     optimize: bool = True,
     cost_only: bool = False,
+    verify: Optional[bool] = None,
+    guard: Optional[GuardConfig] = None,
 ) -> PartitionPlan:
     """Lower a propagated (closed) jaxpr into an executable PartitionPlan.
 
@@ -1352,6 +1537,14 @@ def compile_plan(
     plan (used by benchmarks to measure what the pipeline saves).
     ``cost_only=True`` replaces every step's runner with a raising stub — the
     plan can be priced but never executed (autoshard candidate scoring).
+
+    ``guard`` appends the numerics-sentinel epilogue
+    (:func:`append_guard_steps`) *before* optimization, so the guard
+    collective is fused/scheduled like any other.  ``verify`` runs the static
+    plan verifier (``plan_verify.verify_plan``) on the finished plan;
+    ``None`` means the module default (on unless ``REPRO_PLAN_VERIFY=0``) —
+    cheap enough to leave on everywhere, including cost-only autoshard
+    lowerings.
     """
     from .collective_planner import thread_search_telemetry
 
@@ -1361,12 +1554,23 @@ def compile_plan(
         cost_only=cost_only,
     )
     plan = builder.build()
+    if guard is not None:
+        append_guard_steps(plan, guard, cost_only=cost_only)
     if optimize:
         from .plan_opt import optimize_plan
 
         plan = optimize_plan(plan)
+    elif guard is not None:
+        # build() priced the peak before the guard epilogue existed
+        plan.peak_bytes = plan_peak_bytes(plan)
     t1 = thread_search_telemetry()
     plan.stats.lattice = {k: t1[k] - t0[k] for k in t1}
+    from .plan_verify import verify_enabled
+
+    if verify_enabled(verify):
+        from .plan_verify import verify_plan
+
+        verify_plan(plan)
     return plan
 
 
@@ -1529,6 +1733,8 @@ def lower_for_cost(
     in_shardings,
     mesh: Mesh,
     optimize: bool = True,
+    verify: Optional[bool] = None,
+    guard: Optional[GuardConfig] = None,
 ) -> PlanCost:
     """Propagate ``in_shardings`` seeds and lower to a PlanCost — no jit, no
     execution, no runnables (every step runner is a raising stub).
@@ -1538,13 +1744,16 @@ def lower_for_cost(
     few tensors, the compiler completes the rest).  Raises
     :class:`~repro.core.collective_planner.PlanError` when the propagated
     program demands a reshard the planner cannot express (infeasible
-    candidate — autoshard treats it as infinite cost).
+    candidate — autoshard treats it as infinite cost).  Cost-only lowerings
+    are verified too (``verify=None`` = module default); ``guard`` prices the
+    numerics-sentinel epilogue into the returned cost (the guard-overhead
+    bench cell).
     """
     from .propagation import propagate
 
     prop = propagate(closed, mesh, in_shardings=list(in_shardings or []))
     plan = compile_plan(closed, prop.result(), mesh, optimize=optimize,
-                        cost_only=True)
+                        cost_only=True, verify=verify, guard=guard)
     return plan_cost(plan)
 
 
@@ -1668,7 +1877,8 @@ class StateReshardPlan:
         return jax.jit(f)(*arrays)
 
 
-def compile_state_reshard(items, mesh: Mesh) -> StateReshardPlan:
+def compile_state_reshard(items, mesh: Mesh,
+                          verify: Optional[bool] = None) -> StateReshardPlan:
     """Lower a cross-topology state restore into a :class:`StateReshardPlan`.
 
     ``items`` is an iterable of ``(key, src, dst, global_shape, dtype)`` with
@@ -1678,7 +1888,8 @@ def compile_state_reshard(items, mesh: Mesh) -> StateReshardPlan:
     replicate-then-slice expression of the same restore is priced as the
     ``gather_all_bytes`` reference.  Raises
     :class:`~repro.core.collective_planner.PlanError` when some leaf layout
-    change is inexpressible.
+    change is inexpressible.  The finished plan is statically verified
+    (``plan_verify.verify_state_reshard``) unless ``verify`` disables it.
     """
     from .collective_planner import _candidate_gather_all, simulate
 
@@ -1699,4 +1910,11 @@ def compile_state_reshard(items, mesh: Mesh) -> StateReshardPlan:
             except PlanError:  # pragma: no cover - gather-all always simulates
                 pass
         leaves.append(LeafReshard(key, src, dst, shape, str(dtype), prog))
-    return StateReshardPlan(mesh, leaves, stats, gather_bytes)
+    plan = StateReshardPlan(mesh, leaves, stats, gather_bytes)
+    from .plan_verify import verify_enabled
+
+    if verify_enabled(verify):
+        from .plan_verify import verify_state_reshard
+
+        verify_state_reshard(plan)
+    return plan

@@ -83,6 +83,32 @@ Pass-ordering invariants
   relies on the same aliasing in the other direction when it edits a scan
   body's ``inner.steps``.
 
+Verifier contract (``core/plan_verify.py``)
+-------------------------------------------
+Every plan leaving ``compile_plan`` is re-checked by the static plan
+verifier (on by default; ``REPRO_PLAN_VERIFY=0`` or ``verify=False``
+disables).  A new pass therefore does not get to *assume* it preserved the
+invariants above — the verifier re-derives them from the final step list and
+raises :class:`~repro.core.plan_verify.PlanVerifyError` on the first plan
+that breaks one:
+
+* **dataflow**: every read was written earlier (or is a plan input/const),
+  each key written exactly once (SSA), every ``out_key`` produced;
+* **specs**: reshard programs re-simulated src→dst with matching cost,
+  collective axes exist in the mesh, ppermute perms are permutations,
+  layout chains land on the recorded ``out_shardings``;
+* **accounting**: non-negative flops/wbytes/transient_bytes, ``plan.stats``
+  counters matching the step list, ``opt_report.wire_bytes_after`` and
+  ``plan.peak_bytes`` matching an independent recomputation.
+
+So a pass that deletes a reshard must call ``PlanStats.remove_program``, a
+pass that adds/fuses collectives must keep ``plan.stats`` and the
+whole-program byte totals consistent, and a pass that reorders steps must
+preserve write-before-read — or ``compile_plan`` will refuse the plan.
+Mutation coverage for the verifier itself lives in
+``tests/test_plan_verify.py``; when writing a new pass, run those tests
+plus the plan/optimizer suites before trusting a green bench run.
+
 Every pass reports its savings; :func:`optimize_plan` attaches an
 :class:`OptReport` (whole-program bytes and collective-launch counts
 before/after — inner pjit/scan plans priced at trip count via

@@ -49,8 +49,23 @@ stage_shift_p.def_impl(_impl)
 
 
 def _abstract(state, x, *, reverse):
-    assert tuple(x.shape) == tuple(state.shape[1:]), (state.shape, x.shape)
-    assert x.dtype == state.dtype, (state.dtype, x.dtype)
+    # validate eagerly with real errors (not bare asserts): stage_shift is a
+    # public primitive and a malformed bind would otherwise surface as an
+    # opaque lowering failure deep inside the plan compiler
+    if state.ndim < 1:
+        raise ValueError(
+            f"stage_shift: state needs a leading stage dim, got rank-0 "
+            f"{state.shape}")
+    if state.shape[0] < 1:
+        raise ValueError(
+            f"stage_shift: empty stage dim in state shape {state.shape}")
+    if tuple(x.shape) != tuple(state.shape[1:]):
+        raise ValueError(
+            f"stage_shift: x shape {tuple(x.shape)} != one stage row "
+            f"{tuple(state.shape[1:])} of state {tuple(state.shape)}")
+    if x.dtype != state.dtype:
+        raise ValueError(
+            f"stage_shift: dtype mismatch (state {state.dtype}, x {x.dtype})")
     return state
 
 

@@ -8,8 +8,11 @@ module is that recovery loop:
 * :class:`FaultInjector` — deterministic fault hooks for tests and drills:
   device loss at a step (raises :class:`DeviceLossError` from inside
   ``TrainLoop.run``), a crash mid-save (arms ``checkpoint.set_save_fault`` so
-  the atomic tmp-rename never commits), and a straggler stall (sleeps inside
-  the measured step so the loop's watchdog trips).
+  the atomic tmp-rename never commits), a straggler stall (sleeps inside
+  the measured step so the loop's watchdog trips), and *numeric* faults
+  (``nan_at_step`` / ``grad_spike_at_step`` — baked into the jitted step via
+  ``TrainConfig.numeric_fault`` so the guard sentinels, not the host, catch
+  them).
 * :func:`derive_mesh` — rebuild a ``(data, model)`` mesh over the surviving
   device subset; returns both the planner mesh (``repro.core.Mesh``) and the
   runtime ``jax.sharding.Mesh``.
@@ -41,6 +44,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core.plan import NumericsFault
 from repro.core.sharding import Mesh
 
 from ..train import checkpoint as ckpt_lib
@@ -69,6 +73,10 @@ class FaultInjector:
     straggler_at: int = -1     # step to stall
     stall_s: float = 0.0       # injected stall duration
     crash_save_at_leaf: int = -1  # raise mid-save after writing k leaves
+    nan_at_step: int = -1        # numeric: NaN-poison grads+loss at this step
+    grad_spike_at_step: int = -1  # numeric: spike grads at this step
+    spike_factor: float = 1e12
+    numeric_steps: int = 1       # numeric fault window (consecutive steps)
     fired: set = dataclasses.field(default_factory=set)
 
     def hook(self, step: int) -> None:
@@ -93,6 +101,23 @@ class FaultInjector:
 
     def disarm(self) -> None:
         ckpt_lib.set_save_fault(None)
+
+    def numeric_spec(self):
+        """The :class:`repro.train.loop.NumericFaultSpec` for the armed
+        numeric modes, or None when no numeric fault is configured.  Numeric
+        faults are baked into the jitted step (static step window), not fired
+        from the host hook — they must poison tensors *inside* the program
+        where the guard sentinels watch."""
+        if self.nan_at_step < 0 and self.grad_spike_at_step < 0:
+            return None
+        from ..train.loop import NumericFaultSpec
+
+        return NumericFaultSpec(
+            nan_at_step=self.nan_at_step,
+            grad_spike_at_step=self.grad_spike_at_step,
+            spike_factor=self.spike_factor,
+            steps=self.numeric_steps,
+        )
 
 
 def derive_mesh(n_devices: Optional[int] = None,
@@ -226,6 +251,11 @@ class ElasticCoordinator:
         if injector is not None:
             loop_hooks["fault"] = injector.hook
             injector.arm_save_fault()
+            spec = injector.numeric_spec()
+            if spec is not None:
+                # numeric faults live inside the jitted step; arm before the
+                # TrainLoop builds/jits its step function
+                tc.numeric_fault = spec
         loop_hooks["metrics"] = lambda step, loss: self.losses.__setitem__(
             step, loss)
         if self.dump_path:
@@ -318,6 +348,44 @@ class ElasticCoordinator:
         self.recoveries.append(event)
         return state, start
 
+    def _rewind(self, err) -> Tuple[Any, Optional[int]]:
+        """Numerics escalation: K consecutive faulted batches exhausted the
+        skip policy (``core.plan.NumericsFault``).  Rewind to the last intact
+        checkpoint via the plan-lowered reshard restore (same mesh), disarm
+        the deterministic numeric injection (replaying the same step window
+        would re-fault forever), and rebuild the jitted step without it."""
+        from ..train.loop import init_state, make_train_step
+
+        event = {
+            "numerics": True, "step": err.step,
+            "consecutive": err.consecutive,
+            "faults": [dict(f) for f in err.faults[:8]],
+        }
+        state, start = None, None
+        if self.tc.ckpt_dir and ckpt_lib.latest_step(self.tc.ckpt_dir) is not None:
+            target = init_state(self.cfg, self.st, self.opt, self.tc,
+                                self.loop.rng)
+            specs = specs_by_key(
+                state_partition_specs(self.cfg, self.st, self.opt, self.tc))
+            state, manifest, report = ckpt_lib.restore_resharded(
+                self.tc.ckpt_dir, target, self.mesh, self.jmesh,
+                target_specs=specs)
+            start = int(manifest.get("extra", {}).get(
+                "data_cursor", manifest["step"]))
+            event["rewound_to"] = int(manifest["step"])
+            event["reshard"] = {"leaves": report["leaves"],
+                                "resharded_leaves": report["resharded_leaves"]}
+        if self.injector is not None:
+            self.injector.nan_at_step = -1
+            self.injector.grad_spike_at_step = -1
+        self.tc.numeric_fault = None
+        self.loop.swap_plan(
+            make_train_step(self.cfg, self.st, self.opt, self.tc))
+        self.loop.guard_counters["rewinds"] += 1
+        self.loop._consecutive_faults = 0
+        self.recoveries.append(event)
+        return state, start
+
     def run(self):
         """Train to completion, recovering in-process from injected faults."""
         from repro.core.compat import set_mesh
@@ -337,6 +405,13 @@ class ElasticCoordinator:
                 if attempts > self.max_recoveries:
                     raise
                 state, start = self._recover(e)
+            except NumericsFault as e:
+                # K consecutive numeric faults: skip policy gave up — rewind
+                # to the last intact checkpoint without a process restart
+                attempts += 1
+                if attempts > self.max_recoveries:
+                    raise
+                state, start = self._rewind(e)
             except OSError:
                 # crash mid-save: the atomic tmp-rename never committed, so
                 # the last intact step is still the restore point; disarm the

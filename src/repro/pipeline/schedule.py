@@ -143,12 +143,16 @@ class ScheduleCost:
 
 
 def schedule_cost(closed, assignment, mesh, decision: PipelineDecision,
-                  state_shape=None, dtype_bytes: int = 4) -> ScheduleCost:
+                  state_shape=None, dtype_bytes: int = 4,
+                  verify=None) -> ScheduleCost:
     """Price one pipelined (jaxpr, assignment) pair: cost-only lower it and
     read the ppermute traffic off the plan, plus the analytic terms.
 
     ``state_shape`` (global shifting-buffer shape, leading stage dim) sizes
     the per-device microbatch activation; when omitted it is inferred as 0.
+    The cost-only lowering runs the static plan verifier (``verify=None`` =
+    module default) — pipelined plans get the same well-formedness guarantees
+    as executable ones.
     """
     from repro.core.plan import compile_plan, plan_cost
     from repro.core.propagation import propagate
@@ -156,7 +160,8 @@ def schedule_cost(closed, assignment, mesh, decision: PipelineDecision,
     from repro.core.sharding import Sharding
 
     prop = propagate(closed, mesh, in_shardings=list(assignment or []))
-    plan = compile_plan(closed, prop.result(), mesh, cost_only=True)
+    plan = compile_plan(closed, prop.result(), mesh, cost_only=True,
+                        verify=verify)
     pbytes, plaunches = plan_ppermute_bytes(plan)
     act = 0.0
     if state_shape is not None:

@@ -1,5 +1,5 @@
 """Fault-tolerant training loop: step builder, grad accumulation, gradient
-compression, checkpoint/restart, straggler watchdog.
+compression, checkpoint/restart, straggler watchdog, numerics guards.
 
 ``make_train_step`` builds the jittable step:
   loss (bf16 compute) -> grad -> [bf16 reduce + fp32 error-feedback] ->
@@ -9,6 +9,25 @@ the model config's.  ``TrainLoop.run`` checkpoints every N steps, auto-restores 
 restart (deterministic data cursor), records per-step wall times and flags
 straggler steps (> k × median) through a hook — on a real fleet the hook reports
 to the coordinator; here it feeds the test harness and logs.
+
+**Numerics guards** (``TrainConfig.guard``, a
+:class:`repro.core.plan.GuardConfig`): the step computes a fused
+non-finite/abs-max sentinel over the guarded tensors (loss, grads, optionally
+optimizer moments) *inside* the jitted step, plus a scalar fault flag.  On a
+fault the update is **skipped in-jit** — a ``where``-select keeps the old
+params/opt-state/error-feedback while the step counter still advances, so the
+data cursor moves past the poisoned batch and the optimizer never sees the
+bad update.  The host side of the loop decodes per-leaf provenance
+(:func:`repro.core.plan.guard_faults`), counts consecutive faults, and raises
+:class:`repro.core.plan.NumericsFault` once ``guard.rewind_after`` is reached
+— the signal for a coordinator to rewind to the last intact checkpoint.
+Fault/skip/rewind counters ride in the checkpoint manifest ``extra`` so
+recovery history survives restarts.
+
+``TrainConfig.numeric_fault`` (a :class:`NumericFaultSpec`) injects numeric
+faults *inside* the jitted step (NaN-poisoned or spiked gradients over a
+static step window) — the guard-drill counterpart of
+``launch.elastic.FaultInjector``'s mechanical faults.
 """
 from __future__ import annotations
 
@@ -29,6 +48,22 @@ from . import checkpoint as ckpt_lib
 from .optimizer import Optimizer, opt_state_specs
 
 
+@dataclasses.dataclass(frozen=True)
+class NumericFaultSpec:
+    """Deterministic numeric-fault injection, baked into the jitted step.
+
+    The window is a *traced* comparison on the state's step counter (static
+    constants, so the jitted program is reusable): for ``steps`` consecutive
+    steps starting at the armed step, gradients (and the loss, for the NaN
+    mode) are poisoned after differentiation and before the guard sentinel —
+    exactly where a real numerics blowup would surface."""
+
+    nan_at_step: int = -1         # poison grads+loss with NaN at this step
+    grad_spike_at_step: int = -1  # multiply grads by spike_factor at this step
+    spike_factor: float = 1e12
+    steps: int = 1                # window length (consecutive faulted steps)
+
+
 @dataclasses.dataclass
 class TrainConfig:
     steps: int = 100
@@ -40,6 +75,8 @@ class TrainConfig:
     log_every: int = 10
     straggler_factor: float = 3.0
     fail_at_step: int = -1  # fault-injection for tests
+    guard: Optional[Any] = None  # core.plan.GuardConfig: numerics sentinels
+    numeric_fault: Optional[NumericFaultSpec] = None  # guard-drill injection
 
 
 def make_train_step(cfg: ModelConfig, st: Strategy, opt: Optimizer, tc: TrainConfig):
@@ -74,9 +111,23 @@ def make_train_step(cfg: ModelConfig, st: Strategy, opt: Optimizer, tc: TrainCon
         inv = 1.0 / tc.grad_accum
         return loss * inv, jax.tree_util.tree_map(lambda g: g * inv, grads)
 
+    def _fault_window(step, at, width):
+        return (step >= at) & (step < at + width)
+
     def step_fn(state, batch):
         params, opt_state, step = state["params"], state["opt"], state["step"]
         loss, grads = grads_of(params, batch)
+        nf = tc.numeric_fault
+        if nf is not None and nf.nan_at_step >= 0:
+            poison = jnp.where(_fault_window(step, nf.nan_at_step, nf.steps),
+                               jnp.nan, 1.0).astype(jnp.float32)
+            loss = loss * poison
+            grads = jax.tree_util.tree_map(lambda g: g * poison, grads)
+        if nf is not None and nf.grad_spike_at_step >= 0:
+            spike = jnp.where(
+                _fault_window(step, nf.grad_spike_at_step, nf.steps),
+                jnp.float32(nf.spike_factor), 1.0)
+            grads = jax.tree_util.tree_map(lambda g: g * spike, grads)
         if tc.compress_grads:
             # half-precision gradient exchange with error feedback: quantize to
             # bf16 (halves ReduceScatter bytes), remember the residual in fp32.
@@ -94,9 +145,72 @@ def make_train_step(cfg: ModelConfig, st: Strategy, opt: Optimizer, tc: TrainCon
         new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
         if tc.compress_grads:
             new_state["ef"] = new_ef
-        return new_state, {"loss": loss, "grad_norm": gnorm}
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        gc = tc.guard
+        if gc is not None:
+            stats = [_guard_stat(x) for _, x in
+                     _guard_tensors(gc, loss, grads, new_opt)]
+            gvec = jnp.stack(stats)  # (k, 2): [nonfinite_count, absmax]
+            fault = jnp.any(gvec[:, 0] > 0) | jnp.any(~jnp.isfinite(gvec[:, 1]))
+            if np.isfinite(gc.max_abs):
+                fault = fault | jnp.any(gvec[:, 1] > gc.max_abs)
+            if np.isfinite(gc.max_grad_norm):
+                fault = fault | ~jnp.isfinite(gnorm) | (gnorm > gc.max_grad_norm)
+            # skip-in-jit: keep old params/opt/ef on fault so the poisoned
+            # update never lands; the step counter still advances (the data
+            # cursor moves past the bad batch)
+            keep = lambda old, new: jnp.where(fault, old, new)
+            new_state["params"] = jax.tree_util.tree_map(
+                keep, params, new_state["params"])
+            new_state["opt"] = jax.tree_util.tree_map(
+                keep, opt_state, new_state["opt"])
+            if tc.compress_grads:
+                new_state["ef"] = jax.tree_util.tree_map(
+                    keep, state["ef"], new_state["ef"])
+            metrics["guard"] = gvec.reshape(-1)
+            metrics["fault"] = fault
+        return new_state, metrics
 
     return step_fn
+
+
+def _guard_stat(x):
+    """Fused sentinel for one tensor: ``[non-finite count, abs-max]`` fp32."""
+    x = x.astype(jnp.float32)
+    nonfin = jnp.sum(~jnp.isfinite(x)).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x)) if x.size else jnp.float32(0.0)
+    return jnp.stack([nonfin, amax])
+
+
+def _guard_tensors(gc, loss, grads, opt_state):
+    """``(name, tensor)`` selection for a GuardConfig — one fixed order shared
+    by the traced step and the host-side decoder (`guard_leaf_names`)."""
+    out = []
+    if gc.loss:
+        out.append(("loss", loss))
+    if gc.grads:
+        out.extend(("grads/" + k, g)
+                   for k, g in ckpt_lib._flatten_with_paths(grads)[0])
+    if gc.moments:
+        out.extend(("opt/" + k, m)
+                   for k, m in ckpt_lib._flatten_with_paths(opt_state)[0])
+    return out
+
+
+def guard_leaf_names(gc, state) -> tuple:
+    """Leaf provenance for the step's guard vector, decodable on the host
+    with :func:`repro.core.plan.guard_faults` — same order as the traced
+    selection in ``make_train_step``."""
+    names = []
+    if gc.loss:
+        names.append("loss")
+    if gc.grads:
+        names.extend("grads/" + k
+                     for k, _ in ckpt_lib._flatten_with_paths(state["params"])[0])
+    if gc.moments:
+        names.extend("opt/" + k
+                     for k, _ in ckpt_lib._flatten_with_paths(state["opt"])[0])
+    return tuple(names)
 
 
 def init_state(cfg: ModelConfig, st: Strategy, opt: Optimizer, tc: TrainConfig, rng):
@@ -132,6 +246,12 @@ class TrainLoop:
                                donate_argnums=(0,))
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.step_times = []
+        # numerics-guard bookkeeping (populated when tc.guard is set);
+        # counters ride in the manifest extra and survive restarts
+        self.guard_counters = {"faults": 0, "skips": 0, "rewinds": 0}
+        self.skipped_steps: list = []
+        self.guard_leaves: Optional[tuple] = None
+        self._consecutive_faults = 0
 
     def swap_plan(self, step_fn) -> None:
         """Replace the jitted step without restarting the process — the
@@ -146,6 +266,8 @@ class TrainLoop:
         nothing.  A ``ckpt_extra`` hook merges coordinator state (e.g. the
         autoshard assignment dump) into the same manifest."""
         extra = {"data_cursor": step + 1}
+        if self.tc.guard is not None:
+            extra["guard"] = dict(self.guard_counters)
         if "ckpt_extra" in self.hooks:
             extra.update(self.hooks["ckpt_extra"]() or {})
         return extra
@@ -173,6 +295,10 @@ class TrainLoop:
                     self.tc.ckpt_dir, state, last, sharding_for=sharding_for)
                 start = int(manifest.get("extra", {}).get(
                     "data_cursor", manifest["step"]))
+                saved = manifest.get("extra", {}).get("guard")
+                if saved:
+                    self.guard_counters.update(
+                        {k: int(v) for k, v in saved.items()})
                 if "log" in self.hooks:
                     self.hooks["log"](
                         f"restored checkpoint step={last} cursor={start}")
@@ -206,6 +332,44 @@ class TrainLoop:
             state, metrics = self.step_fn(state, batch)
             loss = float(jax.device_get(metrics["loss"]))
             dt = time.perf_counter() - t0
+            gc = self.tc.guard
+            if gc is not None and bool(jax.device_get(metrics["fault"])):
+                # the jitted step already skipped the update in-device; the
+                # host side decodes provenance, records the skip, and
+                # escalates to a rewind after K consecutive faults
+                from ..core.plan import NumericsFault, guard_faults
+
+                if self.guard_leaves is None:
+                    self.guard_leaves = guard_leaf_names(gc, state)
+                faults = guard_faults(
+                    gc, np.asarray(jax.device_get(metrics["guard"])),
+                    self.guard_leaves)
+                if not faults:  # norm-only trip (gnorm > max_grad_norm)
+                    faults = ({"leaf": "grad_norm", "kind": "norm",
+                               "value": float(jax.device_get(
+                                   metrics["grad_norm"]))},)
+                self.guard_counters["faults"] += 1
+                self._consecutive_faults += 1
+                if "numerics_fault" in self.hooks:
+                    self.hooks["numerics_fault"](
+                        step, faults, self._consecutive_faults)
+                if self._consecutive_faults >= gc.rewind_after:
+                    raise NumericsFault(step, faults,
+                                        self._consecutive_faults)
+                self.guard_counters["skips"] += 1
+                self.skipped_steps.append(step)
+                if "log" in self.hooks:
+                    self.hooks["log"](
+                        f"step {step} numerics fault -> skipped "
+                        f"({self._consecutive_faults} consecutive): "
+                        + ", ".join(f"{f['leaf']}[{f['kind']}]"
+                                    for f in faults[:4]))
+                if self.tc.ckpt_dir and (step + 1) % self.tc.ckpt_every == 0:
+                    ckpt_lib.save(self.tc.ckpt_dir, step + 1, state,
+                                  extra=self._ckpt_extra(step))
+                    ckpt_lib.cleanup(self.tc.ckpt_dir, self.tc.keep_ckpts)
+                continue
+            self._consecutive_faults = 0
             self.step_times.append(dt)
             losses.append(loss)
             if "metrics" in self.hooks:

@@ -14,7 +14,7 @@ except ImportError:  # container lacks hypothesis; deterministic fallback
     from _hypo_stub import given, settings, strategies as hs
 from jax.sharding import PartitionSpec as P
 
-from repro.core.compat import make_jax_mesh, shard_map
+from repro.core.compat import assert_close, make_jax_mesh, shard_map
 from repro.core.halo import _halo_bounds, sharded_conv_nd
 
 jmesh = make_jax_mesh((2, 4), ("x", "y"))
@@ -48,8 +48,7 @@ def test_halo_conv_matches_global(kernel, stride, pad_lo, pad_hi):
         local, mesh=jmesh, in_specs=(P(None, None, "y"), P(None, None, None)),
         out_specs=P(None, None, "y"),
     )(x, w)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=1e-4, atol=1e-5)
+    assert_close(got, ref, "f32_chain")
 
 
 @given(

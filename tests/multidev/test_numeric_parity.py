@@ -4,7 +4,7 @@ import os
 
 import jax
 
-from repro.core.compat import make_jax_mesh, set_mesh
+from repro.core.compat import assert_close, make_jax_mesh, set_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -107,4 +107,4 @@ def test_manual_mode_subgroups():
     got = np.asarray(f(x))
     # model axis = 4 shards of size 2 along dim 1; psum sums the shards
     ref = x.reshape(4, 4, 2).sum(axis=1)
-    np.testing.assert_allclose(got, ref, rtol=1e-5)
+    assert_close(got, ref, "f32_dot")

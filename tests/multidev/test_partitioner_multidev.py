@@ -19,7 +19,7 @@ except ImportError:  # container lacks hypothesis; deterministic fallback
 from jax.sharding import PartitionSpec as P
 
 from repro.core import Mesh, annotate, mesh_split
-from repro.core.compat import make_jax_mesh, shard_map
+from repro.core.compat import assert_close, make_jax_mesh, shard_map
 from repro.core.halo import sharded_conv_nd
 from repro.core.partitioner import spmd_partition
 from repro.core.einsum_rules import plan_einsum
@@ -41,7 +41,7 @@ def test_dp_mp_matmul():
 
     a = rng.standard_normal((8, 16)).astype(np.float32)
     b = rng.standard_normal((16, 32)).astype(np.float32)
-    np.testing.assert_allclose(run(f, a, b), np.maximum(a @ b, 0), rtol=1e-5, atol=1e-5)
+    assert_close(run(f, a, b), np.maximum(a @ b, 0), "f32_dot")
 
 
 def test_contracting_allreduce():
@@ -52,7 +52,7 @@ def test_contracting_allreduce():
 
     x = rng.standard_normal((4, 8)).astype(np.float32)
     w = rng.standard_normal((8, 6)).astype(np.float32)
-    np.testing.assert_allclose(run(f, x, w), x @ w, rtol=1e-4)
+    assert_close(run(f, x, w), x @ w, "f32_chain")
 
 
 def test_recursive_grouping_expert_dim():
@@ -65,9 +65,7 @@ def test_recursive_grouping_expert_dim():
 
     e1 = rng.standard_normal((2, 4, 8)).astype(np.float32)
     e2 = rng.standard_normal((2, 8, 16)).astype(np.float32)
-    np.testing.assert_allclose(
-        run(f, e1, e2), np.einsum("ebm,emh->ebh", e1, e2), rtol=1e-4
-    )
+    assert_close(run(f, e1, e2), np.einsum("ebm,emh->ebh", e1, e2), "f32_chain")
 
 
 def test_mlp_forward_and_reduction():
@@ -82,7 +80,7 @@ def test_mlp_forward_and_reduction():
     w1 = rng.standard_normal((8, 16)).astype(np.float32)
     w2 = rng.standard_normal((16, 8)).astype(np.float32)
     ref = np.sum((np.tanh(x @ w1) @ w2) ** 2)
-    np.testing.assert_allclose(run(f, x, w1, w2), ref, rtol=1e-4)
+    assert_close(run(f, x, w1, w2), ref, "f32_chain")
 
 
 @pytest.mark.parametrize("stride,pads", [(1, (2, 2)), (2, (1, 2)), (3, (0, 2))])
@@ -103,8 +101,7 @@ def test_halo_conv(stride, pads):
         in_specs=(P(None, None, "y"), P(None, None, None)),
         out_specs=P(None, None, "y"),
     )(xg, wk)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=1e-4, atol=1e-5)
+    assert_close(got, ref, "f32_chain")
 
 
 def test_halo_conv_2d_spatial():
@@ -124,8 +121,7 @@ def test_halo_conv_2d_spatial():
         in_specs=(P(None, None, "x", "y"), P(None, None, None, None)),
         out_specs=P(None, None, "x", "y"),
     )(xg, wk)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=1e-4, atol=1e-5)
+    assert_close(got, ref, "f32_chain")
 
 
 # property: partitioned einsum == oracle over random shardings
@@ -165,5 +161,4 @@ def test_einsum_partition_property(spec, axes):
 
     x = rng.standard_normal([DIMS[c] for c in lhs]).astype(np.float32)
     y = rng.standard_normal([DIMS[c] for c in rhs]).astype(np.float32)
-    np.testing.assert_allclose(run(f, x, y), jnp.einsum(spec, x, y),
-                               rtol=1e-3, atol=1e-3)
+    assert_close(run(f, x, y), jnp.einsum(spec, x, y), "coarse")

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Mesh, annotate, mesh_split
-from repro.core.compat import make_jax_mesh
+from repro.core.compat import assert_close, make_jax_mesh
 from repro.core.partitioner import spmd_partition
 from repro.pipeline import pipelined_apply, pipeline_ticks, stage_stack_params
 
@@ -69,7 +69,7 @@ def test_pipelined_loss_and_grads_match_unpipelined_reference():
     np.testing.assert_array_equal(go, gr)
     # ...and the partitioned backward agrees to float32 ULPs (batch-1 local
     # einsum accumulation order; see module docstring)
-    np.testing.assert_allclose(gp, gr, rtol=2e-5, atol=1e-8)
+    assert_close(gp, gr, "ulp")
 
 
 def test_pipelined_plan_issues_one_ppermute_per_tick():
@@ -102,5 +102,4 @@ def test_mixed_pipeline_plus_tensor_parallelism_matches():
     wstk = np.asarray(stage_stack_params(jnp.asarray(WS), 4))
     got = spmd_partition(mixed_loss, jmesh, mesh)(wstk, XS)
     want = ref_loss(jnp.asarray(WS), jnp.asarray(XS))
-    np.testing.assert_allclose(
-        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    assert_close(got, want, "f32_dot")

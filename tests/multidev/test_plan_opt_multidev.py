@@ -13,7 +13,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import Mesh, annotate, mesh_split
-from repro.core.compat import make_jax_mesh
+from repro.core.compat import assert_close, make_jax_mesh
 from repro.core.partitioner import spmd_partition
 
 jmesh = make_jax_mesh((2, 2), ("x", "y"))
@@ -50,7 +50,7 @@ def test_cse_shared_operand_reshards_once_and_matches():
     w2 = rng.standard_normal((8, 8)).astype(np.float32)
     r = _runner(f, True)
     got = np.asarray(r(x, w1, w2))
-    np.testing.assert_allclose(got, (x @ w1) + (x @ w2), rtol=1e-5, atol=1e-5)
+    assert_close(got, (x @ w1) + (x @ w2), "f32_dot")
     plan = _the_plan(r)
     assert sum(1 for s in plan.steps if s.kind == "reshard") == 1
     assert _pass(plan, "reshard-cse").removed_steps == 1
@@ -64,9 +64,7 @@ def test_dead_reshard_eliminated_and_matches():
 
     x = rng.standard_normal((8, 8)).astype(np.float32)
     r = _runner(f, True)
-    np.testing.assert_allclose(
-        np.asarray(r(x)), np.tanh(x), rtol=1e-6, atol=1e-6
-    )
+    assert_close(r(x), np.tanh(x), "f32")
     plan = _the_plan(r)
     # only the (first-class) output-epilogue reshard survives; the dead
     # [x,-1] -> [-1,y] body reshard is eliminated
@@ -104,7 +102,7 @@ def test_fused_allreduce_bit_identical_to_unfused():
     # and both match the oracle
     a = args[0]
     for o, w in zip(got_opt, args[1:]):
-        np.testing.assert_allclose(np.asarray(o), a @ w, rtol=1e-5, atol=1e-5)
+        assert_close(o, a @ w, "f32_dot")
 
 
 def test_fused_allgather_matches_oracle():
@@ -120,9 +118,7 @@ def test_fused_allgather_matches_oracle():
     plan = _the_plan(r)
     fused = [s for s in plan.steps if s.kind == "fused"]
     assert len(fused) == 1 and fused[0].op == "fused-all-gather"
-    np.testing.assert_allclose(
-        got, x[::-1] + y[::-1], rtol=1e-6, atol=1e-6
-    )
+    assert_close(got, x[::-1] + y[::-1], "f32")
 
 
 def _scan_bodies(closed):
@@ -179,7 +175,7 @@ def test_pjit_inline_fused_psums_bit_identical():
         assert o.tobytes() == u.tobytes(), "inlined+fused psum must be bit-identical"
     x = args[0]
     for o, w in zip(got_opt, args[1:]):
-        np.testing.assert_allclose(np.asarray(o), x @ w, rtol=1e-5, atol=1e-5)
+        assert_close(o, x @ w, "f32_dot")
 
 
 def test_scan_hoisted_gather_executes_once():
@@ -212,7 +208,7 @@ def test_scan_hoisted_gather_executes_once():
     c = c0
     for i in range(4):
         c = np.tanh(c + xs[i] @ w)
-    np.testing.assert_allclose(got_opt, c, rtol=1e-5, atol=1e-5)
+    assert_close(got_opt, c, "f32_dot")
     # plan structure: the gather moved out of the body
     plan = _the_plan(r_opt)
     (scan_step,) = [s for s in plan.steps if s.op == "scan"]
