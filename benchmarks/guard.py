@@ -237,6 +237,70 @@ def _check_guard_cell(msgs, name, base, fresh):
         _fail(msgs, f"{name}: guard reduction no longer a collective launch")
 
 
+def _check_obs_cell(msgs, name, base, fresh):
+    """Observability cells: trace exports must stay schema-valid, the
+    modeled timeline must replay to exactly the overlap schedule's makespan,
+    tracing overhead (off-path cache identity on the exec cell, plan-cost
+    identity on the qwen cell) must stay under its hard cap, and the
+    calibration table must keep a ratio for every priced step class.
+    Timing fields (export_ms/exec_ms) and calibration ratios are
+    informational — never compared."""
+    if not fresh.get("schema_ok"):
+        _fail(msgs, f"{name}: exported trace fails schema validation "
+                    f"({fresh.get('schema_problems', '?')} problem(s))")
+    cap = fresh.get("overhead_cap")
+    if cap is not None and fresh["overhead_ratio"] > cap + _EPS:
+        _fail(msgs, f"{name}: tracing overhead "
+                    f"{fresh['overhead_ratio']*100:.3f}% over the "
+                    f"{cap*100:.0f}% cap")
+    if "makespan_matches_schedule" in fresh:
+        if not fresh["makespan_matches_schedule"]:
+            _fail(msgs, f"{name}: modeled timeline makespan "
+                        f"{fresh['modeled_makespan_s']:.3e}s diverged from "
+                        f"the overlap schedule "
+                        f"{fresh['schedule_overlapped_s']:.3e}s")
+        if fresh.get("steps", 0) <= 0:
+            _fail(msgs, f"{name}: modeled timeline is empty")
+    if "calibration_complete" in fresh:
+        if not fresh["calibration_complete"]:
+            _fail(msgs, f"{name}: calibration table incomplete (a priced "
+                        f"step class has no measured/modeled ratio)")
+        if fresh.get("measured_events", 0) <= 0:
+            _fail(msgs, f"{name}: traced execution recorded no measured "
+                        f"spans")
+        if fresh.get("modeled_events", 0) <= 0:
+            _fail(msgs, f"{name}: no modeled lane in the traced runner")
+        if not fresh.get("off_process_cache_hit"):
+            _fail(msgs, f"{name}: TraceConfig(enabled=False) runner missed "
+                        f"the process plan cache (disabled tracing is no "
+                        f"longer free)")
+
+
+def _check_metrics(msgs, base, fresh):
+    """Unified metrics snapshot: the record must join every pre-existing
+    telemetry surface (the PR 8 acceptance bar — cache hit rates, verifier
+    violations, lattice counters readable from one snapshot) and the bench
+    run must have fed the autoshard instruments."""
+    mx = fresh.get("metrics")
+    if mx is None:
+        if base.get("metrics") is not None:
+            _fail(msgs, "metrics: snapshot missing from fresh run")
+        return
+    sources = mx.get("sources", {})
+    for want in ("lattice", "plan_verify", "process_plan_cache"):
+        if want not in sources:
+            _fail(msgs, f"metrics: source '{want}' missing from snapshot")
+        elif "error" in sources[want]:
+            _fail(msgs, f"metrics: source '{want}' errored: "
+                        f"{sources[want]['error']}")
+    counters = mx.get("counters", {})
+    if counters.get("autoshard.evals", 0) <= 0:
+        _fail(msgs, "metrics: autoshard.evals counter never incremented")
+    if mx.get("histograms", {}).get("autoshard.eval_ms", {}).get(
+            "count", 0) <= 0:
+        _fail(msgs, "metrics: autoshard.eval_ms histogram is empty")
+
+
 def _check_plan_verify(msgs, base, fresh):
     """Verifier telemetry: every bench lowering runs through the static plan
     verifier (plans_verified > 0) and a committed record must be violation-
@@ -291,7 +355,8 @@ def compare(base: dict, fresh: dict):
                           ("autoshard_cells", _check_autoshard_cell),
                           ("pipeline_cells", _check_pipeline_cell),
                           ("elastic_cells", _check_elastic_cell),
-                          ("guard_cells", _check_guard_cell)):
+                          ("guard_cells", _check_guard_cell),
+                          ("obs_cells", _check_obs_cell)):
         base_cells = {c["name"]: c for c in base.get(kind, [])}
         fresh_cells = {c["name"]: c for c in fresh.get(kind, [])}
         for name, bc in base_cells.items():
@@ -307,6 +372,7 @@ def compare(base: dict, fresh: dict):
     _check_cache(msgs, "process_plan_cache", base, fresh)
     _check_lattice(msgs, base, fresh)
     _check_plan_verify(msgs, base, fresh)
+    _check_metrics(msgs, base, fresh)
     return msgs, info
 
 
@@ -333,7 +399,8 @@ def main() -> int:
               + len(base.get("autoshard_cells", []))
               + len(base.get("pipeline_cells", []))
               + len(base.get("elastic_cells", []))
-              + len(base.get("guard_cells", [])))
+              + len(base.get("guard_cells", []))
+              + len(base.get("obs_cells", [])))
     path = plan_smoke.write_artifact(fresh)
     print(f"bench-guard: OK ({ncells} cells, no regressions vs committed baseline)")
     print(f"# artifact refreshed: {path}")

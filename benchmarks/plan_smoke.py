@@ -744,6 +744,125 @@ def _guard_cells():
     return cells
 
 
+# ---------------------------------------------------------------------------------
+# observability cells (PR 8): plan-step tracing + calibration — tracing must
+# observe, never perturb (off = provably free, on = plan priced identically)
+# ---------------------------------------------------------------------------------
+
+_OBS_OVERHEAD_CAP = 0.01  # tracing cost budget, same bar as the sentinel
+
+
+def _obs_cells():
+    """Two cells for the ``repro.obs`` layer.
+
+    ``obs_trace_qwen`` — the qwen registry loss on the Table-1 mesh,
+    cost-only: the modeled timeline must replay to exactly the overlap
+    scheduler's makespan, the Chrome export must validate against the trace
+    schema, and exporting must not reprice the plan (``overhead_ratio``
+    compares ``plan_cost`` before/after the export — tracing is observation,
+    so the guarded cap is really an identity check).
+
+    ``obs_exec_tiny`` — an executed traced runner on the 1×1 harness mesh:
+    measured + modeled lanes present, schema-valid, calibration table
+    complete (a ratio for every priced step class).  The tracing-*off* proof
+    rides here too: a runner built with ``TraceConfig(enabled=False)`` must
+    hit the process plan cache — same entry, same jitted callable as the
+    untraced build, so its overhead is zero by construction, not by timing.
+    """
+    from repro import autoshard, obs
+    from repro.core.plan import lower_plan, plan_cost
+    from repro.core.plan_opt import modeled_timeline
+    from repro.core.sharding import Mesh
+
+    cells = []
+
+    rmesh = Mesh.create((2, 4), ("data", "model"))
+    closed, baseline = autoshard.registry_problem("qwen1.5-0.5b", rmesh, 8,
+                                                  256, 8)
+    plan = lower_plan(closed, baseline, rmesh)
+    cost_before = plan_cost(plan).total_s
+    t0 = time.perf_counter()
+    tracer = obs.Tracer(obs.TraceConfig(measured=False))
+    tracer.on_plan(plan)
+    trace = tracer.chrome_trace(include_control=False)
+    export_ms = (time.perf_counter() - t0) * 1e3
+    cost_after = plan_cost(plan).total_s
+    rows_m = modeled_timeline(plan)
+    makespan = max((r["start_s"] + r["dur_s"] for r in rows_m), default=0.0)
+    sched = plan.opt_report.overlap["overlapped_s"]
+    problems = obs.validate_trace_events(trace["traceEvents"])
+    cells.append({
+        "name": "obs_trace_qwen",
+        "steps": len(rows_m),
+        "classes": sorted({r["cls"] for r in rows_m}),
+        "events": len(trace["traceEvents"]),
+        "schema_ok": not problems,
+        "schema_problems": len(problems),
+        "modeled_makespan_s": makespan,
+        "schedule_overlapped_s": sched,
+        "makespan_matches_schedule": bool(
+            abs(makespan - sched) <= 1e-9 * max(abs(sched), 1e-30)),
+        "overhead_ratio": (abs(cost_after - cost_before) / cost_before
+                           if cost_before else 0.0),
+        "overhead_cap": _OBS_OVERHEAD_CAP,
+        "export_ms": export_ms,  # informational, never guarded
+    })
+
+    import jax.numpy as jnp
+
+    from repro.core import annotate, mesh_split
+    from repro.core.compat import make_jax_mesh
+    from repro.core.partitioner import (
+        clear_process_plan_cache, process_plan_cache_stats, spmd_partition,
+    )
+
+    jmesh = make_jax_mesh((1, 1), ("x", "y"))
+    mesh = Mesh.create((1, 1), ("x", "y"))
+
+    def make_fn():
+        def f(a, b):
+            a = annotate(a, mesh_split(2, mesh, ["x", -1]))
+            b = annotate(b, mesh_split(2, mesh, [-1, "y"]))
+            return jnp.tanh(a @ b)
+
+        return f
+
+    x = np.ones((8, 8), np.float32)
+    clear_process_plan_cache()
+    base = spmd_partition(make_fn(), jmesh, mesh)
+    base(x, x)
+    off = spmd_partition(make_fn(), jmesh, mesh,
+                         trace=obs.TraceConfig(enabled=False))
+    off(x, x)
+    off_hit = (process_plan_cache_stats().hits >= 1 and off.tracer is None)
+
+    runner = spmd_partition(make_fn(), jmesh, mesh, trace=obs.TraceConfig())
+    t0 = time.perf_counter()
+    for _ in range(3):
+        runner(x, x)
+    exec_ms = (time.perf_counter() - t0) * 1e3
+    trace2 = runner.tracer.chrome_trace()
+    problems2 = obs.validate_trace_events(trace2["traceEvents"])
+    rep = obs.calibration_report(trace2)
+    clear_process_plan_cache()
+    cells.append({
+        "name": "obs_exec_tiny",
+        "measured_events": len(runner.tracer.measured_events()),
+        "modeled_events": len(runner.tracer.modeled_events()),
+        "schema_ok": not problems2,
+        "schema_problems": len(problems2),
+        "calibration_complete": rep.complete,
+        "calibration": rep.as_dict(),  # ratios vary per run: never guarded
+        "off_process_cache_hit": off_hit,
+        # off-path overhead is structural (cache-hit ⇒ identical callable):
+        # 0 when the hit happened, sentinel 1.0 (fails the cap) otherwise
+        "overhead_ratio": 0.0 if off_hit else 1.0,
+        "overhead_cap": _OBS_OVERHEAD_CAP,
+        "exec_ms": exec_ms,  # informational, never guarded
+    })
+    return cells
+
+
 def _cache_cell():
     import jax.numpy as jnp
 
@@ -795,6 +914,9 @@ def smoke_record() -> dict:
     # searches (depth-cap prunes there are the bound working as designed, so
     # only regressions vs the committed record fail)
     reset_search_telemetry()
+    from repro import obs
+
+    obs.registry().reset()  # per-record metrics, like the lattice telemetry
     rec = {
         "cells": _reshard_cells() + [_einsum_cell()],
     }
@@ -805,6 +927,7 @@ def smoke_record() -> dict:
     rec["pipeline_cells"] = _pipeline_cells()
     rec["elastic_cells"] = _elastic_cells()
     rec["guard_cells"] = _guard_cells()
+    rec["obs_cells"] = _obs_cells()
     rec.update(_cache_cell())
     rec["lattice_telemetry"] = {
         "cells": grid_telemetry,
@@ -822,6 +945,10 @@ def smoke_record() -> dict:
 
     rec["plan_build_ms"] = plan_build_report()
     rec["pipeline_build_ms"] = pipeline_perf_report()
+    # unified metrics snapshot: every telemetry surface exercised above —
+    # plan caches, lattice counters, verifier telemetry, autoshard timing —
+    # readable from this one dict (guard checks the sources are all present)
+    rec["metrics"] = obs.snapshot()
     return rec
 
 
@@ -916,6 +1043,33 @@ def rows(rec: dict = None):
             f"(cap {f'{cap*100:.0f}%' if cap is not None else 'none'}) "
             f"steps=+{cell['guard_steps']} launches=+{cell['guard_launches']} "
             f"wire=+{cell['guard_wire_bytes']:.2e}B",
+        ))
+    for cell in rec.get("obs_cells", []):
+        if cell["name"] == "obs_trace_qwen":
+            out.append((
+                f"obs/{cell['name']}", 0.0,
+                f"steps={cell['steps']} classes={len(cell['classes'])} "
+                f"schema_ok={cell['schema_ok']} "
+                f"makespan={cell['modeled_makespan_s']:.3e}s "
+                f"matches_schedule={cell['makespan_matches_schedule']} "
+                f"export={cell['export_ms']:.1f}ms",
+            ))
+        else:
+            out.append((
+                f"obs/{cell['name']}", 0.0,
+                f"measured={cell['measured_events']} "
+                f"modeled={cell['modeled_events']} "
+                f"schema_ok={cell['schema_ok']} "
+                f"calibration_complete={cell['calibration_complete']} "
+                f"off_cache_hit={cell['off_process_cache_hit']}",
+            ))
+    mx = rec.get("metrics")
+    if mx:
+        out.append((
+            "obs/metrics_snapshot", 0.0,
+            f"counters={len(mx['counters'])} "
+            f"histograms={len(mx['histograms'])} "
+            f"sources={','.join(sorted(mx.get('sources', {})))}",
         ))
     pv = rec.get("plan_verify")
     if pv:

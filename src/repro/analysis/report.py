@@ -1,4 +1,5 @@
-"""Generate the EXPERIMENTS.md §Dry-run / §Roofline / §Partition-plans tables.
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline / §Partition-plans /
+§Trace / §Metrics tables.
 
     PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
                                                    [--plan artifacts/bench/BENCH_plan.json]
@@ -185,6 +186,85 @@ def plan_opt_table(path: str) -> str:
     return "\n".join(lines)
 
 
+def trace_table(path: str) -> str:
+    """§Trace: modeled/measured lanes + per-class calibration from the obs
+    bench cells (see benchmarks/plan_smoke.py `_obs_cells`)."""
+    if not os.path.exists(path):
+        return f"_(no plan artifact at {path}; run `python -m benchmarks.run --smoke`)_"
+    rec = json.load(open(path))
+    cells = rec.get("obs_cells", [])
+    if not cells:
+        return "_(artifact predates the obs cells; re-run the smoke bench)_"
+    lines = [
+        "| obs cell | steps/spans | classes | schema | modeled=schedule | trace-off overhead |",
+        "|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        spans = c.get("steps", c.get("measured_events", 0))
+        classes = ",".join(c.get("classes", [])) or \
+            ",".join(r["class"] for r in
+                     c.get("calibration", {}).get("rows", []))
+        match = c.get("makespan_matches_schedule")
+        match_s = "—" if match is None else ("yes" if match else "**NO**")
+        lines.append(
+            f"| {c['name']} | {spans} | {classes} "
+            f"| {'ok' if c.get('schema_ok') else '**BAD**'} | {match_s} "
+            f"| {c.get('overhead_ratio', 0.0):.3f} "
+            f"(cap {c.get('overhead_cap', 0.0):.2f}) |"
+        )
+    cal = next((c.get("calibration") for c in cells
+                if c.get("calibration")), None)
+    if cal:
+        lines.append("")
+        lines.append("Measured/modeled calibration (per step class, eager "
+                     "dispatch included — see the tracing contract in "
+                     "`repro/obs/trace.py`):")
+        lines.append("")
+        lines.append("| class | modeled s | measured s/call | ratio | flagged |")
+        lines.append("|---|---|---|---|---|")
+        for r in cal.get("rows", []):
+            ratio = f"{r['ratio']:.3g}" if r.get("ratio") is not None else "—"
+            lines.append(
+                f"| {r['class']} | {r['modeled_s']:.3g} "
+                f"| {r['measured_s']:.3g} | {ratio} "
+                f"| {'⚠' if r.get('flagged') else ''} |")
+    return "\n".join(lines)
+
+
+def metrics_table(path: str) -> str:
+    """§Metrics: the unified registry snapshot captured at the end of the
+    smoke bench — every pre-PR-8 telemetry surface in one pane."""
+    if not os.path.exists(path):
+        return f"_(no plan artifact at {path}; run `python -m benchmarks.run --smoke`)_"
+    rec = json.load(open(path))
+    snap = rec.get("metrics")
+    if not snap:
+        return "_(artifact predates the metrics snapshot; re-run the smoke bench)_"
+    lines = ["| counter | value |", "|---|---|"]
+    for k, v in sorted(snap.get("counters", {}).items()):
+        lines.append(f"| {k} | {v:g} |")
+    hists = snap.get("histograms", {})
+    if hists:
+        lines.append("")
+        lines.append("| histogram | count | mean | p50 | p99 |")
+        lines.append("|---|---|---|---|---|")
+        for k, h in sorted(hists.items()):
+            def f(key):
+                v = h.get(key)
+                return f"{v:.4g}" if isinstance(v, (int, float)) else "—"
+            lines.append(f"| {k} | {h.get('count', 0)} | {f('mean')} "
+                         f"| {f('p50')} | {f('p99')} |")
+    srcs = snap.get("sources", {})
+    if srcs:
+        lines.append("")
+        lines.append(
+            "Joined sources: " + ", ".join(f"`{s}`" for s in sorted(srcs)) +
+            " — module-owned telemetry read through the same snapshot "
+            "(`python -m repro.obs summarize` renders any dump)."
+        )
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="artifacts/dryrun")
@@ -199,6 +279,10 @@ def main():
     print(plan_table(args.plan))
     print("\n## §Plan optimizer (whole-plan pass pipeline)\n")
     print(plan_opt_table(args.plan))
+    print("\n## §Trace (modeled vs measured plan timelines)\n")
+    print(trace_table(args.plan))
+    print("\n## §Metrics (unified registry snapshot)\n")
+    print(metrics_table(args.plan))
 
 
 if __name__ == "__main__":

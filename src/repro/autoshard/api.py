@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -218,9 +219,12 @@ def solve_problem(closed, mesh: Mesh,
     dump remapped via :func:`remap_assignment`) seeds the search: when the
     warm point is feasible the greedy sweep is skipped entirely, so a warm
     solve performs strictly fewer cost lowerings than a cold one."""
+    from repro.obs import metrics as obs_metrics
+
     ev = Evaluator(closed, mesh, budget_bytes=config.budget_bytes,
                    optimize=config.optimize, mem_weight=config.mem_weight,
                    soft_budget_bytes=config.soft_budget_bytes)
+    t0 = time.perf_counter()
     base_ev = ev(list(baseline)) if baseline is not None else None
     res = search(
         ev, mesh,
@@ -229,6 +233,9 @@ def solve_problem(closed, mesh: Mesh,
         max_candidates=config.max_candidates,
         init_assignment=warm_start,
     )
+    obs_metrics.inc("autoshard.solves")
+    obs_metrics.observe("autoshard.search_ms",
+                        (time.perf_counter() - t0) * 1e3)
     assignment, final = res.assignment, res.evaluation
     if base_ev is not None and base_ev.score < final.score:
         assignment, final = list(baseline), base_ev

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,6 +37,7 @@ from repro.core.collective_planner import PlanError
 from repro.core.plan import PlanCost, lower_for_cost
 from repro.core.plan_verify import PlanVerifyError
 from repro.core.sharding import Mesh, Sharding
+from repro.obs import metrics as obs_metrics
 
 from .space import MaybeSharding
 
@@ -87,6 +89,8 @@ class Evaluator:
         if hit is not None:
             return hit
         self.lowerings += 1
+        obs_metrics.inc("autoshard.evals")
+        t0 = time.perf_counter()
         try:
             cost = lower_for_cost(
                 self.closed, list(assignment), self.mesh, optimize=self.optimize
@@ -107,6 +111,8 @@ class Evaluator:
                 ev = Evaluation(cost, False, "over memory budget")
             else:
                 ev = Evaluation(cost, True)
+        obs_metrics.observe("autoshard.eval_ms",
+                            (time.perf_counter() - t0) * 1e3)
         self.cache[key] = ev
         return ev
 

@@ -428,6 +428,11 @@ class PlanCacheStats:
 
     hits: int = 0
     misses: int = 0
+    # scope labels this cache in the unified metrics registry: hits/misses
+    # also land in ``plan_cache.<scope>.{hits,misses}`` counters there, so
+    # one snapshot covers every cache in the process (None = unlabelled,
+    # registry feed off)
+    scope: Optional[str] = None
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False,
     )
@@ -435,10 +440,18 @@ class PlanCacheStats:
     def record_hit(self) -> None:
         with self._lock:
             self.hits += 1
+        if self.scope:
+            from repro.obs.metrics import inc
+
+            inc(f"plan_cache.{self.scope}.hits")
 
     def record_miss(self) -> None:
         with self._lock:
             self.misses += 1
+        if self.scope:
+            from repro.obs.metrics import inc
+
+            inc(f"plan_cache.{self.scope}.misses")
 
     def reset(self) -> None:
         with self._lock:
@@ -483,7 +496,7 @@ def _aval_key(a):
 # partitioning problem", not "same Python callable".
 
 _PROCESS_CACHE: Dict[tuple, "_CacheEntry"] = {}
-_PROCESS_STATS = PlanCacheStats()
+_PROCESS_STATS = PlanCacheStats(scope="process")
 
 
 def _jaxpr_digest(closed) -> str:
@@ -521,7 +534,7 @@ def clear_process_plan_cache() -> None:
 
 def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
                    optimize: bool = True, process_cache: bool = True,
-                   autoshard=None, verify=None, guard=None):
+                   autoshard=None, verify=None, guard=None, trace=None):
     """Partition ``fn`` with the reference partitioner and return a callable that
     runs the SPMD program over ``jmesh`` via shard_map.
 
@@ -561,13 +574,35 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
     provenance when a guarded output is non-finite or exceeds
     ``guard.max_abs``.  Guards require ``compile_plans=True``.
 
+    ``trace`` (a :class:`repro.obs.trace.TraceConfig`) opts this runner into
+    plan-step tracing.  ``TraceConfig(enabled=False)`` is normalized to "no
+    tracing" right here — same cache keys, same jitted callable, provably
+    zero overhead.  With tracing on, the runner is excluded from the
+    process-level plan cache (the tracer is runner-local state) and, when
+    ``trace.measured``, the plan executes **eagerly** (shard_map without
+    ``jit``) so per-step host timers mean something — see the tracing
+    contract in :mod:`repro.obs.trace` for the dispatch-vs-device-time
+    caveats.  The tracer is exposed as ``runner.tracer``
+    (``runner.tracer.write(path)`` exports Chrome trace JSON).
+
     The returned runner exposes ``runner.cache_stats`` (hits/misses) and
     ``runner.plans`` (cache-key → PartitionPlan) for tests and reporting.
     """
     if guard is not None and not compile_plans:
         raise ValueError("spmd_partition: guard= requires compile_plans=True")
+    if trace is not None and not trace.enabled:
+        trace = None  # disabled config ≡ no tracing: identical runner
+    if trace is not None and not compile_plans:
+        raise ValueError("spmd_partition: trace= requires compile_plans=True")
+    tracer = None
+    if trace is not None:
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer(trace)
+        process_cache = False  # tracer is runner-local; sharing a traced
+        # entry across call sites would cross-wire their spans
     cache: Dict[tuple, _CacheEntry] = {}
-    stats = PlanCacheStats()
+    stats = PlanCacheStats(scope="runner")
 
     def _build(args):
         closed = jax.make_jaxpr(fn)(*args)
@@ -620,9 +655,14 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
                 out_specs = tuple(
                     to_partition_spec(sh) for sh in plan.out_shardings
                 )
+            if tracer is not None:
+                tracer.on_plan(plan)  # modeled lane from the overlap schedule
+
+            step_tracer = tracer if (tracer is not None
+                                     and tracer.config.measured) else None
 
             def local_fn(*local_args):
-                outs = plan.execute(*local_args)
+                outs = plan.execute(*local_args, tracer=step_tracer)
                 return outs if len(outs) > 1 else outs[0]
 
         else:
@@ -638,7 +678,12 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
             in_specs=in_specs,
             out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
         )
-        entry = _CacheEntry(jax.jit(shmapped), plan)
+        # measured tracing skips jit: eager shard_map keeps the Python step
+        # walk alive at run time so per-step timers observe real dispatch
+        # (the whole point — see the tracing contract in repro.obs.trace)
+        traced_eager = tracer is not None and tracer.config.measured
+        entry = _CacheEntry(shmapped if traced_eager else jax.jit(shmapped),
+                            plan)
         if pkey is not None:
             _PROCESS_CACHE[pkey] = entry
         return entry
@@ -670,4 +715,5 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
     runner.calls = 0
     runner.cache_stats = stats
     runner.plans = cache
+    runner.tracer = tracer
     return runner

@@ -296,8 +296,17 @@ class PartitionPlan:
     peak_bytes: float = 0.0  # modeled per-device live-memory peak (cost model)
     guard: Optional["GuardInfo"] = None  # sentinel epilogue metadata
 
-    def execute(self, *args):
-        """Run the plan on local shards (inside a shard_map region)."""
+    def execute(self, *args, tracer=None):
+        """Run the plan on local shards (inside a shard_map region).
+
+        ``tracer`` (an :class:`repro.obs.trace.Tracer`) switches to the
+        traced walk — per-step measured spans, only meaningful under eager
+        (non-jitted) shard_map; see the tracing contract in
+        :mod:`repro.obs.trace`.  The untraced path is untouched: no timer
+        reads, no extra attribute lookups per step.
+        """
+        if tracer is not None:
+            return self._execute_traced(args, tracer)
         env: Env = {}
         for v, c in zip(self.jaxpr.constvars, self.consts):
             env[v] = c
@@ -306,6 +315,39 @@ class PartitionPlan:
         for step in self.steps:
             step.run(env, step.reads, step.writes)
         return tuple(_read(env, k) for k in self.out_keys)
+
+    def _execute_traced(self, args, tracer):
+        """The traced step walk: a perf_counter pair brackets each step, and
+        with ``tracer.config.sync`` the span blocks on the step's writes so
+        device time lands inside it (dispatch-only otherwise)."""
+        import jax
+
+        sync = tracer.config.sync
+        call = tracer.begin_call()
+        env: Env = {}
+        for v, c in zip(self.jaxpr.constvars, self.consts):
+            env[v] = c
+        for v, a in zip(self.jaxpr.invars, args):
+            env[v] = a
+        for idx, step in enumerate(self.steps):
+            t0 = tracer.now_us()
+            step.run(env, step.reads, step.writes)
+            if sync:
+                for w in step.writes:
+                    out = env.get(w)
+                    if out is not None:
+                        try:
+                            jax.block_until_ready(out)
+                        except Exception:  # non-array env values (specs etc.)
+                            pass
+            tracer.record_step(idx, step, t0, tracer.now_us(), call)
+        outs = tuple(_read(env, k) for k in self.out_keys)
+        if sync:
+            try:
+                jax.block_until_ready(outs)
+            except Exception:
+                pass
+        return outs
 
     def total_flops(self) -> float:
         """Modeled per-device FLOPs of one plan execution (scan bodies are
@@ -1749,12 +1791,32 @@ def lower_for_cost(
     numerics-sentinel epilogue into the returned cost (the guard-overhead
     bench cell).
     """
+    return plan_cost(lower_plan(closed, in_shardings, mesh, optimize=optimize,
+                                verify=verify, guard=guard))
+
+
+def lower_plan(
+    closed: excore.ClosedJaxpr,
+    in_shardings,
+    mesh: Mesh,
+    optimize: bool = True,
+    verify: Optional[bool] = None,
+    guard: Optional[GuardConfig] = None,
+) -> PartitionPlan:
+    """Cost-only lowering that returns the :class:`PartitionPlan` itself
+    (step runners are raising stubs — the plan prices, it doesn't run).
+
+    Same contract as :func:`lower_for_cost` but for consumers that need the
+    structure, not just the totals: the modeled timeline export
+    (``plan_opt.modeled_timeline`` / ``python -m repro.obs trace``) and the
+    obs bench cells walk the step list of registry-sized plans on meshes
+    bigger than the host.
+    """
     from .propagation import propagate
 
     prop = propagate(closed, mesh, in_shardings=list(in_shardings or []))
-    plan = compile_plan(closed, prop.result(), mesh, optimize=optimize,
+    return compile_plan(closed, prop.result(), mesh, optimize=optimize,
                         cost_only=True, verify=verify, guard=guard)
-    return plan_cost(plan)
 
 
 # ---------------------------------------------------------------------------------

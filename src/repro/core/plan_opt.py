@@ -479,10 +479,33 @@ def hoist_scan_invariants(plan: PartitionPlan) -> PassReport:
             inner.peak_bytes = plan_peak_bytes(inner)
             step.transient_bytes = inner.peak_bytes
             step.reads = tuple(new_reads)
+            _refresh_inner_report(inner)
         out.append(step)
     if rep.hoisted_reshards:
         plan.steps[:] = out
     return rep
+
+
+def _refresh_inner_report(inner: PartitionPlan) -> None:
+    """Re-sync an inner plan's :class:`OptReport` after a later outer pass
+    (hoist) mutated its step list in place.
+
+    The inner plan was optimized — and its report recorded — before the
+    outer pipeline ran, so dropping a body reshard leaves ``steps_after`` /
+    ``collectives_after`` / ``wire_bytes_after`` and the overlap model
+    counting a step that no longer exists; ``plan_verify``'s recursive
+    accounting would (correctly) flag that as a mutation.  Re-run the
+    overlap scheduler (pure reordering — the scan's run closure holds this
+    same plan object) and recompute the after-side accounting.
+    """
+    rep = inner.opt_report
+    if rep is None:
+        return
+    sched = schedule_overlap(inner)
+    rep.steps_after = len(inner.steps)
+    rep.collectives_after = whole_collective_launches(inner)
+    rep.wire_bytes_after = whole_wire_bytes(inner)
+    rep.overlap = dict(sched.detail, ratio=sched.overlap_ratio)
 
 
 # ---------------------------------------------------------------------------------
@@ -1067,6 +1090,96 @@ def schedule_overlap(plan: PartitionPlan) -> PassReport:
     if rep.moved_steps:
         plan.steps[:] = [steps[j] for j in order]
     return rep
+
+
+# ---------------------------------------------------------------------------------
+# schedule export: step taxonomy + modeled timeline (repro.obs)
+# ---------------------------------------------------------------------------------
+
+
+def step_class(step: PlanStep) -> str:
+    """Step taxonomy shared by the modeled timeline, measured tracing, and
+    the calibration report (:mod:`repro.obs.calibrate`).
+
+    Classes: ``reshard``, ``collective`` (psum family), ``ppermute``,
+    ``fused``, ``call:scan`` / ``call:pjit`` (opaque inner plans), ``guard``
+    (sentinel stat/pack epilogue steps), ``compute`` (everything else).
+    """
+    if step.kind == "reshard":
+        return "reshard"
+    if step.kind == "collective":
+        return "ppermute" if step.op == "ppermute" else "collective"
+    if step.kind == "fused":
+        return "fused"
+    if step.inner is not None:
+        return f"call:{step.op}"
+    op = step.op or ""
+    if op.startswith("guard"):
+        return "guard"
+    return "compute"
+
+
+def modeled_timeline(plan: PartitionPlan) -> List[Dict]:
+    """The overlap schedule as an explicit timeline: one row per step with
+    modeled start/duration seconds and the lane it occupies.
+
+    Replays exactly the timing rules :func:`schedule_overlap` scheduled
+    with — the same :func:`_step_durations` prices, the same two resource
+    clocks, the same ``overlap_time_s`` slot rule — over the *final* step
+    order (which on an optimized plan IS the schedule the list scheduler
+    emitted), so the resulting makespan equals
+    ``opt_report.overlap["overlapped_s"]`` bit for bit.  Works on raw and
+    cost-only plans too (their list order is the serial program order).
+
+    Rows: ``{"index", "name", "cls", "lane", "start_s", "dur_s",
+    "compute_s", "comm_s"}`` with ``lane`` ∈ {``compute``,
+    ``interconnect``} — a step lands on the interconnect lane when the
+    scheduler charges it to the communication resource only.  Per-lane
+    spans never overlap by construction (each resource clock serializes its
+    lane); :mod:`repro.obs.trace` converts rows into Chrome trace events.
+    """
+    steps = plan.steps
+    mesh = plan.mesh
+    n = len(steps)
+    producer: Dict[int, int] = {}
+    for j, s in enumerate(steps):
+        for w in s.writes:
+            producer[id(w)] = j
+    finish = [0.0] * n
+    tc = tm = 0.0
+    rows: List[Dict] = []
+    for j, s in enumerate(steps):
+        dc, dm = _step_durations(s, mesh)
+        start = 0.0
+        for r in s.reads:
+            if isinstance(r, excore.Literal):
+                continue
+            p = producer.get(id(r))
+            if p is not None and p < j:
+                start = max(start, finish[p])
+        if dc > 0.0:
+            start = max(start, tc)
+        if dm > 0.0:
+            start = max(start, tm)
+        dur = overlap_time_s(dc, dm) if (dc > 0.0 and dm > 0.0) else dc + dm
+        f = start + dur
+        finish[j] = f
+        if dc > 0.0:
+            tc = f
+        if dm > 0.0:
+            tm = f
+        name = f"{s.kind}:{s.op}" if s.op else s.kind
+        rows.append({
+            "index": j,
+            "name": name,
+            "cls": step_class(s),
+            "lane": "interconnect" if (dm > 0.0 and dc == 0.0) else "compute",
+            "start_s": start,
+            "dur_s": dur,
+            "compute_s": dc,
+            "comm_s": dm,
+        })
+    return rows
 
 
 # ---------------------------------------------------------------------------------

@@ -39,10 +39,13 @@ compile (it is the default in ``compile_plan`` / ``spmd_partition`` /
     ``plan.peak_bytes`` must match a fresh liveness walk — a step list
     mutated after optimization without repricing fails here.
 
-Inner pjit/scan plans are verified recursively (dataflow/spec/kind checks);
-stats and accounting checks run at the top level only, because inner plans
-share the top-level ``PlanStats`` object and the hoist pass legitimately
-rewrites inner step lists after their own ``OptReport`` was recorded.
+Inner pjit/scan plans are verified recursively — dataflow/spec/kind checks
+*and* the byte/peak accounting checks: every inner plan's ``opt_report`` and
+``peak_bytes`` must match fresh recomputations too (the hoist pass rewrites
+inner step lists after their own ``OptReport`` was recorded, and re-syncs
+the report via ``plan_opt._refresh_inner_report`` — this check is what keeps
+that honest).  Only the ``plan.stats`` counter checks stay top-level, since
+inner plans share the top-level ``PlanStats`` object.
 
 Failures raise :class:`PlanVerifyError` carrying every violation found (the
 walk does not stop at the first), so a broken optimizer pass shows all of its
@@ -152,6 +155,45 @@ def _wire_bytes_acct(plan) -> float:
         if s.inner is not None:
             total += s.call.get("trips", 1) * _wire_bytes_acct(s.inner)
     return total
+
+
+def _accounting_checks(plan, out: List[str], path: str) -> None:
+    """Byte/peak accounting for one plan, recursing into inner plans.
+
+    Each plan — top-level and inner alike — carries its own ``opt_report``
+    and ``peak_bytes``; a step list mutated after those were recorded (the
+    pre-fix hoist-pass behaviour) fails here with the plan's path in the
+    message."""
+    rep = plan.opt_report
+    if rep is not None:
+        try:
+            recomputed = _wire_bytes_acct(plan)
+        except Exception as e:  # unpriceable step (e.g. bogus axis): its own
+            out.append(f"{path}accounting: whole-program bytes not "
+                       f"recomputable ({e})")
+        else:
+            if not _close(recomputed, rep.wire_bytes_after):
+                out.append(
+                    f"{path}accounting: opt_report.wire_bytes_after "
+                    f"{rep.wire_bytes_after:.1f} != recomputed whole-program "
+                    f"bytes {recomputed:.1f} (steps mutated after "
+                    f"optimization?)")
+    if plan.peak_bytes:
+        from .plan import plan_peak_bytes
+
+        try:
+            peak = plan_peak_bytes(plan)
+        except Exception as e:
+            out.append(f"{path}accounting: liveness peak not recomputable "
+                       f"({e})")
+        else:
+            if not _close(peak, plan.peak_bytes):
+                out.append(
+                    f"{path}accounting: plan.peak_bytes {plan.peak_bytes:.1f}"
+                    f" != recomputed liveness peak {peak:.1f}")
+    for i, s in enumerate(plan.steps):
+        if s.inner is not None:
+            _accounting_checks(s.inner, out, f"{path}step[{i}].inner.")
 
 
 def _verify_body(plan, report: VerifyReport, path: str) -> None:
@@ -295,37 +337,12 @@ def verify_plan(plan, strict: bool = True) -> VerifyReport:
     report = VerifyReport()
     _verify_body(plan, report, "")
     out = report.violations
-    # -- top-level accounting checks -----------------------------------------
+    # stats counters are top-level only: inner plans share this object
     for kind, n in plan.stats.collectives.items():
         if n < 0:
             out.append(f"stats: negative planned-collective count "
                        f"{kind}={n} (double removal in an optimizer pass)")
-    rep = plan.opt_report
-    if rep is not None:
-        try:
-            recomputed = _wire_bytes_acct(plan)
-        except Exception as e:  # unpriceable step (e.g. bogus axis): its own
-            out.append(f"accounting: whole-program bytes not recomputable "
-                       f"({e})")
-        else:
-            if not _close(recomputed, rep.wire_bytes_after):
-                out.append(
-                    f"accounting: opt_report.wire_bytes_after "
-                    f"{rep.wire_bytes_after:.1f} != recomputed whole-program "
-                    f"bytes {recomputed:.1f} (steps mutated after "
-                    f"optimization?)")
-    if plan.peak_bytes:
-        from .plan import plan_peak_bytes
-
-        try:
-            peak = plan_peak_bytes(plan)
-        except Exception as e:
-            out.append(f"accounting: liveness peak not recomputable ({e})")
-        else:
-            if not _close(peak, plan.peak_bytes):
-                out.append(
-                    f"accounting: plan.peak_bytes {plan.peak_bytes:.1f} "
-                    f"!= recomputed liveness peak {peak:.1f}")
+    _accounting_checks(plan, out, "")
     _TELEMETRY["plans_verified"] += 1
     if report.violations:
         _TELEMETRY["violations"] += len(report.violations)

@@ -47,6 +47,8 @@ import numpy as np
 from repro.core.plan import NumericsFault
 from repro.core.sharding import Mesh
 
+from ..obs import metrics as obs_metrics
+from ..obs.trace import control_event
 from ..train import checkpoint as ckpt_lib
 
 
@@ -309,11 +311,15 @@ class ElasticCoordinator:
         from repro import autoshard
         from ..train.loop import make_train_step
 
+        control_event("device_loss", step=err.step, lost=err.lost)
+        obs_metrics.inc("elastic.device_losses")
         survivors = max(len(self.devices) - err.lost, 1)
         self.devices = self.devices[:survivors]
         old_shape = self.mesh.shape
         self.mesh, self.jmesh = derive_mesh(
             devices=self.devices, model_parallel=self.model_parallel)
+        control_event("mesh_shrink", mesh_from=list(old_shape),
+                      mesh_to=list(self.mesh.shape))
         warm = None
         if self.dump_path and os.path.exists(self.dump_path):
             warm = autoshard.load(self.dump_path)[1]
@@ -345,6 +351,8 @@ class ElasticCoordinator:
             }
         self.loop.swap_plan(
             make_train_step(self.cfg, self.st, self.opt, self.tc))
+        control_event("plan_swap", reason="device_loss", step=err.step,
+                      mesh=list(self.mesh.shape))
         self.recoveries.append(event)
         return state, start
 
@@ -361,6 +369,8 @@ class ElasticCoordinator:
             "consecutive": err.consecutive,
             "faults": [dict(f) for f in err.faults[:8]],
         }
+        control_event("rewind", step=err.step, consecutive=err.consecutive)
+        obs_metrics.inc("elastic.rewinds")
         state, start = None, None
         if self.tc.ckpt_dir and ckpt_lib.latest_step(self.tc.ckpt_dir) is not None:
             target = init_state(self.cfg, self.st, self.opt, self.tc,
@@ -381,7 +391,10 @@ class ElasticCoordinator:
         self.tc.numeric_fault = None
         self.loop.swap_plan(
             make_train_step(self.cfg, self.st, self.opt, self.tc))
+        control_event("plan_swap", reason="rewind", step=err.step,
+                      rewound_to=event.get("rewound_to"))
         self.loop.guard_counters["rewinds"] += 1
+        obs_metrics.inc("train.guard.rewinds")
         self.loop._consecutive_faults = 0
         self.recoveries.append(event)
         return state, start
@@ -422,4 +435,6 @@ class ElasticCoordinator:
                 if self.injector is not None:
                     self.injector.disarm()
                 state, start = None, None
+                control_event("crash_save")
+                obs_metrics.inc("elastic.crash_saves")
                 self.recoveries.append({"crash_save": True})

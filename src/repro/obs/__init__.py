@@ -1,0 +1,57 @@
+"""Plan-native observability: step tracing, metrics, modeled-vs-measured
+calibration.
+
+Three layers over the compiled-plan runtime (the GSPMD repro's answer to
+"the headline claim is *measured* utilization, but we can only model"):
+
+* :mod:`repro.obs.metrics` — one process-wide registry of thread-safe
+  counters / gauges / histograms.  The five pre-existing telemetry surfaces
+  (plan-cache hit rates, lattice-search counters, verifier telemetry,
+  autoshard search/eval timing, elastic fault/skip/rewind counters) all land
+  in — or are joined into — a single :func:`~repro.obs.metrics.snapshot`,
+  dumpable as JSON (``REPRO_METRICS_DUMP=path``).
+* :mod:`repro.obs.trace` — opt-in traced execution for compiled plans
+  (``spmd_partition(trace=TraceConfig(...))``): per-step measured spans on
+  the two lanes the overlap scheduler models (compute / interconnect), a
+  *modeled* timeline emitted straight from the overlap schedule, and elastic
+  control events (fault, skip, rewind, mesh shrink, plan swap) as instant
+  events — all exported as Chrome trace-event JSON (Perfetto-loadable).
+* :mod:`repro.obs.calibrate` — join measured span seconds against the
+  roofline's modeled per-step seconds into a per-step-class
+  :class:`~repro.obs.calibrate.CalibrationReport` (the groundwork for honest
+  Pallas-kernel pricing: a class whose measured/modeled ratio is off by more
+  than the tolerance factor is flagged).
+
+``python -m repro.obs summarize <metrics.json>`` and
+``python -m repro.obs trace <out.json>`` give CLI access (see ``__main__``).
+"""
+from .calibrate import CalibrationReport, calibration_report
+from .metrics import (
+    MetricsRegistry,
+    registry,
+    snapshot,
+)
+from .trace import (
+    TraceConfig,
+    Tracer,
+    control_event,
+    control_events,
+    export_control_trace,
+    reset_control_events,
+    validate_trace_events,
+)
+
+__all__ = [
+    "CalibrationReport",
+    "MetricsRegistry",
+    "TraceConfig",
+    "Tracer",
+    "calibration_report",
+    "control_event",
+    "control_events",
+    "export_control_trace",
+    "registry",
+    "reset_control_events",
+    "snapshot",
+    "validate_trace_events",
+]

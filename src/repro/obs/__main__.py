@@ -1,0 +1,125 @@
+"""CLI for the observability layer.
+
+``python -m repro.obs summarize <metrics.json>``
+    Print top counters, gauges, and histogram percentiles from a metrics
+    snapshot (``REPRO_METRICS_DUMP`` output or ``MetricsRegistry.dump``).
+
+``python -m repro.obs trace <out.json> [--arch A --mesh RxC ...]``
+    Emit the *modeled* timeline for a registry arch on a mesh as Chrome
+    trace-event JSON — pure cost-model lowering, no devices, no execution.
+    Load the file in Perfetto / ``chrome://tracing``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cmd_summarize(args: argparse.Namespace) -> int:
+    with open(args.path) as f:
+        snap = json.load(f)
+    counters = snap.get("counters", {})
+    gauges = snap.get("gauges", {})
+    histograms = snap.get("histograms", {})
+    sources = snap.get("sources", {})
+
+    print(f"# metrics summary: {args.path}")
+    if counters:
+        print(f"\n## counters (top {args.top})")
+        ranked = sorted(counters.items(), key=lambda kv: -kv[1])[:args.top]
+        width = max(len(k) for k, _ in ranked)
+        for k, v in ranked:
+            print(f"  {k:<{width}}  {v:g}")
+    if gauges:
+        print("\n## gauges")
+        width = max(len(k) for k in gauges)
+        for k, v in sorted(gauges.items()):
+            print(f"  {k:<{width}}  {v:g}")
+    if histograms:
+        print("\n## histograms")
+        print("  name | count | mean | p50 | p90 | p99 | max")
+        for k, h in sorted(histograms.items()):
+            def fmt(key):
+                v = h.get(key)
+                return f"{v:.4g}" if isinstance(v, (int, float)) else "—"
+            print(f"  {k} | {h.get('count', 0)} | {fmt('mean')} | "
+                  f"{fmt('p50')} | {fmt('p90')} | {fmt('p99')} | "
+                  f"{fmt('max')}")
+    if sources:
+        print("\n## sources")
+        for name, src in sorted(sources.items()):
+            body = ", ".join(f"{k}={v}" for k, v in sorted(src.items())) \
+                if isinstance(src, dict) else str(src)
+            print(f"  {name}: {body}")
+    return 0
+
+
+def _parse_mesh(spec: str, axes: str):
+    from repro.core.sharding import Mesh
+
+    shape = tuple(int(d) for d in spec.lower().split("x"))
+    names = tuple(axes.split(","))
+    if len(names) != len(shape):
+        raise SystemExit(
+            f"--axes gives {len(names)} names for a {len(shape)}-d mesh")
+    return Mesh.create(shape, names)
+
+
+def _cmd_trace(args: argparse.Namespace) -> int:
+    from repro import autoshard
+    from repro.core.plan import lower_plan
+    from repro.core.plan_opt import modeled_timeline
+
+    from .trace import TraceConfig, Tracer
+
+    mesh = _parse_mesh(args.mesh, args.axes)
+    closed, baseline = autoshard.registry_problem(
+        args.arch, mesh, args.batch, args.seq, args.reduce_k)
+    plan = lower_plan(closed, baseline, mesh)
+
+    tracer = Tracer(TraceConfig(measured=False))
+    tracer.on_plan(plan)
+    out = tracer.write(args.out, include_control=False)
+
+    rows = modeled_timeline(plan)
+    makespan = max((r["start_s"] + r["dur_s"] for r in rows), default=0.0)
+    classes = sorted({r["cls"] for r in rows})
+    print(f"wrote {out}")
+    print(f"  arch={args.arch} mesh={args.mesh} ({args.axes}) "
+          f"batch={args.batch} seq={args.seq}")
+    print(f"  steps={len(rows)} makespan={makespan * 1e3:.3f} ms "
+          f"classes={','.join(classes)}")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.obs", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("summarize", help="summarize a metrics snapshot JSON")
+    p.add_argument("path", help="metrics snapshot (REPRO_METRICS_DUMP output)")
+    p.add_argument("--top", type=int, default=20, help="counters to show")
+    p.set_defaults(fn=_cmd_summarize)
+
+    p = sub.add_parser(
+        "trace", help="emit a modeled timeline for a registry arch (no exec)")
+    p.add_argument("out", help="output Chrome trace JSON path")
+    p.add_argument("--arch", default="qwen1.5-0.5b",
+                   help="registry arch name (default: qwen1.5-0.5b)")
+    p.add_argument("--mesh", default="2x4", help="mesh shape, e.g. 2x4")
+    p.add_argument("--axes", default="data,model",
+                   help="comma-separated mesh axis names")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--reduce-k", type=int, default=8)
+    p.set_defaults(fn=_cmd_trace)
+
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,389 @@
+"""Plan-step tracing: measured spans, modeled timelines, control events.
+
+Tracing contract (read this before trusting a number)
+-----------------------------------------------------
+
+A compiled :class:`~repro.core.plan.PartitionPlan` normally executes inside
+``jax.jit(shard_map(...))`` — by the time devices run, the Python step walk
+is long gone, so there is nothing left for a host-side timer to observe.
+Traced *measured* execution therefore runs the plan **eagerly** (shard_map
+without the enclosing ``jit``): each ``PlanStep.run`` still dispatches the
+same primitives to the same devices, but the step walk happens in Python
+where a ``perf_counter`` pair can bracket it.
+
+What a measured span contains, precisely:
+
+* **dispatch time** — Python + JAX tracing/dispatch overhead for the step's
+  primitives (always included; this is host time, not device time);
+* **device time** — only when :attr:`TraceConfig.sync` is true (default):
+  the tracer calls ``jax.block_until_ready`` on the step's outputs before
+  closing the span, so the span covers dispatch *plus* device execution.
+  With ``sync=False`` spans measure dispatch only and device work overlaps
+  asynchronously — useful for spotting host-bound steps, useless for
+  calibration.
+
+Eager execution is slower than the jitted path (no XLA fusion across
+steps).  Measured spans are therefore *upper bounds* on per-step device
+time, tightest for steps dominated by real device work (large collectives,
+big matmuls) and loosest for tiny ops — exactly the bias the per-step-class
+:class:`~repro.obs.calibrate.CalibrationReport` is designed to expose.
+Inner pjit/scan plans execute inside their call step's single span (the
+scan body is one jitted unit; per-trip spans would perturb what they
+measure).
+
+The *modeled* timeline has none of these caveats: it is emitted straight
+from the overlap schedule (``plan_opt.modeled_timeline``) by replaying the
+scheduler's own two-resource timing rules over the final step order, so it
+is exactly the timeline the optimizer believed it was building.
+
+Lanes (Chrome trace ``pid``/``tid`` mapping)
+--------------------------------------------
+
+========  ===========  ====================================================
+pid       process      tids
+========  ===========  ====================================================
+1         modeled      1 = compute, 2 = interconnect
+2         measured     1 = compute, 2 = interconnect
+3         control      1 = elastic instant events (fault/skip/rewind/swap)
+========  ===========  ====================================================
+
+A step lands on the interconnect lane when the overlap scheduler would
+charge it to the communication resource (reshard / collective / fused
+steps), on the compute lane otherwise (compute, guard, inner-plan calls).
+
+Control events are process-global (:func:`control_event`), timestamped on
+the same ``perf_counter`` epoch as measured spans, so a fault instant lines
+up with the step that was running when it fired.  They survive plan swaps —
+an elastic recovery writes its whole fault → skip → rewind → swap story
+into one trace even though the plan object changed mid-run.
+
+Export is Chrome trace-event JSON (``{"traceEvents": [...]}``, ``ts``/
+``dur`` in microseconds) — load the file in Perfetto / ``chrome://tracing``
+and the modeled and measured timelines diff side by side.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+# One perf_counter epoch per process: measured spans and control events share
+# it, so cross-source ordering in the merged trace is meaningful.
+_EPOCH = time.perf_counter()
+
+MODELED_PID = 1
+MEASURED_PID = 2
+CONTROL_PID = 3
+COMPUTE_TID = 1
+INTERCONNECT_TID = 2
+CONTROL_TID = 1
+
+# Step kinds the overlap scheduler charges to the communication resource —
+# keep in sync with plan_opt._step_durations.
+_COMM_KINDS = ("reshard", "collective", "fused")
+
+
+def _now_us() -> float:
+    return (time.perf_counter() - _EPOCH) * 1e6
+
+
+@dataclass(frozen=True)
+class TraceConfig:
+    """Opt-in tracing switch for ``spmd_partition(trace=...)``.
+
+    enabled
+        Master switch; ``TraceConfig(enabled=False)`` is normalized to "no
+        tracing at all" inside ``spmd_partition`` so a disabled config is
+        *provably* free (same plan-cache key, same jitted callable).
+    modeled
+        Emit the modeled timeline from the overlap schedule.
+    measured
+        Execute eagerly and record per-step measured spans (see the module
+        docstring for what those spans mean).
+    sync
+        Block on each step's outputs before closing its span (device time
+        included).  ``False`` measures dispatch only.
+    path
+        If set, the runner does not auto-write anywhere; callers export via
+        ``runner.tracer.write(path)`` — this field just carries the
+        caller's intent along.
+    """
+
+    enabled: bool = True
+    modeled: bool = True
+    measured: bool = True
+    sync: bool = True
+    path: Optional[str] = None
+
+    @property
+    def cache_key(self) -> Tuple:
+        return (self.enabled, self.modeled, self.measured, self.sync)
+
+
+def step_lane(kind: str) -> int:
+    return INTERCONNECT_TID if kind in _COMM_KINDS else COMPUTE_TID
+
+
+class Tracer:
+    """Collects modeled timelines, measured spans, and exports Chrome JSON.
+
+    One tracer per ``spmd_partition`` runner; ``plan.execute(...,
+    tracer=...)`` feeds it measured spans, the runner feeds it each compiled
+    plan (:meth:`on_plan`) for the modeled lane.  Thread-safe — elastic
+    coordinators swap plans from recovery paths while steps run.
+    """
+
+    def __init__(self, config: Optional[TraceConfig] = None):
+        self.config = config or TraceConfig()
+        self._lock = threading.Lock()
+        self._modeled: List[Dict[str, Any]] = []  # chrome events, pid 1
+        self._measured: List[Dict[str, Any]] = []  # chrome events, pid 2
+        self._calls = 0
+        self._plans_seen = 0
+
+    # -- modeled lane --------------------------------------------------------
+    def on_plan(self, plan) -> None:
+        """Emit the modeled timeline for a freshly compiled plan.
+
+        Repeated calls (plan swaps) append further modeled rows offset to
+        start after the previous plan's makespan, so swapped plans stay
+        distinguishable (``args["plan"]`` carries the ordinal).
+        """
+        if not self.config.modeled:
+            return
+        from repro.core.plan_opt import modeled_timeline
+
+        rows = modeled_timeline(plan)
+        with self._lock:
+            base = 0.0
+            for ev in self._modeled:
+                base = max(base, ev["ts"] + ev.get("dur", 0.0))
+            ordinal = self._plans_seen
+            self._plans_seen += 1
+            for row in rows:
+                self._modeled.append({
+                    "name": row["name"],
+                    "ph": "X",
+                    "ts": base + row["start_s"] * 1e6,
+                    "dur": row["dur_s"] * 1e6,
+                    "pid": MODELED_PID,
+                    "tid": INTERCONNECT_TID
+                    if row["lane"] == "interconnect" else COMPUTE_TID,
+                    "args": {
+                        "class": row["cls"],
+                        "index": row["index"],
+                        "plan": ordinal,
+                        "compute_s": row["compute_s"],
+                        "comm_s": row["comm_s"],
+                    },
+                })
+
+    # -- measured lane -------------------------------------------------------
+    def begin_call(self) -> int:
+        with self._lock:
+            call = self._calls
+            self._calls += 1
+        return call
+
+    def record_step(self, index: int, step, t0_us: float,
+                    t1_us: float, call: int) -> None:
+        """One measured span; ``t0_us``/``t1_us`` from :func:`now_us`."""
+        from repro.core.plan_opt import step_class
+
+        ev = {
+            "name": f"{step.kind}:{getattr(step, 'op', None) or ''}".rstrip(
+                ":"),
+            "ph": "X",
+            "ts": t0_us,
+            "dur": max(t1_us - t0_us, 0.0),
+            "pid": MEASURED_PID,
+            "tid": step_lane(step.kind),
+            "args": {
+                "class": step_class(step),
+                "index": index,
+                "call": call,
+            },
+        }
+        with self._lock:
+            self._measured.append(ev)
+
+    @staticmethod
+    def now_us() -> float:
+        return _now_us()
+
+    # -- accessors / export --------------------------------------------------
+    @property
+    def calls(self) -> int:
+        with self._lock:
+            return self._calls
+
+    def modeled_events(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return list(self._modeled)
+
+    def measured_events(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return list(self._measured)
+
+    def chrome_trace(self, include_control: bool = True) -> Dict[str, Any]:
+        events = _lane_metadata()
+        events += self.modeled_events()
+        events += self.measured_events()
+        if include_control:
+            events += control_chrome_events()
+        return {"traceEvents": events}
+
+    def write(self, path: str, include_control: bool = True) -> str:
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(include_control=include_control), f,
+                      indent=1, default=str)
+        return path
+
+
+def _lane_metadata() -> List[Dict[str, Any]]:
+    events: List[Dict[str, Any]] = []
+    for pid, pname in ((MODELED_PID, "modeled"), (MEASURED_PID, "measured"),
+                       (CONTROL_PID, "control")):
+        events.append({
+            "name": "process_name", "ph": "M", "pid": pid,
+            "args": {"name": pname},
+        })
+    for pid in (MODELED_PID, MEASURED_PID):
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": pid,
+            "tid": COMPUTE_TID, "args": {"name": "compute"},
+        })
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": pid,
+            "tid": INTERCONNECT_TID, "args": {"name": "interconnect"},
+        })
+    events.append({
+        "name": "thread_name", "ph": "M", "pid": CONTROL_PID,
+        "tid": CONTROL_TID, "args": {"name": "elastic"},
+    })
+    return events
+
+
+# -- control lane (process-global) -------------------------------------------
+#
+# Elastic/guard events outlive any single runner (a plan swap replaces the
+# runner's plan mid-run), so the control log is module-level.  The train loop
+# and ElasticCoordinator call control_event(...) unconditionally — appending a
+# dict under a lock is cheap enough to leave always-on, and it is the only way
+# a post-mortem trace can tell the full recovery story.
+
+_CONTROL_LOCK = threading.Lock()
+_CONTROL_EVENTS: List[Dict[str, Any]] = []
+
+
+def control_event(name: str, **args: Any) -> Dict[str, Any]:
+    """Record an instant event (fault, skip_step, rewind, mesh_shrink,
+    plan_swap, device_loss, crash_save) on the control lane."""
+    ev = {"name": name, "ts": _now_us(), "args": dict(args)}
+    with _CONTROL_LOCK:
+        _CONTROL_EVENTS.append(ev)
+    return ev
+
+
+def control_events() -> List[Dict[str, Any]]:
+    with _CONTROL_LOCK:
+        return [dict(e) for e in _CONTROL_EVENTS]
+
+
+def reset_control_events() -> None:
+    with _CONTROL_LOCK:
+        _CONTROL_EVENTS.clear()
+
+
+def control_chrome_events() -> List[Dict[str, Any]]:
+    return [{
+        "name": e["name"],
+        "ph": "i",
+        "s": "g",
+        "ts": e["ts"],
+        "pid": CONTROL_PID,
+        "tid": CONTROL_TID,
+        "args": e["args"],
+    } for e in control_events()]
+
+
+def export_control_trace() -> Dict[str, Any]:
+    """Standalone Chrome trace of just the control lane (used by tests and
+    by runs that never enabled step tracing but still want the elastic
+    story)."""
+    return {"traceEvents": _lane_metadata() + control_chrome_events()}
+
+
+# -- schema validation --------------------------------------------------------
+
+_VALID_PH = {"X", "i", "M"}
+_EPS_US = 1e-3  # float-roundoff slack when checking nesting, in µs
+
+
+def validate_trace_events(events: Sequence[Dict[str, Any]]) -> List[str]:
+    """Validate Chrome trace-event structure; return a list of problems
+    (empty ⇒ valid).
+
+    Checks, per the tracing contract:
+
+    * every event has ``name``/``ph``/``pid``; ``ph`` is one of X/i/M;
+    * ``X`` (complete) events carry numeric ``ts`` ≥ 0, ``dur`` ≥ 0 and a
+      ``tid``; ``i`` (instant) events carry ``ts``;
+    * within one ``(pid, tid)`` lane, spans either nest properly or are
+      disjoint — partial overlap means two steps claimed the same resource
+      at once, which neither the scheduler model nor eager execution can
+      produce.
+    """
+    problems: List[str] = []
+    lanes: Dict[Tuple[Any, Any], List[Tuple[float, float, str]]] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i}: not a dict")
+            continue
+        name = ev.get("name")
+        ph = ev.get("ph")
+        if not isinstance(name, str) or not name:
+            problems.append(f"event {i}: missing name")
+        if ph not in _VALID_PH:
+            problems.append(f"event {i} ({name}): bad ph {ph!r}")
+            continue
+        if "pid" not in ev:
+            problems.append(f"event {i} ({name}): missing pid")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i} ({name}): bad ts {ts!r}")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"event {i} ({name}): bad dur {dur!r}")
+                continue
+            if "tid" not in ev:
+                problems.append(f"event {i} ({name}): X event missing tid")
+                continue
+            lanes.setdefault((ev.get("pid"), ev.get("tid")), []).append(
+                (float(ts), float(dur), name))
+    for (pid, tid), spans in lanes.items():
+        # Sort by start; ties broken longest-first so an enclosing span is
+        # seen before the spans it contains.
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack: List[Tuple[float, str]] = []  # (end, name) of open spans
+        for ts, dur, name in spans:
+            end = ts + dur
+            while stack and stack[-1][0] <= ts + _EPS_US:
+                stack.pop()
+            if stack and end > stack[-1][0] + _EPS_US:
+                problems.append(
+                    f"lane (pid={pid}, tid={tid}): span {name!r} "
+                    f"[{ts:.3f}, {end:.3f}] overlaps {stack[-1][1]!r} "
+                    f"(ends {stack[-1][0]:.3f}) without nesting")
+                continue
+            stack.append((end, name))
+    return problems

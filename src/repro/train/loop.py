@@ -44,6 +44,8 @@ import numpy as np
 from ..configs.base import ModelConfig, Strategy
 from ..models import api
 from ..models.layers import tree_init, tree_shapes, tree_specs
+from ..obs import metrics as obs_metrics
+from ..obs.trace import control_event
 from . import checkpoint as ckpt_lib
 from .optimizer import Optimizer, opt_state_specs
 
@@ -332,6 +334,11 @@ class TrainLoop:
             state, metrics = self.step_fn(state, batch)
             loss = float(jax.device_get(metrics["loss"]))
             dt = time.perf_counter() - t0
+            obs_metrics.observe("train.step_ms", dt * 1e3)
+            tokens = getattr(self.pipeline, "local_batch", 0) * getattr(
+                self.pipeline.cfg, "seq_len", 0)
+            if tokens and dt > 0:
+                obs_metrics.observe("train.tokens_per_s", tokens / dt)
             gc = self.tc.guard
             if gc is not None and bool(jax.device_get(metrics["fault"])):
                 # the jitted step already skipped the update in-device; the
@@ -350,6 +357,11 @@ class TrainLoop:
                                    metrics["grad_norm"]))},)
                 self.guard_counters["faults"] += 1
                 self._consecutive_faults += 1
+                obs_metrics.inc("train.guard.faults")
+                control_event(
+                    "numerics_fault", step=step,
+                    consecutive=self._consecutive_faults,
+                    leaves=[f["leaf"] for f in faults[:4]])
                 if "numerics_fault" in self.hooks:
                     self.hooks["numerics_fault"](
                         step, faults, self._consecutive_faults)
@@ -358,6 +370,8 @@ class TrainLoop:
                                         self._consecutive_faults)
                 self.guard_counters["skips"] += 1
                 self.skipped_steps.append(step)
+                obs_metrics.inc("train.guard.skips")
+                control_event("skip_step", step=step)
                 if "log" in self.hooks:
                     self.hooks["log"](
                         f"step {step} numerics fault -> skipped "
@@ -378,8 +392,11 @@ class TrainLoop:
             # trigger backup-worker promotion; here: hook + log)
             if len(self.step_times) >= 8:
                 med = float(np.median(self.step_times[-32:]))
-                if dt > self.tc.straggler_factor * med and "straggler" in self.hooks:
-                    self.hooks["straggler"](step, dt, med)
+                if dt > self.tc.straggler_factor * med:
+                    control_event("straggler", step=step, dt_ms=dt * 1e3,
+                                  median_ms=med * 1e3)
+                    if "straggler" in self.hooks:
+                        self.hooks["straggler"](step, dt, med)
             if self.tc.ckpt_dir and (step + 1) % self.tc.ckpt_every == 0:
                 ckpt_lib.save(self.tc.ckpt_dir, step + 1, state,
                               extra=self._ckpt_extra(step))

@@ -173,3 +173,49 @@ def test_state_partition_specs_cover_state(tmp_path):
     keys = {k for k, _ in _flatten_with_paths(state)[0]}
     specs = specs_by_key(state_partition_specs(TINY, st, opt, tc))
     assert keys == set(specs)
+
+
+def test_recovery_story_reconstructable_from_trace(tmp_path):
+    """Satellite drill: run a FaultInjector-driven rewind and reconstruct the
+    whole fault → skip → rewind → plan-swap story purely from the exported
+    control-lane trace events — no coordinator state consulted."""
+    from repro import obs
+    from repro.core.plan import GuardConfig
+
+    obs.reset_control_events()
+    opt = get_optimizer("adafactor", lr=0.05)
+    tc = TrainConfig(steps=12, ckpt_dir=str(tmp_path / "ck"), ckpt_every=3,
+                     guard=GuardConfig(rewind_after=2), log_every=1000)
+    pipe = TokenPipeline(DataConfig(TINY.vocab_size, 16, 4, seed=7))
+    inj = FaultInjector(nan_at_step=5, numeric_steps=4)
+    co = ElasticCoordinator(TINY, st, opt, tc, pipe, n_devices=1,
+                            injector=inj, max_recoveries=2,
+                            autoshard_config=CHEAP)
+    _, losses = co.run()
+    assert len(losses) == 11  # one skipped batch, training completed
+
+    doc = obs.export_control_trace()
+    assert obs.validate_trace_events(doc["traceEvents"]) == []
+    instants = sorted(
+        (e for e in doc["traceEvents"] if e["ph"] == "i"),
+        key=lambda e: e["ts"])
+    names = [e["name"] for e in instants]
+    # the full recovery story, in causal order, from the trace alone
+    first_fault = names.index("numerics_fault")
+    skip = names.index("skip_step")
+    rewind = names.index("rewind")
+    swap = names.index("plan_swap")
+    assert first_fault < skip < rewind < swap
+    # two consecutive faults tripped the rewind threshold
+    faults = [e for e in instants if e["name"] == "numerics_fault"]
+    assert faults[-1]["args"]["consecutive"] == 2
+    assert [e["args"]["step"] for e in faults[:2]] == [5, 6]
+    # the skip names the dropped batch, the swap says why it happened
+    (skip_ev,) = [e for e in instants if e["name"] == "skip_step"]
+    assert skip_ev["args"]["step"] == 5
+    swap_ev = instants[swap]
+    assert swap_ev["args"]["reason"] == "rewind"
+    # counters landed in the unified registry alongside the trace
+    snap = obs.snapshot()
+    assert snap["counters"]["train.guard.faults"] >= 2
+    assert snap["counters"]["train.guard.rewinds"] >= 1

@@ -344,3 +344,71 @@ def test_verify_flag_disables():
     # mutilated — the flag is honored end to end
     rep = verify_plan(plan, strict=False)
     assert not rep.ok
+
+
+# ---------------------------------------------------------------------------------
+# recursive inner-plan accounting (post-hoist refresh + seeded staleness)
+# ---------------------------------------------------------------------------------
+
+
+def _scan_with_invariant_gather(hoistable=True):
+    """Whole-program scan whose body reshards an invariant const.  With
+    ``hoistable`` the gather lifts out of the body (the hoist pass mutates
+    the inner step list in place); adding a direct unresharded reader of the
+    const pins the reshard inside the body."""
+    from jax import lax
+
+    wsh = mesh_split(2, mesh, ["y", -1])
+    rep = mesh_split(2, mesh, [-1, -1])
+
+    def f(xs, w, c0):
+        w = annotate(w, wsh)
+
+        def body(c, x):
+            wg = annotate(annotate(w, wsh), rep)
+            out = jnp.tanh(c + x @ wg)
+            if not hoistable:
+                out = out + jnp.sum(w)
+            return out, ()
+
+        c, _ = lax.scan(body, c0, xs)
+        return c
+
+    return f, [_f32(4, 64, 64), _f32(64, 64), _f32(64, 64)]
+
+
+def test_hoisted_scan_plan_verifies_clean():
+    """The hoist pass edits an already-optimized inner plan; its refreshed
+    opt_report must keep the recursive byte/peak accounting green."""
+    f, avals = _scan_with_invariant_gather(hoistable=True)
+    plan = _plan(f, *avals)
+    (scan,) = [s for s in plan.steps if s.op == "scan"]
+    # precondition: the hoist actually fired (body is reshard-free)
+    assert sum(1 for s in scan.inner.steps if s.kind == "reshard") == 0
+    rep = verify_plan(plan, strict=False)
+    assert rep.ok, rep.violations
+    # the inner report reflects the *edited* body, not the pre-hoist one
+    inner_rep = scan.inner.opt_report
+    assert inner_rep is not None
+    assert inner_rep.steps_after == len(scan.inner.steps)
+    from repro.core.plan_opt import whole_wire_bytes
+
+    assert inner_rep.wire_bytes_after == pytest.approx(
+        whole_wire_bytes(scan.inner))
+
+
+def test_stale_inner_plan_accounting_caught():
+    """Seeded regression: mutate an optimized inner plan's step list without
+    refreshing its report — exactly the pre-fix hoist bug — and the verifier
+    must flag it with the inner path."""
+    f, avals = _scan_with_invariant_gather(hoistable=False)
+    plan = _plan(f, *avals)
+    (scan,) = [s for s in plan.steps if s.op == "scan"]
+    inner = scan.inner
+    reshards = [i for i, s in enumerate(inner.steps) if s.kind == "reshard"]
+    assert reshards, "pinned reshard should remain in the body"
+    assert verify_plan(plan, strict=False).ok
+    del inner.steps[reshards[0]]  # a buggy pass dropping an inner step
+    rep = verify_plan(plan, strict=False)
+    assert not rep.ok
+    assert any(".inner." in v for v in rep.violations), rep.violations
