@@ -276,6 +276,35 @@ def _check_obs_cell(msgs, name, base, fresh):
                         f"longer free)")
 
 
+def _check_chaos_cell(msgs, name, base, fresh):
+    """Chaos-soak cell (launch/chaos.py): the seeded campaign must hold
+    every invariant (zero violations), fire and recover from every injected
+    event in a single restore pass, keep every mesh-changing re-solve
+    warm-started, and keep the warm evals strictly under the cold solve on
+    the final mesh.  ``recovery_ms_*`` are wall-clock — never guarded."""
+    if not fresh.get("ok"):
+        _fail(msgs, f"{name}: soak violated invariants: "
+                    f"{fresh.get('violations')}")
+    if fresh.get("recoveries", 0) < base.get("recoveries", 0):
+        _fail(msgs, f"{name}: recoveries {base['recoveries']} -> "
+                    f"{fresh['recoveries']} (an injected event stopped "
+                    f"triggering recovery)")
+    if fresh.get("restores") != fresh.get("recoveries"):
+        _fail(msgs, f"{name}: {fresh.get('restores')} restores for "
+                    f"{fresh.get('recoveries')} recoveries (want exactly "
+                    f"one restore pass each)")
+    if not fresh.get("single_pass"):
+        _fail(msgs, f"{name}: a recovery episode restored more than once")
+    if not fresh.get("warm_started_all"):
+        _fail(msgs, f"{name}: a mesh-changing re-solve ran cold")
+    if fresh.get("evals_warm_max", 0) >= fresh.get("evals_cold", 0):
+        _fail(msgs, f"{name}: warm evals {fresh.get('evals_warm_max')} not "
+                    f"fewer than cold {fresh.get('evals_cold')}")
+    if fresh.get("losses", 0) < fresh.get("steps", 0):
+        _fail(msgs, f"{name}: loss curve has {fresh.get('losses')} points "
+                    f"for {fresh.get('steps')} steps (not continuous)")
+
+
 def _check_metrics(msgs, base, fresh):
     """Unified metrics snapshot: the record must join every pre-existing
     telemetry surface (the PR 8 acceptance bar — cache hit rates, verifier
@@ -356,7 +385,8 @@ def compare(base: dict, fresh: dict):
                           ("pipeline_cells", _check_pipeline_cell),
                           ("elastic_cells", _check_elastic_cell),
                           ("guard_cells", _check_guard_cell),
-                          ("obs_cells", _check_obs_cell)):
+                          ("obs_cells", _check_obs_cell),
+                          ("chaos_cells", _check_chaos_cell)):
         base_cells = {c["name"]: c for c in base.get(kind, [])}
         fresh_cells = {c["name"]: c for c in fresh.get(kind, [])}
         for name, bc in base_cells.items():

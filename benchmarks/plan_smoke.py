@@ -863,6 +863,62 @@ def _obs_cells():
     return cells
 
 
+def _chaos_cells():
+    """Chaos-soak acceptance cell (launch/chaos.py): a seeded three-event
+    campaign — mesh shrink at step 3, NaN burst at step 7, regrow at step 11
+    (the 1-device lose=0/gain=0 edition: the full recovery machinery runs,
+    no extra devices needed) — soaked end-to-end through the elastic
+    coordinator with the invariant battery evaluated after the run.
+
+    Guarded (``guard._check_chaos_cell``): zero invariant violations, every
+    injected event fired and restored in a single pass, both mesh-changing
+    recoveries warm-started with strictly fewer evals than a cold solve on
+    the final mesh.  ``recovery_ms_*`` are wall-clock recovery latencies —
+    informational, never guarded."""
+    import tempfile
+
+    from repro import autoshard
+    from repro.launch import chaos
+    from repro.launch.elastic import sharding_problem
+
+    spec = chaos.CampaignSpec(seed=7, steps=14, ckpt_every=2, schedule=[
+        {"kind": "device_loss", "step": 3, "lose": 0},
+        {"kind": "nan_burst", "step": 7, "steps": 1},
+        {"kind": "device_return", "step": 11, "gain": 0},
+    ])
+    report = chaos.run_campaign(spec, tempfile.mkdtemp(prefix="bench_chaos_"))
+    warm_evals = [r["evals"] for r in report.recoveries if "evals" in r]
+    # cold reference on the final mesh, same solver budget as the campaign
+    cfg, st = chaos._default_model()
+    from repro.core.sharding import Mesh
+
+    mesh = Mesh.create((1, 1), ("data", "model"))
+    closed, baseline = sharding_problem(cfg, st, mesh, 4, 16)
+    cold = autoshard.solve_problem(
+        closed, mesh,
+        autoshard.AutoshardConfig(top_n=2, sa_steps=2, max_candidates=6),
+        baseline=baseline)
+    rms = report.recovery_ms or {}
+    return [{
+        "name": "chaos_soak_shrink_nan_regrow",
+        "seed": spec.seed, "steps": spec.steps,
+        "n_events": len(spec.schedule),
+        "ok": report.ok,
+        "violations": report.violations,
+        "recoveries": len(report.recoveries),
+        "restores": sum(1 for r in report.recoveries
+                        if "restored_from" in r),
+        "single_pass": all(ep["restores"] == 1 for ep in report.narrative),
+        "warm_started_all": all(
+            r.get("warm_started", True) for r in report.recoveries),
+        "evals_warm_max": max(warm_evals) if warm_evals else 0,
+        "evals_cold": cold.evals,
+        "losses": report.losses,
+        "recovery_ms_max": rms.get("max"),    # informational, never guarded
+        "recovery_ms_mean": rms.get("mean"),
+    }]
+
+
 def _cache_cell():
     import jax.numpy as jnp
 
@@ -928,6 +984,7 @@ def smoke_record() -> dict:
     rec["elastic_cells"] = _elastic_cells()
     rec["guard_cells"] = _guard_cells()
     rec["obs_cells"] = _obs_cells()
+    rec["chaos_cells"] = _chaos_cells()
     rec.update(_cache_cell())
     rec["lattice_telemetry"] = {
         "cells": grid_telemetry,

@@ -265,6 +265,54 @@ def metrics_table(path: str) -> str:
     return "\n".join(lines)
 
 
+RECOVERY_STATE_MACHINE = """\
+Single-pass combined recovery (`ElasticCoordinator._recover_combined`):
+coincident faults inside one `coincidence_window` are classified together
+and resolved with **exactly one** `restore_resharded` onto the *new* mesh.
+
+| fault class | coordinator action | restore path | control-lane events |
+|---|---|---|---|
+| `numerics` (NaN/inf, grad spike) | skip up to `rewind_after`, then rewind to last intact step; re-arm sentinel | same-mesh restore unless coincident with a mesh change | `numerics_fault`, `skip_step`, `rewind`, `restore`, `plan_swap` |
+| `device_loss` | shrink world, `derive_mesh`, warm re-solve via `remap_assignment` (DP degradation allowed) | `restore_resharded` onto the shrunk mesh | `device_loss`, `mesh_shrink`, `restore`, `plan_swap` |
+| `device_return` | grow world, `derive_mesh`, warm re-solve via `expand_assignment` (axis lifting) | `restore_resharded` onto the grown mesh | `device_return`, `mesh_grow`, `restore`, `plan_swap` |
+| `corrupt_checkpoint` (discovered mid-restore) | fall back to newest older step that verifies, inside the same pass | fallback restore; replayed steps re-save over the bad dir | `ckpt_fallback`, `restore`, `plan_swap` |
+| `crash_save` (torn/failed save) | resume from last durable step; tmp-dir rename keeps partial saves invisible | full restore on resume | `crash_save(resumed)`, `restore`, `plan_swap` |
+| any ≥2 of the above | one classification pass, one restore | single `restore_resharded` onto the final mesh | the per-class events plus one `combined_recovery` |
+
+Provenance for every pass lands in the checkpoint manifest `extra`
+(classes, source step, mesh) and the control lane (`repro.obs.trace`);
+`recovery_narrative(events)` folds the lane back into episodes, and the
+chaos harness (`python -m repro.launch.chaos`) asserts
+`restores == restoring recoveries` after every seeded campaign."""
+
+
+def elastic_table(path: str) -> str:
+    """§Elastic: the recovery state machine plus the chaos-soak cells from
+    the bench artifact (seeded campaign, invariant battery, warm-vs-cold
+    re-solve evals, recovery wall-clock)."""
+    lines = [RECOVERY_STATE_MACHINE]
+    if not os.path.exists(path):
+        return "\n".join(lines)
+    rec = json.load(open(path))
+    cells = rec.get("chaos_cells")
+    if not cells:
+        return "\n".join(lines)
+    lines.append("")
+    lines.append("| soak | seed | steps | events | recoveries | restores "
+                 "| warm evals | cold evals | violations | recovery ms "
+                 "(mean/max) |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        lines.append(
+            f"| {c['name']} | {c['seed']} | {c['steps']} | {c['n_events']} "
+            f"| {c['recoveries']} | {c['restores']} "
+            f"| {c['evals_warm_max']} | {c['evals_cold']} "
+            f"| {len(c.get('violations', []))} "
+            f"| {c.get('recovery_ms_mean', 0):.0f}/"
+            f"{c.get('recovery_ms_max', 0):.0f} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="artifacts/dryrun")
@@ -283,6 +331,8 @@ def main():
     print(trace_table(args.plan))
     print("\n## §Metrics (unified registry snapshot)\n")
     print(metrics_table(args.plan))
+    print("\n## §Elastic (recovery state machine + chaos soaks)\n")
+    print(elastic_table(args.plan))
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from .api import (
     AutoshardResult,
     assignment_from_json,
     clear_assignment_cache,
+    expand_assignment,
     load,
     registry_pipeline_problem,
     registry_problem,
@@ -44,7 +45,8 @@ from .space import (
 __all__ = [
     "AutoshardConfig", "AutoshardResult", "Evaluation", "Evaluator",
     "SearchResult", "assignment_bytes", "assignment_from_json",
-    "candidate_shardings", "clear_assignment_cache", "fits_budget",
+    "candidate_shardings", "clear_assignment_cache", "expand_assignment",
+    "fits_budget",
     "load", "local_bytes", "pipeline_decisions",
     "registry_pipeline_problem", "registry_problem", "remap_assignment",
     "restrict_assignment", "search",

@@ -198,6 +198,44 @@ def restrict_assignment(assignment: Sequence[MaybeSharding], mesh: Mesh,
     return out
 
 
+def expand_assignment(assignment: Sequence[MaybeSharding], mesh: Mesh,
+                      shapes: Sequence[Sequence[int]],
+                      ) -> List[MaybeSharding]:
+    """Lift a smaller-mesh assignment onto a *grown* ``mesh`` — the regrow
+    counterpart of :func:`restrict_assignment`.
+
+    Projection by name (:func:`remap_assignment`) keeps every axis that still
+    divides, but an assignment that was shrunk or DP-degraded has *lost*
+    structure the grown mesh could use: mesh axes it no longer references.
+    This pass re-adds them greedily — for each tensor, each unused mesh axis
+    of size > 1 is appended to the largest dim where divisibility holds — so
+    a post-regrow warm start proposes model parallelism again instead of
+    replicating the returned devices.  The search then refines from it
+    (warm-started: no greedy sweep, strictly fewer evals than cold)."""
+    out = remap_assignment(assignment, mesh, shapes)
+    for i, (s, shape) in enumerate(zip(out, shapes)):
+        if s is None:
+            continue
+        shape = tuple(shape)
+        used = set(s.sharded_axes)
+        free = [a for a in mesh.axis_names
+                if a not in used and mesh.axis_size(a) > 1]
+        if not free:
+            continue
+        dm = [list(axes) for axes in s.dims_mapping]
+        for a in free:
+            best = None
+            for d in sorted(range(len(shape)), key=lambda d: -shape[d]):
+                n = int(np.prod([mesh.axis_size(x) for x in dm[d]] or [1]))
+                if shape[d] % (n * mesh.axis_size(a)) == 0:
+                    best = d
+                    break
+            if best is not None:
+                dm[best].append(a)
+        out[i] = Sharding(mesh, tuple(tuple(x) for x in dm))
+    return out
+
+
 # ---------------------------------------------------------------------------------
 # jaxpr-level solve + the process-level assignment cache
 # ---------------------------------------------------------------------------------

@@ -1895,6 +1895,18 @@ class StateReshardPlan:
             peak_bytes=peak, steps=len(self.leaves),
         )
 
+    def source_specs(self) -> Dict[str, "Sharding"]:
+        """Per-leaf source shardings (the checkpoint's layout).  Together
+        with :meth:`target_specs` this is the plan's topology contract: the
+        elastic coordinator replays one plan per recovery — shrink *or*
+        regrow — and the pair documents exactly which layout transition that
+        replay performs (the manifests only record the source side)."""
+        return {l.key: l.src for l in self.leaves}
+
+    def target_specs(self) -> Dict[str, "Sharding"]:
+        """Per-leaf destination shardings (the new mesh's layout)."""
+        return {l.key: l.dst for l in self.leaves}
+
     def report(self) -> Dict:
         cost = self.cost()
         return {

@@ -32,16 +32,19 @@ from .metrics import (
     snapshot,
 )
 from .trace import (
+    CONTROL_EVENT_KINDS,
     TraceConfig,
     Tracer,
     control_event,
     control_events,
     export_control_trace,
+    recovery_narrative,
     reset_control_events,
     validate_trace_events,
 )
 
 __all__ = [
+    "CONTROL_EVENT_KINDS",
     "CalibrationReport",
     "MetricsRegistry",
     "TraceConfig",
@@ -50,6 +53,7 @@ __all__ = [
     "control_event",
     "control_events",
     "export_control_trace",
+    "recovery_narrative",
     "registry",
     "reset_control_events",
     "snapshot",

@@ -33,9 +33,11 @@ training run).
 from __future__ import annotations
 
 import atexit
+import contextlib
 import json
 import os
 import threading
+import time
 from typing import Callable, Dict, List, Optional
 
 MAX_SAMPLES = 65536  # histogram raw-sample cap; thinned 2:1 when exceeded
@@ -283,6 +285,19 @@ def set_gauge(name: str, v: float) -> None:
 
 def observe(name: str, v: float) -> None:
     _REGISTRY.observe(name, v)
+
+
+@contextlib.contextmanager
+def timed(name: str):
+    """Time a block into histogram ``name`` (milliseconds).  Used by the
+    elastic coordinator to price recovery passes (``elastic.recovery_ms``)
+    and by the chaos harness for per-event recovery latency — the wall-clock
+    counterpart of the modeled ``reshard_s`` in the restore report."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        _REGISTRY.observe(name, (time.perf_counter() - t0) * 1e3)
 
 
 def snapshot(include_sources: bool = True) -> Dict:

@@ -280,10 +280,23 @@ def _lane_metadata() -> List[Dict[str, Any]]:
 _CONTROL_LOCK = threading.Lock()
 _CONTROL_EVENTS: List[Dict[str, Any]] = []
 
+# Every control-event kind the elastic/guard/chaos machinery emits.  The set
+# is advisory (control_event stays permissive for forward compatibility) but
+# narrative reconstruction and the chaos invariants key off these names.
+CONTROL_EVENT_KINDS = frozenset({
+    "numerics_fault", "skip_step", "rewind",          # guard (train/loop)
+    "device_loss", "device_return",                   # world membership
+    "mesh_shrink", "mesh_grow",                       # mesh re-derivation
+    "combined_recovery", "restore", "ckpt_fallback",  # single-pass recovery
+    "plan_swap", "crash_save", "straggler",           # plan/save/watchdog
+    "ckpt_save",                                      # committed checkpoints
+    "chaos_event",                                    # injected campaign event
+})
+
 
 def control_event(name: str, **args: Any) -> Dict[str, Any]:
-    """Record an instant event (fault, skip_step, rewind, mesh_shrink,
-    plan_swap, device_loss, crash_save) on the control lane."""
+    """Record an instant event (see :data:`CONTROL_EVENT_KINDS`) on the
+    control lane."""
     ev = {"name": name, "ts": _now_us(), "args": dict(args)}
     with _CONTROL_LOCK:
         _CONTROL_EVENTS.append(ev)
@@ -317,6 +330,80 @@ def export_control_trace() -> Dict[str, Any]:
     by runs that never enabled step tracing but still want the elastic
     story)."""
     return {"traceEvents": _lane_metadata() + control_chrome_events()}
+
+
+# Recovery-*action* instants that open an episode.  Raw fault instants
+# (numerics_fault / skip_step) deliberately do not: a skip-only burst that
+# never escalates is handled entirely in-jit and triggers no recovery, so it
+# must not bleed into a later unrelated episode.
+_EPISODE_OPENERS = frozenset(
+    {"device_loss", "device_return", "crash_save", "rewind",
+     "combined_recovery"})
+
+
+def recovery_narrative(events: Sequence[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Reconstruct recovery episodes purely from control events.
+
+    ``events`` is either the raw :func:`control_events` list or the instant
+    (``ph == "i"``) events of an exported Chrome trace — both carry
+    ``name``/``ts``/``args``.  Returns one dict per episode, in time order::
+
+        {"classes": [fault classes handled],    # e.g. ["device_loss", "numerics"]
+         "step": the fault step the episode opened at,
+         "mesh": {"from": [...], "to": [...]} or None (mesh unchanged),
+         "restore_steps": [manifest steps restored from],
+         "restores": how many restore passes ran,
+         "events": [control-event names, in order]}
+
+    An episode opens at a recovery *action* (device loss/return, rewind,
+    combined recovery, crash-mid-save) and closes at the ``plan_swap`` that
+    resumes training (a crash-save resume closes at its own instant — no plan
+    changes).  This is the machine-checkable form of "the trace tells the
+    whole story": the chaos harness asserts each injected fault maps onto an
+    episode with the expected classes, and the combined-recovery drill
+    asserts coincident faults land in **one** episode with **one** restore.
+    """
+    inst = sorted(
+        (e for e in events if e.get("ph", "i") == "i"),
+        key=lambda e: e.get("ts", 0.0))
+    episodes: List[Dict[str, Any]] = []
+    cur: Optional[Dict[str, Any]] = None
+    for e in inst:
+        name = e["name"]
+        args = e.get("args", {})
+        if name not in CONTROL_EVENT_KINDS:
+            continue
+        if cur is None:
+            if name not in _EPISODE_OPENERS:
+                continue
+            cur = {"classes": [], "step": args.get("step"), "mesh": None,
+                   "restore_steps": [], "restores": 0, "events": []}
+        cur["events"].append(name)
+        if name in ("device_loss", "device_return", "crash_save"):
+            if name not in cur["classes"]:
+                cur["classes"].append(name)
+        elif name == "rewind" and "numerics" not in cur["classes"]:
+            cur["classes"].append("numerics")
+        elif name == "combined_recovery":
+            for c in args.get("classes", []):
+                if c not in cur["classes"]:
+                    cur["classes"].append(c)
+        elif name in ("mesh_shrink", "mesh_grow"):
+            cur["mesh"] = {"from": args.get("mesh_from"),
+                           "to": args.get("mesh_to")}
+        elif name == "restore":
+            cur["restores"] += 1
+            if args.get("step") is not None:
+                cur["restore_steps"].append(args["step"])
+        elif name == "ckpt_fallback" and "corrupt_checkpoint" not in cur["classes"]:
+            cur["classes"].append("corrupt_checkpoint")
+        if name == "plan_swap" or (name == "crash_save"
+                                   and args.get("resumed")):
+            episodes.append(cur)
+            cur = None
+    if cur is not None:
+        episodes.append(cur)
+    return episodes
 
 
 # -- schema validation --------------------------------------------------------

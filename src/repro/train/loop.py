@@ -274,6 +274,19 @@ class TrainLoop:
             extra.update(self.hooks["ckpt_extra"]() or {})
         return extra
 
+    def _save(self, save_step: int, state, cursor_step: int,
+              prune: bool = True) -> None:
+        """One checkpoint save + retention pass, with a ``ckpt_save`` control
+        instant so an exported trace shows the restore *points* alongside the
+        faults and restores that use them (the chaos invariant "data cursor
+        monotone across saves" is checked off these events)."""
+        ckpt_lib.save(self.tc.ckpt_dir, save_step, state,
+                      extra=self._ckpt_extra(cursor_step))
+        control_event("ckpt_save", step=save_step,
+                      data_cursor=cursor_step + 1)
+        if prune:
+            ckpt_lib.cleanup(self.tc.ckpt_dir, self.tc.keep_ckpts)
+
     def _restore_or_init(self):
         """Returns ``(state, start_step)``; start comes from the manifest's
         data cursor (not the state leaf), so the pipeline resumes exactly
@@ -379,9 +392,7 @@ class TrainLoop:
                         + ", ".join(f"{f['leaf']}[{f['kind']}]"
                                     for f in faults[:4]))
                 if self.tc.ckpt_dir and (step + 1) % self.tc.ckpt_every == 0:
-                    ckpt_lib.save(self.tc.ckpt_dir, step + 1, state,
-                                  extra=self._ckpt_extra(step))
-                    ckpt_lib.cleanup(self.tc.ckpt_dir, self.tc.keep_ckpts)
+                    self._save(step + 1, state, step)
                 continue
             self._consecutive_faults = 0
             self.step_times.append(dt)
@@ -398,12 +409,9 @@ class TrainLoop:
                     if "straggler" in self.hooks:
                         self.hooks["straggler"](step, dt, med)
             if self.tc.ckpt_dir and (step + 1) % self.tc.ckpt_every == 0:
-                ckpt_lib.save(self.tc.ckpt_dir, step + 1, state,
-                              extra=self._ckpt_extra(step))
-                ckpt_lib.cleanup(self.tc.ckpt_dir, self.tc.keep_ckpts)
+                self._save(step + 1, state, step)
             if "log" in self.hooks and step % self.tc.log_every == 0:
                 self.hooks["log"](f"step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
         if self.tc.ckpt_dir:
-            ckpt_lib.save(self.tc.ckpt_dir, self.tc.steps, state,
-                          extra=self._ckpt_extra(self.tc.steps - 1))
+            self._save(self.tc.steps, state, self.tc.steps - 1, prune=False)
         return state, losses

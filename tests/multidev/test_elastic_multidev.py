@@ -19,6 +19,7 @@ from repro.launch.elastic import (
     ElasticCoordinator,
     FaultInjector,
     derive_mesh,
+    sharding_problem,
     specs_by_key,
     state_partition_specs,
 )
@@ -68,6 +69,16 @@ def test_reshard_program_restore_bit_identical(tmp_path):
     for a, b, r in zip(flat_a, flat_b, flat_ref):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # sharded restore I/O (per-shard byte-range reads) is bit-identical too,
+    # and reads strictly less than leaves × full-size (shards share slices)
+    shard_io, _, rep = ckpt.restore_resharded(
+        d, params, small_mesh, small_jmesh, target_specs=pspecs,
+        sharded_io=True)
+    for a, r in zip(jax.tree_util.tree_leaves(shard_io), flat_ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+    assert rep["sharded_io"] is True
+    assert rep["io"]["unique_slices"] >= rep["io"]["leaves"]
 
 
 def test_device_loss_recovers_on_smaller_mesh_in_process(tmp_path):
@@ -156,3 +167,93 @@ def test_fail_at_step_restart_on_smaller_mesh(tmp_path):
                            rng=jax.random.PRNGKey(0)).run()
     got = [combined[s] for s in range(steps)]
     assert_close(got, ref, "loss_curve")
+
+
+def test_shrink_train_regrow_drill_continuous_curve(tmp_path):
+    """Tentpole drill: 8 devices → lose 4 at step 4 (mesh (4,2)→(2,2)) →
+    train → regain 4 at step 9 (regrow to (4,2)) → train to completion.
+    Both re-solves warm-start (the regrow via expand_assignment), the regrow
+    costs strictly fewer evals than a cold solve on the grown mesh, and the
+    loss curve is continuous — one loss per step, tracking the uninterrupted
+    8-device run within partitioning tolerance."""
+    from repro import autoshard, obs
+
+    obs.reset_control_events()
+    steps = 14
+    opt = get_optimizer("adafactor", lr=0.05)
+    tc = TrainConfig(steps=steps, ckpt_dir=str(tmp_path / "ck"),
+                     ckpt_every=2, keep_ckpts=3, log_every=1000)
+    pipe = TokenPipeline(DataConfig(CFG.vocab_size, 16, 8, seed=7))
+    inj = FaultInjector(schedule=[
+        {"kind": "device_loss", "step": 4, "lose": 4},
+        {"kind": "device_return", "step": 9, "gain": 4},
+    ])
+    cfgs = autoshard.AutoshardConfig(top_n=2, sa_steps=2, max_candidates=6)
+    co = ElasticCoordinator(CFG, st, opt, tc, pipe, model_parallel=2,
+                            injector=inj, autoshard_config=cfgs,
+                            max_recoveries=3)
+    assert co.mesh.shape == (4, 2)
+    state, losses = co.run()
+    assert co.mesh.shape == (4, 2)  # regrown back to the full world
+    assert len(losses) == steps     # continuous: one loss per step
+    shrink, regrow = co.recoveries
+    assert shrink["classes"] == ["device_loss"]
+    assert shrink["mesh"] == {"from": [4, 2], "to": [2, 2]}
+    assert regrow["classes"] == ["device_return"]
+    assert regrow["mesh"] == {"from": [2, 2], "to": [4, 2]}
+    assert shrink["warm_started"] and regrow["warm_started"]
+    assert regrow["reshard"]["leaves"] > 0
+
+    # the regrow warm start beats a cold solve on the grown mesh
+    closed, baseline = sharding_problem(CFG, st, co.mesh,
+                                        pipe.local_batch, 16)
+    cold = autoshard.solve_problem(closed, co.mesh, cfgs, baseline=baseline)
+    assert regrow["evals"] < cold.evals
+
+    names = [e["name"] for e in obs.control_events()]
+    assert "mesh_shrink" in names and "mesh_grow" in names
+    assert names.count("restore") == 2
+
+    # uninterrupted 8-device reference
+    tc_ref = TrainConfig(steps=steps, ckpt_dir=str(tmp_path / "ref"),
+                         ckpt_every=2, keep_ckpts=3, log_every=1000)
+    pipe_ref = TokenPipeline(DataConfig(CFG.vocab_size, 16, 8, seed=7))
+    _, jmesh_full = derive_mesh(model_parallel=2)
+    with set_mesh(jmesh_full):
+        _, ref = TrainLoop(CFG, st, opt, tc_ref, pipe_ref,
+                           rng=jax.random.PRNGKey(0)).run()
+    assert_close(losses, ref, "loss_curve")
+
+
+def test_combined_nan_and_device_loss_single_pass_multidev(tmp_path):
+    """Coincident NaN burst + device loss on the real 8-device mesh: one
+    classification, one mesh shrink, exactly one reshard-restore."""
+    from repro import autoshard, obs
+    from repro.core.plan import GuardConfig
+
+    obs.reset_control_events()
+    steps = 12
+    opt = get_optimizer("adafactor", lr=0.05)
+    tc = TrainConfig(steps=steps, ckpt_dir=str(tmp_path / "ck"),
+                     ckpt_every=2, keep_ckpts=3, log_every=1000,
+                     guard=GuardConfig(rewind_after=2))
+    pipe = TokenPipeline(DataConfig(CFG.vocab_size, 16, 8, seed=7))
+    inj = FaultInjector(nan_at_step=5, numeric_steps=2,
+                        device_loss_at=6, lose=4)
+    co = ElasticCoordinator(
+        CFG, st, opt, tc, pipe, model_parallel=2, injector=inj,
+        autoshard_config=autoshard.AutoshardConfig(
+            top_n=2, sa_steps=2, max_candidates=6),
+        max_recoveries=2)
+    state, losses = co.run()
+    assert len(co.recoveries) == 1
+    ev = co.recoveries[0]
+    assert ev["classes"] == ["device_loss", "numerics"]
+    assert ev["mesh"] == {"from": [4, 2], "to": [2, 2]}
+    assert "restored_from" in ev
+    events = obs.control_events()
+    names = [e["name"] for e in events]
+    assert names.count("restore") == 1
+    assert names.count("combined_recovery") == 1
+    narr = obs.recovery_narrative(events)
+    assert len(narr) == 1 and narr[0]["restores"] == 1

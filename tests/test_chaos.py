@@ -1,0 +1,93 @@
+"""Chaos soak harness: seed-deterministic campaign generation, JSON
+round-trip, one real single-device soak with the full invariant battery, and
+the replay-identical contract.  The heavier multi-event soaks run via the
+CLI / bench cell (``python -m repro.launch.chaos``)."""
+import json
+
+from repro.launch.chaos import (
+    DEFAULT_KINDS,
+    CampaignSpec,
+    generate_campaign,
+    replay_identical,
+    run_campaign,
+)
+
+
+def test_generate_campaign_is_seed_deterministic():
+    a = generate_campaign(11, steps=30, n_events=5)
+    b = generate_campaign(11, steps=30, n_events=5)
+    assert a.schedule == b.schedule
+    c = generate_campaign(12, steps=30, n_events=5)
+    assert [e["kind"] for e in a.schedule] != [e["kind"] for e in c.schedule]
+    # events are spaced so every event has an intact checkpoint behind it
+    steps = [e["step"] for e in a.schedule]
+    assert steps == sorted(steps)
+    assert all(t2 - t1 >= a.ckpt_every + 2 for t1, t2 in zip(steps, steps[1:]))
+
+
+def test_generate_campaign_legality_rules():
+    # a return is only legal once devices are out; straggler fires once
+    for seed in range(24):
+        spec = generate_campaign(seed, steps=80, n_events=10, world=8)
+        out = 0
+        stragglers = 0
+        for ev in spec.schedule:
+            assert ev["kind"] in DEFAULT_KINDS
+            if ev["kind"] == "device_loss":
+                out += ev["lose"]
+            elif ev["kind"] == "device_return":
+                assert out > 0, f"seed {seed}: return with no devices out"
+                out -= ev["gain"]
+                assert out >= 0
+            elif ev["kind"] == "straggler":
+                stragglers += 1
+        assert stragglers <= 1
+
+
+def test_campaign_spec_json_round_trip(tmp_path):
+    spec = generate_campaign(7, steps=20, n_events=4, world=4)
+    p = str(tmp_path / "campaign.json")
+    spec.to_json(p)
+    again = CampaignSpec.from_json(p)
+    assert again == spec
+    with open(p) as f:
+        assert json.load(f)["version"] == 1
+
+
+def test_soak_holds_invariants_and_replays(tmp_path):
+    """Acceptance drill: a seeded 3-event soak (shrink → NaN burst → regrow,
+    the 1-device lose=0/gain=0 edition) finishes with zero invariant
+    violations, and the identical spec replays to the identical deterministic
+    control-event signature."""
+    spec = CampaignSpec(seed=42, steps=14, ckpt_every=2, schedule=[
+        {"kind": "device_loss", "step": 3, "lose": 0},
+        {"kind": "nan_burst", "step": 7, "steps": 1},
+        {"kind": "device_return", "step": 11, "gain": 0},
+    ])
+    same, a, b = replay_identical(spec, str(tmp_path))
+    assert a.violations == []
+    assert a.losses == 14
+    assert same, "replay produced a different control-event signature"
+    # the three injections each produced a recovery, single restore each
+    assert len(a.recoveries) == 3
+    assert all("restored_from" in r for r in a.recoveries)
+    assert [ep["restores"] for ep in a.narrative] == [1, 1, 1]
+    # spec stayed pristine (the injector annotates a deep copy)
+    assert all("corrupted_step" not in e for e in spec.schedule)
+
+
+def test_soak_flags_deliberate_corruption_without_violations(tmp_path):
+    """manifest_corrupt immediately before a rewind: the restore must fall
+    back past the (deliberately) corrupted newest step in the same single
+    pass, the corrupted step is known from the campaign annotations, and the
+    invariant battery still reports a clean soak."""
+    spec = CampaignSpec(seed=1, steps=12, ckpt_every=2, schedule=[
+        {"kind": "manifest_corrupt", "step": 7},
+        {"kind": "nan_burst", "step": 7, "steps": 1},
+    ])
+    report = run_campaign(spec, str(tmp_path))
+    assert report.violations == []
+    # the rewind at 7 had to fall back past the corrupted newest step
+    rec = [r for r in report.recoveries if "restored_from" in r]
+    assert rec and any(r.get("fell_back_from") for r in rec)
+    assert any("corrupt_checkpoint" in r["classes"] for r in rec)

@@ -218,3 +218,197 @@ def test_restore_resharded_fallback_and_strict(tmp_path):
     _, _, report = ckpt.restore_resharded(d, target, mesh, jmesh, step=1,
                                           strict=False)
     assert report["missing"] == ["params/extra"]
+
+
+# -- sharded slice I/O ---------------------------------------------------------
+
+def test_read_npy_slice_matches_numpy(tmp_path):
+    """Byte-range slice reads agree with in-memory slicing across dim
+    orders, partial dims, and dtypes — no full-file load."""
+    for arr in (
+        np.arange(4 * 6 * 8, dtype=np.float32).reshape(4, 6, 8),
+        np.arange(12, dtype=np.int32).reshape(3, 4),
+        np.arange(7, dtype=np.float64),
+        np.asarray(5.0, np.float32),
+    ):
+        p = str(tmp_path / "a.npy")
+        np.save(p, arr)
+        idx = tuple(slice(0, max(n // 2, 1)) for n in arr.shape)
+        stats = {}
+        got = ckpt.read_npy_slice(p, idx, stats=stats)
+        np.testing.assert_array_equal(got, arr[idx] if arr.ndim else arr)
+        if arr.ndim:
+            assert stats["bytes_read"] == got.nbytes
+            assert stats["bytes_read"] < arr.nbytes or got.nbytes == arr.nbytes
+
+
+def test_read_npy_slice_detects_torn_write_and_header_mismatch(tmp_path):
+    arr = np.arange(24, dtype=np.float32).reshape(4, 6)
+    p = str(tmp_path / "a.npy")
+    np.save(p, arr)
+    # torn write: payload shorter than the header promises
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) - 8)
+    with pytest.raises(ValueError, match="torn write"):
+        ckpt.read_npy_slice(p, (slice(0, 2), slice(0, 6)))
+    # header/manifest disagreement is caught before any payload read
+    np.save(p, arr)
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.read_npy_slice(p, (slice(0, 2), slice(0, 6)),
+                            expected={"shape": [8, 6], "dtype": "float32"})
+
+
+def test_restore_resharded_sharded_io_bit_identical(tmp_path):
+    """sharded_io=True restores the same values as the full-read path and
+    reports per-slice I/O stats (multi-process simulation: each shard of the
+    target sharding is fetched by an independent byte-range read)."""
+    from repro.core.compat import make_jax_mesh
+
+    d = str(tmp_path / "ck")
+    mesh = Mesh.create((1, 1), ("data", "model"))
+    jmesh = make_jax_mesh((1, 1), ("data", "model"))
+    specs = {"params/w": mesh_split(2, mesh, ["data", "model"])}
+    ckpt.save(d, 1, STATE, specs=specs)
+    target = jax.tree_util.tree_map(jnp.asarray, STATE)
+    full, _, _ = ckpt.restore_resharded(d, target, mesh, jmesh)
+    shard, _, report = ckpt.restore_resharded(d, target, mesh, jmesh,
+                                              sharded_io=True)
+    for a, b in zip(jax.tree_util.tree_leaves(full),
+                    jax.tree_util.tree_leaves(shard)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert report["sharded_io"] is True
+    io = report["io"]
+    assert io["leaves"] == 3 and io["reads"] >= 3
+    assert io["bytes_read"] == io["full_bytes"]  # 1 device: full coverage
+
+
+def test_sharded_io_corruption_falls_back_like_full_read(tmp_path):
+    """A bit-flipped leaf under sharded_io still raises the typed error and
+    restore_resharded falls back to the previous intact step."""
+    from repro.core.compat import make_jax_mesh
+
+    d = str(tmp_path / "ck")
+    mesh = Mesh.create((1, 1), ("data", "model"))
+    jmesh = make_jax_mesh((1, 1), ("data", "model"))
+    ckpt.save(d, 1, STATE)
+    ckpt.save(d, 2, STATE)
+    _corrupt_leaf(d, 2)
+    _, manifest, report = ckpt.restore_resharded(d, STATE, mesh, jmesh,
+                                                 sharded_io=True)
+    assert report["step"] == 1 and report["fell_back_from"] == [2]
+    assert report["sharded_io"] is True
+
+
+def test_sharded_io_transient_errors_retried(tmp_path, monkeypatch):
+    """Per-slice reads ride the same retry/backoff as full reads."""
+    arr = np.arange(24, dtype=np.float32).reshape(4, 6)
+    p = str(tmp_path / "a.npy")
+    np.save(p, arr)
+    monkeypatch.setattr(ckpt, "_IO_BACKOFF_S", 0.001)
+    import builtins
+    real_open = builtins.open
+    fails = {"n": 2}
+
+    def flaky(path, mode="r", *a, **kw):
+        if str(path) == p and "b" in mode and fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+        return real_open(path, mode, *a, **kw)
+
+    monkeypatch.setattr(builtins, "open", flaky)
+    got = ckpt.read_npy_slice(p, (slice(0, 2), slice(0, 6)))
+    np.testing.assert_array_equal(got, arr[:2])
+    assert fails["n"] == 0
+
+
+# -- corruption fuzz -----------------------------------------------------------
+
+def test_fuzz_truncated_leaf_is_typed_and_falls_back(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE)
+    ckpt.save(d, 2, STATE)
+    p = os.path.join(d, "step_00000002", "params__w.npy")
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) // 2)
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(d, STATE, step=2)
+    _, manifest = ckpt.restore(d, STATE)
+    assert manifest["step"] == 1
+
+
+def test_fuzz_manifest_self_checksum_catches_stale_edit(tmp_path):
+    """A manifest whose bytes were edited after commit (bit-flip / stale
+    rewrite) fails its self-checksum — typed error on pinned restore, silent
+    fallback on newest-first."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE)
+    ckpt.save(d, 2, STATE)
+    p = os.path.join(d, "step_00000002", "manifest.json")
+    with open(p, "r+b") as f:
+        data = bytearray(f.read())
+        data[len(data) // 2] ^= 0xFF
+        f.seek(0)
+        f.write(bytes(data))
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(d, STATE, step=2)
+    _, manifest = ckpt.restore(d, STATE)
+    assert manifest["step"] == 1
+    assert not ckpt.verify_step(d, 2)["ok"]
+    assert ckpt.verify_step(d, 1)["ok"]
+
+
+def test_fuzz_torn_tmp_rename_is_invisible(tmp_path):
+    """A half-written .tmp- dir (no manifest commit) never counts as a step
+    and never corrupts candidate selection."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, STATE)
+    tmp = os.path.join(d, ".tmp-step_00000002-zzz")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "params__w.npy"), "wb") as f:
+        f.write(b"\x93NUMPY garbage")
+    assert ckpt.intact_steps(d) == [1]
+    _, manifest = ckpt.restore(d, STATE)
+    assert manifest["step"] == 1
+    ckpt.cleanup(d, keep=3, remove_tmp=True)
+    assert not os.path.exists(tmp)
+
+
+def test_verify_cli_exit_codes(tmp_path):
+    import subprocess
+    import sys
+
+    d = str(tmp_path / "ck")
+    env = dict(os.environ, PYTHONPATH="src")
+    run = lambda *a: subprocess.run(
+        [sys.executable, "-m", "repro.train.checkpoint", *a],
+        capture_output=True, text=True, env=env, cwd="/root/repo").returncode
+    assert run() == 2                      # usage
+    assert run("verify", d) == 1           # empty dir
+    ckpt.save(d, 1, STATE)
+    assert run("verify", d) == 0           # intact
+    _corrupt_leaf(d, 1)
+    assert run("verify", d) == 1           # corrupt
+    assert run("verify", d, "--step", "1") == 1
+
+
+# -- retention -----------------------------------------------------------------
+
+def test_cleanup_never_drops_newest_verified_step(tmp_path):
+    """keep-last-K retention must not GC the only restorable step: when the
+    newest steps are corrupt, the most recent *verifying* step survives even
+    outside the keep window."""
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4):
+        ckpt.save(d, s, STATE)
+    _corrupt_leaf(d, 3)
+    _corrupt_leaf(d, 4)
+    ckpt.cleanup(d, keep=2)
+    assert ckpt.intact_steps(d) == [2, 3, 4]  # 2 protected: newest verified
+    assert ckpt.verify_step(d, 2)["ok"]
+    # protect_verified=False restores the plain window semantics
+    for s in (5, 6):
+        ckpt.save(d, s, STATE)
+    _corrupt_leaf(d, 5)
+    _corrupt_leaf(d, 6)
+    ckpt.cleanup(d, keep=2, protect_verified=False)
+    assert ckpt.intact_steps(d) == [5, 6]

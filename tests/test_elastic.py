@@ -219,3 +219,118 @@ def test_recovery_story_reconstructable_from_trace(tmp_path):
     snap = obs.snapshot()
     assert snap["counters"]["train.guard.faults"] >= 2
     assert snap["counters"]["train.guard.rewinds"] >= 1
+
+
+def test_expand_assignment_regrow_warm_fewer_evals():
+    """Regrow counterpart of the shrink warm start: a DP-only (2,1)
+    assignment (the post-shrink / degraded shape — model axis collapsed)
+    lifts onto (2,4) via expand_assignment, which re-proposes the freed
+    model axis instead of merely name-projecting (remap would leave every
+    leaf DP-only forever), and the warm solve costs strictly fewer evals."""
+    small = Mesh.create((2, 1), ("data", "model"))
+    closed_s, base_s = sharding_problem(TINY, st, small, 4, 16)
+    shapes_s = [tuple(v.aval.shape) for v in closed_s.jaxpr.invars]
+    # the DP-only restriction is exactly what a degraded coordinator dumps
+    prior = autoshard.restrict_assignment(base_s, small, shapes_s)
+
+    big = Mesh.create((2, 4), ("data", "model"))
+    closed_b, base_b = sharding_problem(TINY, st, big, 4, 16)
+    shapes = [tuple(v.aval.shape) for v in closed_b.jaxpr.invars]
+    warm = autoshard.expand_assignment(prior, big, shapes)
+    remap = autoshard.remap_assignment(prior, big, shapes)
+    dms = lambda a: [None if s is None else s.dims_mapping for s in a]
+    assert dms(warm) != dms(remap)  # the lift re-proposed freed capacity
+    warm_res = autoshard.solve_problem(closed_b, big, CHEAP, baseline=base_b,
+                                       warm_start=warm)
+    cold_res = autoshard.solve_problem(closed_b, big, CHEAP, baseline=base_b)
+    assert warm_res.warm_started
+    assert warm_res.evals < cold_res.evals
+
+
+def test_schedule_json_round_trip_and_validation(tmp_path):
+    sched = [{"kind": "device_loss", "step": 3, "lose": 0},
+             {"kind": "nan_burst", "step": 7, "steps": 1}]
+    inj = FaultInjector(schedule=sched)
+    p = str(tmp_path / "campaign.json")
+    doc = inj.dump_schedule(p)
+    assert doc["version"] == 1
+    assert FaultInjector.load_schedule(p).schedule == sched
+    assert FaultInjector.load_schedule(doc).schedule == sched
+    assert FaultInjector.load_schedule(sched).schedule == sched
+    with pytest.raises(ValueError, match="unknown schedule"):
+        FaultInjector(schedule=[{"kind": "meteor", "step": 1}])
+    with pytest.raises(ValueError, match="missing step"):
+        FaultInjector(schedule=[{"kind": "nan_burst"}])
+
+
+def test_shrink_then_regrow_drill_continuous_curve(tmp_path):
+    """Tentpole drill (1-device edition; the 8-device mesh-shape version is
+    in tests/multidev): schedule-driven shrink → train → regrow → train,
+    both recoveries warm-started, one restore each, continuous loss curve,
+    and the whole campaign reconstructable from the exported trace alone."""
+    from repro import obs
+
+    obs.reset_control_events()
+    sched = [{"kind": "device_loss", "step": 3, "lose": 0},
+             {"kind": "device_return", "step": 7, "gain": 0}]
+    inj = FaultInjector(schedule=sched)
+    co = make_coordinator(tmp_path, steps=12, injector=inj, max_recoveries=3)
+    state, losses = co.run()
+    assert len(losses) == 12  # one loss per step, continuous across both
+    assert [r["classes"] for r in co.recoveries] == [
+        ["device_loss"], ["device_return"]]
+    assert all(r["warm_started"] and not r["degraded"]
+               for r in co.recoveries)
+    events = obs.control_events()
+    names = [e["name"] for e in events]
+    assert "mesh_shrink" in names and "mesh_grow" in names
+    assert names.count("restore") == 2  # one restore pass per recovery
+    # injections are distinguishable from the reactions they caused
+    chaos = [e["args"]["kind"] for e in events if e["name"] == "chaos_event"]
+    assert chaos == ["device_loss", "device_return"]
+    # the campaign narrative rebuilds from the trace alone
+    narr = obs.recovery_narrative(events)
+    assert [ep["classes"] for ep in narr] == [
+        ["device_loss"], ["device_return"]]
+    assert all(ep["restores"] == 1 for ep in narr)
+
+
+def test_combined_nan_and_device_loss_single_restore(tmp_path):
+    """Coincident NumericsFault + device loss resolve in ONE recovery pass:
+    one classification, one mesh change, one restore_resharded — asserted
+    from the control lane, and the provenance lands in the manifest."""
+    from repro import obs
+    from repro.core.plan import GuardConfig
+    from repro.train import checkpoint as ckpt
+
+    obs.reset_control_events()
+    opt = get_optimizer("adafactor", lr=0.05)
+    tc = TrainConfig(steps=12, ckpt_dir=str(tmp_path / "ck"), ckpt_every=2,
+                     guard=GuardConfig(rewind_after=2), log_every=1000)
+    pipe = TokenPipeline(DataConfig(TINY.vocab_size, 16, 4, seed=7))
+    inj = FaultInjector(nan_at_step=5, numeric_steps=2,
+                        device_loss_at=6, lose=0)
+    co = ElasticCoordinator(TINY, st, opt, tc, pipe, n_devices=1,
+                            injector=inj, max_recoveries=2,
+                            autoshard_config=CHEAP)
+    _, losses = co.run()
+    assert len(co.recoveries) == 1
+    ev = co.recoveries[0]
+    assert ev["classes"] == ["device_loss", "numerics"]
+    assert "restored_from" in ev and ev["reshard"]["leaves"] > 0
+    events = obs.control_events()
+    names = [e["name"] for e in events]
+    assert names.count("restore") == 1        # exactly one restore pass
+    assert names.count("combined_recovery") == 1
+    (comb,) = [e for e in events if e["name"] == "combined_recovery"]
+    assert comb["args"]["classes"] == ["device_loss", "numerics"]
+    # the narrative sees one episode covering both classes
+    narr = obs.recovery_narrative(events)
+    assert len(narr) == 1 and narr[0]["restores"] == 1
+    assert narr[0]["classes"] == ["device_loss", "numerics"]
+    # provenance reached the next manifest's extra
+    d = str(tmp_path / "ck")
+    man = ckpt._load_manifest(d, ckpt.latest_step(d))
+    rec = man["extra"]["recovery"]
+    assert rec["count"] == 1
+    assert rec["last"]["classes"] == ["device_loss", "numerics"]
