@@ -30,6 +30,12 @@ regresses:
 * guard cells (numerics sentinels) — the guard epilogue's modeled overhead
   exceeds its hard 1%-of-total_s cap, regresses vs the committed record, or
   the epilogue stops emitting its steps/collective;
+* profile cells (machine-profile calibration) — the fitter stops recovering
+  planted constants on the synthetic cell, the end-to-end loop stops
+  improving every in-band calibration ratio (or the profile-off path stops
+  hitting the process plan cache / distinct profiles stop keeping distinct
+  entries), or the calibrated qwen re-score stops changing total_s or loses
+  to the hand-annotated baseline;
 * verifier telemetry — the bench run stops verifying plans, or a committed
   record carries static-verifier violations (want exactly 0);
 * lattice telemetry — a reshard in the benchmark set starts hitting the
@@ -305,6 +311,60 @@ def _check_chaos_cell(msgs, name, base, fresh):
                     f"for {fresh.get('steps')} steps (not continuous)")
 
 
+def _check_profile_cell(msgs, name, base, fresh):
+    """Machine-profile cells (repro.obs.profile): the synthetic fit must
+    keep recovering its planted constants exactly, the end-to-end loop must
+    keep improving every in-band class's calibration ratio (with the
+    profile-off path still hitting the process plan cache and distinct
+    profiles keeping distinct entries), and the calibrated qwen re-score
+    must keep changing total_s without the searched assignment losing to
+    the hand-annotated baseline.  Fitted constants, residual ratios, and
+    ``search_ms`` are host-specific — never compared."""
+    if "recovered" in fresh:
+        if not fresh["recovered"]:
+            _fail(msgs, f"{name}: fitter no longer recovers planted "
+                        f"constants (max_rel_err "
+                        f"{fresh.get('max_rel_err'):.3g})")
+        if fresh.get("flagged"):
+            _fail(msgs, f"{name}: exact synthetic fit flagged classes "
+                        f"{fresh['flagged']} (want none)")
+        return
+    if "improved_all" in fresh:
+        if fresh.get("n_samples", 0) <= 0:
+            _fail(msgs, f"{name}: tight-timed run produced no samples")
+        if fresh.get("in_band_classes", 0) <= 0:
+            _fail(msgs, f"{name}: no in-band step class to calibrate")
+        if not fresh["improved_all"]:
+            _fail(msgs, f"{name}: fitted profile no longer brings every "
+                        f"in-band class's ratio closer to 1.0 than the "
+                        f"defaults")
+        if not fresh.get("off_cache_hit"):
+            _fail(msgs, f"{name}: profile-off build missed the process "
+                        f"plan cache (unset REPRO_MACHINE_PROFILE is no "
+                        f"longer bit-identical)")
+        if not fresh.get("isolation_ok"):
+            _fail(msgs, f"{name}: distinct profiles no longer keep "
+                        f"distinct plan-cache entries "
+                        f"({fresh.get('isolation_entries')} entries)")
+        if fresh.get("profile_applied_events", 0) < 2:
+            _fail(msgs, f"{name}: profile_applied control events "
+                        f"{fresh.get('profile_applied_events')} < 2")
+        return
+    if not fresh.get("feasible", False):
+        _fail(msgs, f"{name}: calibrated search found no feasible assignment")
+        return
+    if not fresh.get("total_s_changed"):
+        _fail(msgs, f"{name}: calibrated profile no longer changes total_s "
+                    f"(feedback path severed)")
+    if fresh["ratio_vs_baseline"] > 1.0 + _EPS:
+        _fail(msgs, f"{name}: calibrated searched cost exceeds baseline "
+                    f"(ratio {fresh['ratio_vs_baseline']:.3f})")
+    if base.get("profiled_total_s") is not None and (
+            fresh["profiled_total_s"] > base["profiled_total_s"] * (1 + _EPS)):
+        _fail(msgs, f"{name}: profiled_total_s {base['profiled_total_s']:.3e} "
+                    f"-> {fresh['profiled_total_s']:.3e}")
+
+
 def _check_metrics(msgs, base, fresh):
     """Unified metrics snapshot: the record must join every pre-existing
     telemetry surface (the PR 8 acceptance bar — cache hit rates, verifier
@@ -386,7 +446,8 @@ def compare(base: dict, fresh: dict):
                           ("elastic_cells", _check_elastic_cell),
                           ("guard_cells", _check_guard_cell),
                           ("obs_cells", _check_obs_cell),
-                          ("chaos_cells", _check_chaos_cell)):
+                          ("chaos_cells", _check_chaos_cell),
+                          ("profile_cells", _check_profile_cell)):
         base_cells = {c["name"]: c for c in base.get(kind, [])}
         fresh_cells = {c["name"]: c for c in fresh.get(kind, [])}
         for name, bc in base_cells.items():
@@ -430,7 +491,8 @@ def main() -> int:
               + len(base.get("pipeline_cells", []))
               + len(base.get("elastic_cells", []))
               + len(base.get("guard_cells", []))
-              + len(base.get("obs_cells", [])))
+              + len(base.get("obs_cells", []))
+              + len(base.get("profile_cells", [])))
     path = plan_smoke.write_artifact(fresh)
     print(f"bench-guard: OK ({ncells} cells, no regressions vs committed baseline)")
     print(f"# artifact refreshed: {path}")

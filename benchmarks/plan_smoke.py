@@ -12,8 +12,10 @@ makespan-to-serial ratio; per *autoshard* cell, the searched annotation-free
 assignment's modeled cost vs the hand-annotated Table-1 baseline under a
 per-device memory budget (search is deterministic, cost-only — no jit); per
 *guard* cell, the numerics-sentinel epilogue's modeled overhead vs the
-unguarded lowering (hard-capped at 1% of total_s); plus static-verifier
-telemetry (plans verified / violations — must be 0),
+unguarded lowering (hard-capped at 1% of total_s); per *profile* cell, the
+machine-profile calibration loop (planted-constant recovery, tight-timed
+fit + re-score on the harness mesh, calibrated qwen re-scoring); plus
+static-verifier telemetry (plans verified / violations — must be 0),
 lattice-search cap telemetry, the per-runner and process-level plan-cache hit
 rates, and (unguarded) plan-build micro-timings from ``benchmarks/perf.py``.  ``benchmarks/guard.py`` diffs a fresh
 run of this module against the committed artifact and fails on regression
@@ -919,6 +921,205 @@ def _chaos_cells():
     }]
 
 
+# ---------------------------------------------------------------------------------
+# machine-profile cells (PR 10): tight-timed spans → fitted roofline constants
+# → calibrated re-scoring, guarded end to end
+# ---------------------------------------------------------------------------------
+
+# max relative error for the synthetic planted-constant recovery: the system
+# is exact and linear, so the fitter must invert it to f32 tolerance
+_PROFILE_FIT_TOL = 1e-6
+
+
+def _profile_cells():
+    """Three cells for the calibration loop (``repro.obs.profile``).
+
+    ``profile_fit_synthetic`` — deterministic planted-constant recovery:
+    synthetic per-step samples generated *from* a known
+    :class:`RooflineParams` must fit back to the planted constants within
+    :data:`_PROFILE_FIT_TOL` relative error, with nothing flagged.
+
+    ``profile_loop_tiny`` — the loop end to end on the 1×1 harness mesh: a
+    matmul chain executed under ``TraceConfig(timing="tight")``, spans
+    joined to ``step_features``, a profile fitted, and the re-score bar
+    asserted — every in-band step class's measured/modeled ratio strictly
+    closer to 1.0 (log space) under the fitted constants than under the
+    defaults.  The profile-*off* proof and cache isolation ride here: two
+    default builds share one process-cache entry (bit-identical to the
+    pre-profile world), and two builds under *distinct* profiles add two
+    distinct entries (calibrated and default plans never collide).  Memory
+    telemetry (modeled peak vs allocator stats, ``None`` on CPU) and the
+    ``profile_applied`` control events are recorded alongside.  Raw
+    timings and fitted constants vary per host — never guarded; the guard
+    checks the booleans only.
+
+    ``profile_rescore_qwen`` — calibrated re-scoring of the qwen autoshard
+    problem under a fixed deterministic profile: ``total_s`` must *change*
+    (the profile actually reprices the objective) while the searched
+    assignment still never loses to the hand-annotated baseline
+    (``ratio_vs_baseline`` ≤ 1.0).
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro import autoshard, obs
+    from repro.analysis.roofline import DEFAULT_PARAMS, RooflineParams
+    from repro.core import annotate, mesh_split
+    from repro.core import partitioner
+    from repro.core.compat import make_jax_mesh
+    from repro.core.partitioner import (
+        clear_process_plan_cache, process_plan_cache_stats, spmd_partition,
+    )
+    from repro.core.plan import lower_for_cost
+    from repro.core.sharding import Mesh
+    from repro.obs.profile import (
+        StepSample, collect_samples, device_memory_stats, fit_profile,
+        memory_report, rescore_report,
+    )
+    from repro.obs.trace import control_events
+
+    cells = []
+
+    # -- cell 1: planted-constant recovery on synthetic spans ---------------
+    planted = RooflineParams(peak_flops=1.5e13, ici_bw=2.5e10,
+                             collective_launch_s=2.5e-5)
+    feats = [  # (class, flops, wire_bytes, launches) — spans two compute
+        ("einsum", 2e9, 0.0, 0.0), ("einsum", 8e9, 0.0, 0.0),
+        ("eltwise", 5e8, 0.0, 0.0),  # classes and three collective shapes
+        ("reshard", 0.0, 4e6, 1.0), ("reshard", 0.0, 3.2e7, 1.0),
+        ("reshard", 0.0, 1e5, 2.0),
+    ]
+    samples = []
+    for cls, fl, wb, la in feats:
+        s = StepSample(cls=cls, flops=fl, wire_bytes=wb, launches=la,
+                       measured_s=0.0)
+        samples.append(dataclasses.replace(
+            s, measured_s=s.modeled_s(planted)))
+    prof = fit_profile(samples, source="bench:synthetic")
+    pd, fd = planted.as_dict(), prof.params.as_dict()
+    rel = {k: abs(fd[k] - pd[k]) / pd[k] for k in prof.fitted}
+    max_rel = max(rel.values()) if rel else 1.0
+    cells.append({
+        "name": "profile_fit_synthetic",
+        "n_samples": prof.n_samples,
+        "dropped": prof.dropped,
+        "planted": pd,
+        "fitted": fd,
+        "fitted_fields": sorted(prof.fitted),
+        "max_rel_err": max_rel,
+        "recovered": bool(
+            set(prof.fitted) == {"peak_flops", "ici_bw",
+                                 "collective_launch_s"}
+            and max_rel <= _PROFILE_FIT_TOL and not prof.flagged),
+        "flagged": list(prof.flagged),
+    })
+
+    # -- cell 2: the loop end to end on the 1×1 harness mesh ----------------
+    jmesh = make_jax_mesh((1, 1), ("x", "y"))
+    mesh = Mesh.create((1, 1), ("x", "y"))
+
+    def make_chain():
+        def f(a, b):
+            x = annotate(a, mesh_split(2, mesh, ["x", -1]))
+            b = annotate(b, mesh_split(2, mesh, [-1, "y"]))
+            for _ in range(4):
+                x = jnp.tanh(x @ b)
+            return x
+
+        return f
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((256, 256)).astype(np.float32)
+    b = rng.standard_normal((256, 256)).astype(np.float32)
+
+    ev0 = sum(1 for e in control_events() if e["name"] == "profile_applied")
+    runner = spmd_partition(make_chain(), jmesh, mesh,
+                            trace=obs.TraceConfig(timing="tight", repeats=3))
+    mem0 = device_memory_stats()
+    runner(a, b)
+    mem1 = device_memory_stats()
+    entry = next(iter(runner.plans.values()))
+    samples = collect_samples(entry.plan, runner.tracer.measured_events())
+    prof = fit_profile(samples, source="bench:profile_loop_tiny")
+    res = rescore_report(samples, prof.params)
+    mem = memory_report(entry.plan, mem0, mem1)
+
+    # profile-off identity: two default call sites share one cache entry
+    clear_process_plan_cache()
+    spmd_partition(make_chain(), jmesh, mesh)(a, b)
+    spmd_partition(make_chain(), jmesh, mesh)(a, b)
+    st = process_plan_cache_stats()
+    off_hit = bool(st.hits >= 1 and len(partitioner._PROCESS_CACHE) == 1)
+    # cache isolation: two *distinct* profiles must add two distinct entries
+    p1 = prof.params
+    p2 = dataclasses.replace(p1, peak_flops=p1.peak_flops * 2.0)
+    spmd_partition(make_chain(), jmesh, mesh, profile=p1)(a, b)
+    spmd_partition(make_chain(), jmesh, mesh, profile=p2)(a, b)
+    n_entries = len(partitioner._PROCESS_CACHE)
+    ev1 = sum(1 for e in control_events() if e["name"] == "profile_applied")
+    clear_process_plan_cache()
+    cells.append({
+        "name": "profile_loop_tiny",
+        "n_samples": prof.n_samples,
+        "dropped": prof.dropped,
+        "fitted_fields": sorted(prof.fitted),
+        "params": prof.params.as_dict(),       # host-specific: never guarded
+        "defaults": DEFAULT_PARAMS.as_dict(),
+        "residuals": dict(prof.residuals),     # host-specific: never guarded
+        "flagged": list(prof.flagged),
+        "in_band_classes": res["in_band_classes"],
+        "improved_all": bool(res["improved_all"]),
+        "off_cache_hit": off_hit,
+        "isolation_entries": n_entries,
+        "isolation_ok": bool(n_entries == 3),
+        "profile_applied_events": ev1 - ev0,
+        "memory": mem,
+    })
+
+    # -- cell 3: calibrated re-scoring of the qwen autoshard problem --------
+    # fixed deterministic profile (as if fitted on a slower machine): the
+    # bench must not depend on this host's timings
+    cal = RooflineParams(peak_flops=DEFAULT_PARAMS.peak_flops / 2.0,
+                         ici_bw=DEFAULT_PARAMS.ici_bw / 2.0,
+                         collective_launch_s=2e-5)
+    rmesh = Mesh.create((2, 4), ("data", "model"))
+    arch, budget = _AUTOSHARD_CASES[0]
+    closed, baseline = autoshard.registry_problem(arch, rmesh)
+    base_default = lower_for_cost(closed, baseline, rmesh)
+    base_cal = lower_for_cost(closed, baseline, rmesh, profile=cal)
+    cfg = autoshard.AutoshardConfig(budget_bytes=budget, top_n=3, sa_steps=6,
+                                    max_candidates=8, profile=cal)
+    t0 = time.perf_counter()
+    r = autoshard.solve_problem(closed, rmesh, cfg, baseline=baseline,
+                                arch=arch)
+    ms = (time.perf_counter() - t0) * 1e3
+
+    def fin(x):
+        return x if x is not None and np.isfinite(x) else None
+
+    cells.append({
+        "name": "profile_rescore_qwen",
+        "arch": arch,
+        "mesh": list(rmesh.shape),
+        "budget_bytes": budget,
+        "profile": cal.as_dict(),
+        "profile_digest": cal.digest(),
+        "default_total_s": base_default.total_s,
+        "profiled_total_s": base_cal.total_s,
+        "total_s_changed": bool(
+            abs(base_cal.total_s - base_default.total_s)
+            > 1e-12 * max(base_default.total_s, 1e-30)),
+        "feasible": bool(r.evaluation.feasible),
+        "searched_total_s": fin(r.evaluation.score),
+        "baseline_total_s": fin(r.baseline.score),
+        "ratio_vs_baseline": r.ratio_vs_baseline,
+        "evals": r.evals,
+        "search_ms": ms,  # informational, never guarded
+    })
+    return cells
+
+
 def _cache_cell():
     import jax.numpy as jnp
 
@@ -985,6 +1186,7 @@ def smoke_record() -> dict:
     rec["guard_cells"] = _guard_cells()
     rec["obs_cells"] = _obs_cells()
     rec["chaos_cells"] = _chaos_cells()
+    rec["profile_cells"] = _profile_cells()
     rec.update(_cache_cell())
     rec["lattice_telemetry"] = {
         "cells": grid_telemetry,
@@ -1119,6 +1321,33 @@ def rows(rec: dict = None):
                 f"schema_ok={cell['schema_ok']} "
                 f"calibration_complete={cell['calibration_complete']} "
                 f"off_cache_hit={cell['off_process_cache_hit']}",
+            ))
+    for cell in rec.get("profile_cells", []):
+        if cell["name"] == "profile_fit_synthetic":
+            out.append((
+                f"profile/{cell['name']}", 0.0,
+                f"recovered={cell['recovered']} "
+                f"max_rel_err={cell['max_rel_err']:.2e} "
+                f"fitted={','.join(cell['fitted_fields'])} "
+                f"dropped={cell['dropped']}",
+            ))
+        elif cell["name"] == "profile_loop_tiny":
+            out.append((
+                f"profile/{cell['name']}", 0.0,
+                f"samples={cell['n_samples']} "
+                f"improved_all={cell['improved_all']} "
+                f"in_band={cell['in_band_classes']} "
+                f"off_cache_hit={cell['off_cache_hit']} "
+                f"isolation_ok={cell['isolation_ok']}",
+            ))
+        else:
+            out.append((
+                f"profile/{cell['name']}", 0.0,
+                f"total_s={cell['default_total_s']:.3e}->"
+                f"{cell['profiled_total_s']:.3e} "
+                f"changed={cell['total_s_changed']} "
+                f"ratio={cell['ratio_vs_baseline']:.3f} "
+                f"search={cell['search_ms']:.0f}ms",
             ))
     mx = rec.get("metrics")
     if mx:

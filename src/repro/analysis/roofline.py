@@ -18,6 +18,8 @@ remat recompute, §4.1 padding waste, and causal-attention overcompute.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12  # bf16 / chip
@@ -30,7 +32,51 @@ COLLECTIVE_LAUNCH_S = 10e-6  # per-collective launch/sync overhead (s)
 OVERLAP_EFFICIENCY = 0.9
 
 
-def overlap_time_s(compute_s: float, comm_s: float) -> float:
+@dataclasses.dataclass(frozen=True)
+class RooflineParams:
+    """Overridable machine constants for every time-valued roofline formula.
+
+    Defaults are exactly the module-level TPU-v5e-class constants, so code
+    that passes ``params=None`` (or never mentions params) prices identically
+    to the historical hardcoded path.  A *calibrated* instance — fitted from
+    tight-timed measured spans by ``repro.obs.profile.fit_profile`` — can be
+    routed through ``PlanCost``, the overlap scheduler, and autoshard scoring
+    (``spmd_partition(profile=...)`` / ``AutoshardConfig.profile``) so every
+    modeled second reflects the machine actually underneath.  Frozen (and
+    therefore hashable) so it can ride inside cache keys and the frozen
+    ``AutoshardConfig``.
+    """
+
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    collective_launch_s: float = COLLECTIVE_LAUNCH_S
+    overlap_efficiency: float = OVERLAP_EFFICIENCY
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, float]) -> "RooflineParams":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: float(v) for k, v in d.items() if k in fields})
+
+    def digest(self) -> str:
+        """Stable short hash of the constants — the cache-key ingredient that
+        keeps calibrated and default plans from ever colliding."""
+        payload = json.dumps(self.as_dict(), sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+DEFAULT_PARAMS = RooflineParams()
+
+
+def _params(params: Optional[RooflineParams]) -> RooflineParams:
+    return params if params is not None else DEFAULT_PARAMS
+
+
+def overlap_time_s(compute_s: float, comm_s: float,
+                   params: Optional[RooflineParams] = None) -> float:
     """Max-of-terms roofline time for one scheduled slot.
 
     A serial model prices a slot at ``compute_s + comm_s``; with
@@ -43,11 +89,12 @@ def overlap_time_s(compute_s: float, comm_s: float) -> float:
     (``core/plan_opt.schedule_overlap``) and the autoshard score
     (``core/plan.PlanCost.total_s``) minimize.  Keeping a sliver of the
     smaller term preserves search discrimination: two assignments with equal
-    dominant terms still rank by the hidden one.
+    dominant terms still rank by the hidden one.  ``params`` swaps in a
+    calibrated :class:`RooflineParams`; ``None`` keeps the defaults.
     """
     hi = compute_s if compute_s >= comm_s else comm_s
     lo = compute_s + comm_s - hi
-    return hi + (1.0 - OVERLAP_EFFICIENCY) * lo
+    return hi + (1.0 - _params(params).overlap_efficiency) * lo
 
 
 # ---------------------------------------------------------------------------------
@@ -90,14 +137,18 @@ def collective_wire_bytes(kind: str, group_size: int, in_bytes: float) -> float:
     raise ValueError(f"unknown collective kind {kind!r}")
 
 
-def collective_time_s(kind: str, group_size: int, in_bytes: float) -> float:
+def collective_time_s(kind: str, group_size: int, in_bytes: float,
+                      params: Optional[RooflineParams] = None) -> float:
     """Modeled wall time of one collective launch: fixed launch/sync overhead
     plus wire time.  This is the term the fusion pass minimizes — k small
     collectives pay k launches, one fused collective pays one."""
-    return COLLECTIVE_LAUNCH_S + collective_wire_bytes(kind, group_size, in_bytes) / ICI_BW
+    p = _params(params)
+    return p.collective_launch_s + collective_wire_bytes(
+        kind, group_size, in_bytes) / p.ici_bw
 
 
-def ppermute_time_s(in_bytes: float, group_size: int = 2) -> float:
+def ppermute_time_s(in_bytes: float, group_size: int = 2,
+                    params: Optional[RooflineParams] = None) -> float:
     """Modeled wall time of one CollectivePermute hop (§3.3 pipeline shift).
 
     The shifting-buffer ppermute is a single neighbor hop: every device
@@ -106,11 +157,12 @@ def ppermute_time_s(in_bytes: float, group_size: int = 2) -> float:
     ring factor, the defining advantage over gather-based stage handoff)
     plus one launch.  ``group_size <= 1`` (stage dim unsharded) is free wire.
     """
-    return COLLECTIVE_LAUNCH_S + collective_wire_bytes(
-        "collective-permute", group_size, in_bytes) / ICI_BW
+    p = _params(params)
+    return p.collective_launch_s + collective_wire_bytes(
+        "collective-permute", group_size, in_bytes) / p.ici_bw
 
 
-def fusion_bucket_bytes() -> float:
+def fusion_bucket_bytes(params: Optional[RooflineParams] = None) -> float:
     """Bucket-size cap for collective fusion (``core/plan_opt.py``).
 
     Fusing k members saves (k-1) launch overheads but adds one extra HBM
@@ -121,7 +173,8 @@ def fusion_bucket_bytes() -> float:
     constants) — beyond that the collectives are wire-bound and batching them
     buys nothing the link wasn't already doing.
     """
-    return COLLECTIVE_LAUNCH_S * HBM_BW / 2.0
+    p = _params(params)
+    return p.collective_launch_s * p.hbm_bw / 2.0
 
 
 @dataclasses.dataclass

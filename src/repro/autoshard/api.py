@@ -59,6 +59,12 @@ class AutoshardConfig:
     # default — zero weight leaves every existing score bit-identical.
     mem_weight: float = 0.0
     soft_budget_bytes: Optional[float] = None
+    # calibrated roofline constants (repro.analysis.roofline.RooflineParams):
+    # every cost-only lowering the search performs is priced with them, so
+    # the objective ranks candidates by *this machine's* modeled seconds.
+    # None = module defaults, scores bit-identical to an unprofiled search.
+    # (Frozen-dataclass-in-frozen-dataclass: cache_key stays hashable.)
+    profile: Optional["RooflineParams"] = None
 
     def cache_key(self) -> tuple:
         return dataclasses.astuple(self)
@@ -261,7 +267,8 @@ def solve_problem(closed, mesh: Mesh,
 
     ev = Evaluator(closed, mesh, budget_bytes=config.budget_bytes,
                    optimize=config.optimize, mem_weight=config.mem_weight,
-                   soft_budget_bytes=config.soft_budget_bytes)
+                   soft_budget_bytes=config.soft_budget_bytes,
+                   profile=config.profile)
     t0 = time.perf_counter()
     base_ev = ev(list(baseline)) if baseline is not None else None
     res = search(

@@ -68,13 +68,17 @@ class Evaluator:
 
     def __init__(self, closed, mesh: Mesh, budget_bytes: Optional[float] = None,
                  optimize: bool = True, mem_weight: float = 0.0,
-                 soft_budget_bytes: Optional[float] = None):
+                 soft_budget_bytes: Optional[float] = None,
+                 profile=None):
         self.closed = closed
         self.mesh = mesh
         self.budget_bytes = budget_bytes
         self.optimize = optimize
         self.mem_weight = mem_weight
         self.soft_budget_bytes = soft_budget_bytes
+        # calibrated RooflineParams (None = module defaults): priced into
+        # every candidate lowering so the objective is machine-specific
+        self.profile = profile
         self.cache: Dict[tuple, Evaluation] = {}
         self.lowerings = 0  # actual (non-memoized) cost lowerings
 
@@ -93,7 +97,8 @@ class Evaluator:
         t0 = time.perf_counter()
         try:
             cost = lower_for_cost(
-                self.closed, list(assignment), self.mesh, optimize=self.optimize
+                self.closed, list(assignment), self.mesh,
+                optimize=self.optimize, profile=self.profile,
             )
         except PlanVerifyError as e:
             # verifier hit on a candidate plan = optimizer-pass bug, not an

@@ -90,6 +90,24 @@ class ReshardProgram:
         return [s.describe() for s in self.steps]
 
 
+def program_time_s(program: ReshardProgram, params=None) -> float:
+    """Roofline seconds of one reshard program: one launch overhead per
+    collective step (``dynamic_slice`` is a local op) plus the program's
+    wire bytes at ICI bandwidth.  ``params`` (a
+    :class:`repro.analysis.roofline.RooflineParams`) prices with calibrated
+    machine constants; ``None`` keeps the module defaults — this is the
+    planner-level counterpart of ``PlanCost.collective_s`` and is what the
+    profile feedback loop uses to re-price individual reshard programs.
+    """
+    from repro.analysis.roofline import COLLECTIVE_LAUNCH_S, ICI_BW
+
+    launches = sum(1 for s in program.steps if s.op != "dynamic_slice")
+    if params is not None:
+        return (launches * params.collective_launch_s
+                + program.cost_bytes / params.ici_bw)
+    return launches * COLLECTIVE_LAUNCH_S + program.cost_bytes / ICI_BW
+
+
 class PlanError(Exception):
     """A candidate program violated a step precondition under simulation."""
 

@@ -534,7 +534,8 @@ def clear_process_plan_cache() -> None:
 
 def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
                    optimize: bool = True, process_cache: bool = True,
-                   autoshard=None, verify=None, guard=None, trace=None):
+                   autoshard=None, verify=None, guard=None, trace=None,
+                   profile=None):
     """Partition ``fn`` with the reference partitioner and return a callable that
     runs the SPMD program over ``jmesh`` via shard_map.
 
@@ -585,6 +586,15 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
     caveats.  The tracer is exposed as ``runner.tracer``
     (``runner.tracer.write(path)`` exports Chrome trace JSON).
 
+    ``profile`` applies calibrated roofline constants to the compiled plan's
+    cost model: a :class:`repro.analysis.roofline.RooflineParams`, a fitted
+    :class:`repro.obs.profile.MachineProfile`, or a profile JSON path.
+    ``None`` falls back to ``$REPRO_MACHINE_PROFILE`` (and, with that unset,
+    to the module-default constants — bit-identical plans and cache
+    entries).  The resolved profile's digest is part of the process-cache
+    key, so calibrated and default plans never collide, and applying one
+    emits a ``profile_applied`` control event.
+
     The returned runner exposes ``runner.cache_stats`` (hits/misses) and
     ``runner.plans`` (cache-key → PartitionPlan) for tests and reporting.
     """
@@ -605,6 +615,11 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
     stats = PlanCacheStats(scope="runner")
 
     def _build(args):
+        from repro.obs.profile import resolve_profile
+
+        # resolved per build so $REPRO_MACHINE_PROFILE edits are picked up;
+        # the digest keys the process cache (None = default constants)
+        prof = resolve_profile(profile)
         closed = jax.make_jaxpr(fn)(*args)
         pkey: Optional[tuple] = None
         if process_cache:
@@ -613,6 +628,7 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
                 tuple(_aval_key(a) for a in args), compile_plans, optimize,
                 autoshard.cache_key() if autoshard is not None else None,
                 verify, guard,
+                prof.digest() if prof is not None else None,
             )
             entry = _PROCESS_CACHE.get(pkey)
             if entry is not None:
@@ -648,7 +664,13 @@ def spmd_partition(fn, jmesh, mesh: Mesh, compile_plans: bool = True,
             from .plan import compile_plan
 
             plan = compile_plan(closed, prop.result(), mesh,
-                                optimize=optimize, verify=verify, guard=guard)
+                                optimize=optimize, verify=verify, guard=guard,
+                                profile=prof)
+            if prof is not None:
+                from repro.obs.trace import control_event
+
+                control_event("profile_applied", digest=prof.digest(),
+                              mesh=list(mesh.shape))
             if guard is not None:
                 # the guard epilogue appends a sentinel vector output — derive
                 # the shard_map out_specs from the plan, not the jaxpr outvars

@@ -295,6 +295,7 @@ class PartitionPlan:
     opt_report: Optional[object] = None  # plan_opt.OptReport after optimization
     peak_bytes: float = 0.0  # modeled per-device live-memory peak (cost model)
     guard: Optional["GuardInfo"] = None  # sentinel epilogue metadata
+    params: Optional[object] = None  # roofline.RooflineParams (None = defaults)
 
     def execute(self, *args, tracer=None):
         """Run the plan on local shards (inside a shard_map region).
@@ -319,9 +320,16 @@ class PartitionPlan:
     def _execute_traced(self, args, tracer):
         """The traced step walk: a perf_counter pair brackets each step, and
         with ``tracer.config.sync`` the span blocks on the step's writes so
-        device time lands inside it (dispatch-only otherwise)."""
+        device time lands inside it (dispatch-only otherwise).
+
+        ``tracer.config.timing == "tight"`` switches to the calibration walk
+        (:meth:`_execute_tight`): each step is re-run min-of-K with
+        ``block_until_ready``, so the recorded span is a measurement-quality
+        lower bound rather than an eager dispatch-inclusive upper bound."""
         import jax
 
+        if getattr(tracer.config, "timing", "eager") == "tight":
+            return self._execute_tight(args, tracer)
         sync = tracer.config.sync
         call = tracer.begin_call()
         env: Env = {}
@@ -347,6 +355,54 @@ class PartitionPlan:
                 jax.block_until_ready(outs)
             except Exception:
                 pass
+        return outs
+
+    def _execute_tight(self, args, tracer):
+        """Calibration-grade step walk: every step is warmed up once, then
+        re-run ``tracer.config.repeats`` times with ``block_until_ready``
+        after each, and the **minimum** elapsed time becomes the span —
+        the min-of-K discipline ``benchmarks/perf.py`` uses.  Re-running is
+        sound because steps are pure functions of their env reads.  Span
+        timestamps are a synthetic monotonic cursor (sum of minima), so
+        lanes stay non-overlapping even though wall time ran K× longer."""
+        import time
+
+        import jax
+
+        def _block(step):
+            for w in step.writes:
+                out = env.get(w)
+                if out is not None:
+                    try:
+                        jax.block_until_ready(out)
+                    except Exception:  # non-array env values (specs etc.)
+                        pass
+
+        reps = max(1, int(getattr(tracer.config, "repeats", 3)))
+        call = tracer.begin_call()
+        env: Env = {}
+        for v, c in zip(self.jaxpr.constvars, self.consts):
+            env[v] = c
+        for v, a in zip(self.jaxpr.invars, args):
+            env[v] = a
+        cursor = tracer.now_us()
+        for idx, step in enumerate(self.steps):
+            step.run(env, step.reads, step.writes)  # warmup (populates env)
+            _block(step)
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                step.run(env, step.reads, step.writes)
+                _block(step)
+                best = min(best, time.perf_counter() - t0)
+            best_us = best * 1e6
+            tracer.record_step(idx, step, cursor, cursor + best_us, call)
+            cursor += best_us
+        outs = tuple(_read(env, k) for k in self.out_keys)
+        try:
+            jax.block_until_ready(outs)
+        except Exception:
+            pass
         return outs
 
     def total_flops(self) -> float:
@@ -1568,6 +1624,7 @@ def compile_plan(
     cost_only: bool = False,
     verify: Optional[bool] = None,
     guard: Optional[GuardConfig] = None,
+    profile: Optional[object] = None,
 ) -> PartitionPlan:
     """Lower a propagated (closed) jaxpr into an executable PartitionPlan.
 
@@ -1587,6 +1644,12 @@ def compile_plan(
     ``None`` means the module default (on unless ``REPRO_PLAN_VERIFY=0``) —
     cheap enough to leave on everywhere, including cost-only autoshard
     lowerings.
+
+    ``profile`` attaches a calibrated
+    :class:`repro.analysis.roofline.RooflineParams` to the plan *before*
+    optimization, so the overlap scheduler, fusion-bucket sizing, and every
+    downstream :class:`PlanCost` price with the fitted machine constants.
+    ``None`` keeps the module-default constants bit-identically.
     """
     from .collective_planner import thread_search_telemetry
 
@@ -1596,6 +1659,8 @@ def compile_plan(
         cost_only=cost_only,
     )
     plan = builder.build()
+    if profile is not None:
+        plan.params = profile
     if guard is not None:
         append_guard_steps(plan, guard, cost_only=cost_only)
     if optimize:
@@ -1697,24 +1762,33 @@ class PlanCost:
     steps: int
     soft_budget_bytes: Optional[float] = None
     mem_weight: float = 0.0
+    params: Optional[object] = None  # roofline.RooflineParams (None = defaults)
 
     @property
     def collective_s(self) -> float:
+        if self.params is not None:
+            return (self.wire_bytes / self.params.ici_bw
+                    + self.launches * self.params.collective_launch_s)
         from repro.analysis.roofline import COLLECTIVE_LAUNCH_S, ICI_BW
 
         return self.wire_bytes / ICI_BW + self.launches * COLLECTIVE_LAUNCH_S
 
     @property
     def compute_s(self) -> float:
+        if self.params is not None:
+            return self.flops_per_device / self.params.peak_flops
         from repro.analysis.roofline import PEAK_FLOPS
 
         return self.flops_per_device / PEAK_FLOPS
 
     @property
     def imbalance_s(self) -> float:
+        excess = max(self.flops_per_device - self.ideal_flops_per_device, 0.0)
+        if self.params is not None:
+            return excess / self.params.peak_flops
         from repro.analysis.roofline import PEAK_FLOPS
 
-        return max(self.flops_per_device - self.ideal_flops_per_device, 0.0) / PEAK_FLOPS
+        return excess / PEAK_FLOPS
 
     @property
     def mem_s(self) -> float:
@@ -1722,16 +1796,19 @@ class PlanCost:
         Zero when disabled (no soft budget / zero weight) or under budget."""
         if not self.mem_weight or self.soft_budget_bytes is None:
             return 0.0
+        overshoot = max(self.peak_bytes - self.soft_budget_bytes, 0.0)
+        if self.params is not None:
+            return self.mem_weight * overshoot / self.params.hbm_bw
         from repro.analysis.roofline import HBM_BW
 
-        return self.mem_weight * max(
-            self.peak_bytes - self.soft_budget_bytes, 0.0) / HBM_BW
+        return self.mem_weight * overshoot / HBM_BW
 
     @property
     def total_s(self) -> float:
         from repro.analysis.roofline import overlap_time_s
 
-        return overlap_time_s(self.compute_s, self.collective_s) + self.mem_s
+        return overlap_time_s(self.compute_s, self.collective_s,
+                              self.params) + self.mem_s
 
     def as_dict(self) -> Dict:
         return {
@@ -1756,7 +1833,9 @@ def plan_cost(plan: PartitionPlan) -> PlanCost:
     via ``plan_opt.whole_wire_bytes`` / ``whole_collective_launches``) so the
     autoshard objective sees the same cost the overlap scheduler prices — the
     PR 4 open item ("scan-body collectives invisible to the objective") is
-    closed here."""
+    closed here.  A machine profile attached to the plan (``plan.params``, a
+    :class:`repro.analysis.roofline.RooflineParams`) carries through to the
+    cost's time-valued properties; ``None`` means the module defaults."""
     from repro.analysis.jaxpr_cost import count_flops
     from .plan_opt import whole_collective_launches, whole_wire_bytes
 
@@ -1767,6 +1846,7 @@ def plan_cost(plan: PartitionPlan) -> PlanCost:
         ideal_flops_per_device=count_flops(plan.jaxpr) / max(plan.mesh.size, 1),
         peak_bytes=plan.peak_bytes,  # filled by build()/optimize_plan()
         steps=len(plan.steps),
+        params=plan.params,
     )
 
 
@@ -1777,6 +1857,7 @@ def lower_for_cost(
     optimize: bool = True,
     verify: Optional[bool] = None,
     guard: Optional[GuardConfig] = None,
+    profile: Optional[object] = None,
 ) -> PlanCost:
     """Propagate ``in_shardings`` seeds and lower to a PlanCost — no jit, no
     execution, no runnables (every step runner is a raising stub).
@@ -1789,10 +1870,11 @@ def lower_for_cost(
     candidate — autoshard treats it as infinite cost).  Cost-only lowerings
     are verified too (``verify=None`` = module default); ``guard`` prices the
     numerics-sentinel epilogue into the returned cost (the guard-overhead
-    bench cell).
+    bench cell); ``profile`` prices with calibrated roofline constants
+    (:class:`repro.analysis.roofline.RooflineParams`).
     """
     return plan_cost(lower_plan(closed, in_shardings, mesh, optimize=optimize,
-                                verify=verify, guard=guard))
+                                verify=verify, guard=guard, profile=profile))
 
 
 def lower_plan(
@@ -1802,6 +1884,7 @@ def lower_plan(
     optimize: bool = True,
     verify: Optional[bool] = None,
     guard: Optional[GuardConfig] = None,
+    profile: Optional[object] = None,
 ) -> PartitionPlan:
     """Cost-only lowering that returns the :class:`PartitionPlan` itself
     (step runners are raising stubs — the plan prices, it doesn't run).
@@ -1816,7 +1899,8 @@ def lower_plan(
 
     prop = propagate(closed, mesh, in_shardings=list(in_shardings or []))
     return compile_plan(closed, prop.result(), mesh, optimize=optimize,
-                        cost_only=True, verify=verify, guard=guard)
+                        cost_only=True, verify=verify, guard=guard,
+                        profile=profile)
 
 
 # ---------------------------------------------------------------------------------

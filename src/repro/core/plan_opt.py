@@ -127,8 +127,8 @@ from jax import core, lax
 from jax.extend import core as excore
 
 from repro.analysis.roofline import (
-    COLLECTIVE_LAUNCH_S, ICI_BW, PEAK_FLOPS, collective_wire_bytes,
-    fusion_bucket_bytes, overlap_time_s,
+    COLLECTIVE_LAUNCH_S, ICI_BW, PEAK_FLOPS, RooflineParams,
+    collective_wire_bytes, fusion_bucket_bytes, overlap_time_s,
 )
 
 from .plan import (
@@ -141,7 +141,21 @@ __all__ = [
     "reshard_cse", "dead_reshard_elim", "sink_output_aliases",
     "fuse_collectives", "schedule_overlap",
     "whole_wire_bytes", "whole_collective_launches",
+    "step_features", "step_class", "modeled_timeline",
 ]
+
+
+def _plan_params(plan: PartitionPlan) -> Optional[RooflineParams]:
+    """The calibrated machine profile attached at compile time (or None for
+    the default constants).  Every pricing site in this module resolves the
+    SAME params through here, so the overlap schedule, the modeled timeline,
+    and the pass savings accounting can never disagree about the machine."""
+    return getattr(plan, "params", None)
+
+
+def _launch_s(plan: PartitionPlan) -> float:
+    p = _plan_params(plan)
+    return p.collective_launch_s if p is not None else COLLECTIVE_LAUNCH_S
 
 # Inlining cap: a pjit body longer than this stays a call step.  The point of
 # the bound is compile time, not correctness — splicing is O(steps), but every
@@ -467,7 +481,7 @@ def hoist_scan_invariants(plan: PartitionPlan) -> PassReport:
             drop.add(j)
             rep.hoisted_reshards += 1
             rep.wire_bytes_saved += max(trips - 1, 0) * rs.program.cost_bytes
-            rep.launch_s_saved += max(trips - 1, 0) * COLLECTIVE_LAUNCH_S * sum(
+            rep.launch_s_saved += max(trips - 1, 0) * _launch_s(plan) * sum(
                 1 for ps in rs.program.steps if ps.op != "dynamic_slice"
             )
         if drop:
@@ -578,7 +592,7 @@ def reshard_cse(plan: PartitionPlan) -> PassReport:
             if prior is not None:
                 rep.removed_steps += 1
                 rep.wire_bytes_saved += step.program.cost_bytes
-                rep.launch_s_saved += COLLECTIVE_LAUNCH_S * sum(
+                rep.launch_s_saved += _launch_s(plan) * sum(
                     1 for ps in step.program.steps if ps.op != "dynamic_slice"
                 )
                 plan.stats.remove_program(step.program)
@@ -631,7 +645,7 @@ def dead_reshard_elim(plan: PartitionPlan) -> PassReport:
         rep.removed_steps += 1
         if is_reshard:
             rep.wire_bytes_saved += step.program.cost_bytes
-            rep.launch_s_saved += COLLECTIVE_LAUNCH_S * sum(
+            rep.launch_s_saved += _launch_s(plan) * sum(
                 1 for ps in step.program.steps if ps.op != "dynamic_slice"
             )
             plan.stats.remove_program(step.program)
@@ -798,7 +812,8 @@ def fuse_collectives(plan: PartitionPlan, bucket_bytes: Optional[float] = None) 
     concatenating the bucket stops paying for the saved launches).
     """
     rep = PassReport("collective-fusion")
-    cap = bucket_bytes if bucket_bytes is not None else fusion_bucket_bytes()
+    cap = (bucket_bytes if bucket_bytes is not None
+           else fusion_bucket_bytes(_plan_params(plan)))
     mesh = plan.mesh
     steps = plan.steps
     # open buckets: key -> dict(members=[index], bytes, hoistable, pinned)
@@ -945,7 +960,7 @@ def fuse_collectives(plan: PartitionPlan, bucket_bytes: Optional[float] = None) 
         removed.update(m for m in members if m != anchor)
         rep.fused_buckets += 1
         rep.fused_members += len(group)
-        rep.launch_s_saved += (len(group) - 1) * COLLECTIVE_LAUNCH_S
+        rep.launch_s_saved += (len(group) - 1) * _launch_s(plan)
     rep.removed_steps = len(removed)
     plan.steps[:] = [
         replacement.get(i, s) for i, s in enumerate(steps) if i not in removed
@@ -958,38 +973,53 @@ def fuse_collectives(plan: PartitionPlan, bucket_bytes: Optional[float] = None) 
 # ---------------------------------------------------------------------------------
 
 
-def _step_durations(step: PlanStep, mesh) -> Tuple[float, float]:
-    """(compute_s, comm_s) of one step under the roofline constants.
+def step_features(step: PlanStep, mesh) -> Tuple[float, float, float]:
+    """(flops, wire_bytes, launches) of one step — the machine-independent
+    cost features every time model in this repo is linear in.
 
-    Wire steps occupy the interconnect; compute steps occupy the FLOPs unit;
-    a pjit/scan call step occupies *both* for the duration of its (trip-
-    multiplied) inner program, since its internal schedule is opaque here.
+    This is the feature extractor the machine-profile fitter
+    (:func:`repro.obs.profile.fit_profile`) regresses measured step times
+    against, and the SAME features :func:`_step_durations` divides by the
+    roofline constants — so a fitted :class:`RooflineParams` reprices exactly
+    the quantities the fit observed.  Inner pjit/scan plans contribute at
+    trip count, matching :func:`whole_wire_bytes`.
     """
     if step.kind == "reshard" and step.program is not None:
         launches = sum(
             1 for ps in step.program.steps if ps.op != "dynamic_slice"
         )
-        return 0.0, (step.program.cost_bytes / ICI_BW
-                     + launches * COLLECTIVE_LAUNCH_S)
+        return 0.0, step.program.cost_bytes, float(launches)
     if step.kind == "collective":
         if step.op == "ppermute":
-            from repro.analysis.roofline import ppermute_time_s
-
             n = mesh.axis_size(step.axes[0]) if step.axes else 1
-            return 0.0, ppermute_time_s(step.in_bytes, n)
-        return 0.0, (_collective_step_wire_bytes(mesh, step) / ICI_BW
-                     + COLLECTIVE_LAUNCH_S)
+            return 0.0, collective_wire_bytes(
+                "collective-permute", n, step.in_bytes), 1.0
+        return 0.0, _collective_step_wire_bytes(mesh, step), 1.0
     if step.kind == "fused":
-        return 0.0, (getattr(step, "_wire_bytes", 0.0) / ICI_BW
-                     + COLLECTIVE_LAUNCH_S)
-    comm = 0.0
+        return 0.0, getattr(step, "_wire_bytes", 0.0), 1.0
+    wire = launches = 0.0
     if step.inner is not None:
         trips = step.call.get("trips", 1)
-        comm = trips * (
-            whole_wire_bytes(step.inner) / ICI_BW
-            + whole_collective_launches(step.inner) * COLLECTIVE_LAUNCH_S
-        )
-    return step.flops / PEAK_FLOPS, comm
+        wire = trips * whole_wire_bytes(step.inner)
+        launches = trips * whole_collective_launches(step.inner)
+    return step.flops, wire, launches
+
+
+def _step_durations(step: PlanStep, mesh,
+                    params: Optional[RooflineParams] = None
+                    ) -> Tuple[float, float]:
+    """(compute_s, comm_s) of one step under the roofline constants.
+
+    Wire steps occupy the interconnect; compute steps occupy the FLOPs unit;
+    a pjit/scan call step occupies *both* for the duration of its (trip-
+    multiplied) inner program, since its internal schedule is opaque here.
+    ``params`` swaps in a calibrated machine profile (None = defaults).
+    """
+    flops, wire, launches = step_features(step, mesh)
+    if params is None:
+        return flops / PEAK_FLOPS, wire / ICI_BW + launches * COLLECTIVE_LAUNCH_S
+    return (flops / params.peak_flops,
+            wire / params.ici_bw + launches * params.collective_launch_s)
 
 
 def schedule_overlap(plan: PartitionPlan) -> PassReport:
@@ -1014,7 +1044,8 @@ def schedule_overlap(plan: PartitionPlan) -> PassReport:
     steps = plan.steps
     n = len(steps)
     mesh = plan.mesh
-    durs = [_step_durations(s, mesh) for s in steps]
+    params = _plan_params(plan)
+    durs = [_step_durations(s, mesh, params) for s in steps]
     producer: Dict[int, int] = {}
     for j, s in enumerate(steps):
         for w in s.writes:
@@ -1052,7 +1083,8 @@ def schedule_overlap(plan: PartitionPlan) -> PassReport:
                 start = max(start, tc)
             if dm > 0.0:
                 start = max(start, tm)
-            dur = overlap_time_s(dc, dm) if (dc > 0.0 and dm > 0.0) else dc + dm
+            dur = (overlap_time_s(dc, dm, params)
+                   if (dc > 0.0 and dm > 0.0) else dc + dm)
             key = (start, 0 if (dm > 0.0 and dc == 0.0) else 1, j)
             if best is None or key < best[0]:
                 best = (key, j, start + dur)
@@ -1075,7 +1107,7 @@ def schedule_overlap(plan: PartitionPlan) -> PassReport:
     compute_total = sum(d[0] for d in durs)
     comm_total = sum(d[1] for d in durs)
     serial = sum(
-        overlap_time_s(dc, dm) if (dc > 0.0 and dm > 0.0) else dc + dm
+        overlap_time_s(dc, dm, params) if (dc > 0.0 and dm > 0.0) else dc + dm
         for dc, dm in durs
     )
     makespan = max(finish, default=0.0)
@@ -1140,6 +1172,7 @@ def modeled_timeline(plan: PartitionPlan) -> List[Dict]:
     """
     steps = plan.steps
     mesh = plan.mesh
+    params = _plan_params(plan)
     n = len(steps)
     producer: Dict[int, int] = {}
     for j, s in enumerate(steps):
@@ -1149,7 +1182,7 @@ def modeled_timeline(plan: PartitionPlan) -> List[Dict]:
     tc = tm = 0.0
     rows: List[Dict] = []
     for j, s in enumerate(steps):
-        dc, dm = _step_durations(s, mesh)
+        dc, dm = _step_durations(s, mesh, params)
         start = 0.0
         for r in s.reads:
             if isinstance(r, excore.Literal):
@@ -1161,7 +1194,8 @@ def modeled_timeline(plan: PartitionPlan) -> List[Dict]:
             start = max(start, tc)
         if dm > 0.0:
             start = max(start, tm)
-        dur = overlap_time_s(dc, dm) if (dc > 0.0 and dm > 0.0) else dc + dm
+        dur = (overlap_time_s(dc, dm, params)
+               if (dc > 0.0 and dm > 0.0) else dc + dm)
         f = start + dur
         finish[j] = f
         if dc > 0.0:

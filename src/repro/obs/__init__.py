@@ -21,15 +21,33 @@ Three layers over the compiled-plan runtime (the GSPMD repro's answer to
   :class:`~repro.obs.calibrate.CalibrationReport` (the groundwork for honest
   Pallas-kernel pricing: a class whose measured/modeled ratio is off by more
   than the tolerance factor is flagged).
+* :mod:`repro.obs.profile` — the calibration feedback loop: tight-timed
+  spans (``TraceConfig(timing="tight")``) joined with per-step cost features
+  are fitted into a :class:`~repro.obs.profile.MachineProfile` of effective
+  :class:`~repro.analysis.roofline.RooflineParams`, which route back into
+  every costing surface (``spmd_partition(profile=...)``,
+  ``AutoshardConfig(profile=...)``, ``REPRO_MACHINE_PROFILE=path``).
 
-``python -m repro.obs summarize <metrics.json>`` and
-``python -m repro.obs trace <out.json>`` give CLI access (see ``__main__``).
+``python -m repro.obs summarize <metrics.json>``,
+``python -m repro.obs trace <out.json>``, and
+``python -m repro.obs profile <out.json>`` give CLI access (see
+``__main__``).
 """
-from .calibrate import CalibrationReport, calibration_report
+from .calibrate import CalibrationReport, attach_profile, calibration_report
 from .metrics import (
     MetricsRegistry,
     registry,
     snapshot,
+)
+from .profile import (
+    MachineProfile,
+    StepSample,
+    collect_samples,
+    device_memory_stats,
+    fit_profile,
+    memory_report,
+    rescore_report,
+    resolve_profile,
 )
 from .trace import (
     CONTROL_EVENT_KINDS,
@@ -46,16 +64,25 @@ from .trace import (
 __all__ = [
     "CONTROL_EVENT_KINDS",
     "CalibrationReport",
+    "MachineProfile",
     "MetricsRegistry",
+    "StepSample",
     "TraceConfig",
     "Tracer",
+    "attach_profile",
     "calibration_report",
+    "collect_samples",
     "control_event",
     "control_events",
+    "device_memory_stats",
     "export_control_trace",
+    "fit_profile",
+    "memory_report",
     "recovery_narrative",
     "registry",
+    "rescore_report",
     "reset_control_events",
+    "resolve_profile",
     "snapshot",
     "validate_trace_events",
 ]

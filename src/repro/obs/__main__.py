@@ -8,6 +8,13 @@
     Emit the *modeled* timeline for a registry arch on a mesh as Chrome
     trace-event JSON — pure cost-model lowering, no devices, no execution.
     Load the file in Perfetto / ``chrome://tracing``.
+
+``python -m repro.obs profile <out.json> [--mesh RxC --dim N ...]``
+    Fit a machine profile on *this* host: run a small matmul-chain plan
+    under tight-timed tracing (min-of-K + ``block_until_ready`` per step),
+    fit effective roofline constants from the spans, and write the
+    :class:`~repro.obs.profile.MachineProfile` JSON.  Apply it later with
+    ``REPRO_MACHINE_PROFILE=<out.json>`` or ``spmd_partition(profile=...)``.
 """
 from __future__ import annotations
 
@@ -93,6 +100,66 @@ def _cmd_trace(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_profile(args: argparse.Namespace) -> int:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.roofline import DEFAULT_PARAMS
+    from repro.core.compat import make_jax_mesh
+    from repro.core.partitioner import spmd_partition
+
+    from .profile import (collect_samples, device_memory_stats, fit_profile,
+                          memory_report, rescore_report)
+    from .trace import TraceConfig
+
+    mesh = _parse_mesh(args.mesh, args.axes)
+    jmesh = make_jax_mesh(tuple(mesh.shape), tuple(mesh.axis_names))
+    n, layers = args.dim, args.layers
+
+    def fn(a, b):
+        x = a
+        for _ in range(layers):
+            x = jnp.tanh(x @ b)
+        return x
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((n, n)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)), dtype=jnp.float32)
+    trace = TraceConfig(timing="tight", repeats=args.repeats)
+    runner = spmd_partition(fn, jmesh, mesh, trace=trace)
+    mem0 = device_memory_stats()
+    runner(a, b)
+    mem1 = device_memory_stats()
+    entry = next(iter(runner.plans.values()))
+    samples = collect_samples(entry.plan, runner.tracer.measured_events())
+    prof = fit_profile(
+        samples, source=f"cli:matmul-chain dim={n} layers={layers} "
+                        f"mesh={args.mesh}")
+    out = prof.dump(args.out)
+    res = rescore_report(samples, prof.params)
+    mem = memory_report(entry.plan, mem0, mem1)
+
+    print(f"wrote {out} (digest {prof.digest()})")
+    print(f"  samples={prof.n_samples} dropped={prof.dropped} "
+          f"fitted={','.join(prof.fitted) or '—'}")
+    defaults = DEFAULT_PARAMS.as_dict()
+    for k, v in sorted(prof.params.as_dict().items()):
+        mark = " (fitted)" if k in prof.fitted else ""
+        print(f"  {k:<20} {v:.4g}  (default {defaults[k]:.4g}){mark}")
+    for cls, ratio in sorted(prof.residuals.items()):
+        flag = " ⚠" if cls in prof.flagged else ""
+        print(f"  residual {cls:<12} measured/modeled = {ratio:.3g}{flag}")
+    print(f"  rescore: in_band_classes={res['in_band_classes']} "
+          f"improved_all={res['improved_all']}")
+    if mem["measured"]:
+        print(f"  memory: modeled_peak={mem['modeled_peak_bytes']:.4g} B "
+              f"measured_peak={mem['measured_peak_bytes']:.4g} B")
+    else:
+        print(f"  memory: modeled_peak={mem['modeled_peak_bytes']:.4g} B "
+              "(backend exposes no allocator stats)")
+    return 0
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.obs", description=__doc__,
@@ -116,6 +183,21 @@ def main(argv=None) -> int:
     p.add_argument("--seq", type=int, default=64)
     p.add_argument("--reduce-k", type=int, default=8)
     p.set_defaults(fn=_cmd_trace)
+
+    p = sub.add_parser(
+        "profile",
+        help="fit a machine profile from tight-timed spans on this host")
+    p.add_argument("out", help="output MachineProfile JSON path")
+    p.add_argument("--mesh", default="1x1", help="mesh shape, e.g. 1x1")
+    p.add_argument("--axes", default="x,y",
+                   help="comma-separated mesh axis names")
+    p.add_argument("--dim", type=int, default=256,
+                   help="matmul-chain square dimension")
+    p.add_argument("--layers", type=int, default=4,
+                   help="matmuls in the profiled chain")
+    p.add_argument("--repeats", type=int, default=5,
+                   help="timed repetitions per step (min-of-K)")
+    p.set_defaults(fn=_cmd_profile)
 
     args = parser.parse_args(argv)
     return args.fn(args)

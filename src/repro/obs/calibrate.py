@@ -41,9 +41,14 @@ class ClassRow:
     measured_spans: int = 0
     ratio: Optional[float] = None  # measured / modeled; None if either absent
     flagged: bool = False
+    # filled only when a fitted MachineProfile is joined in: the class's
+    # measured/modeled ratio under the *fitted* params, and whether the fit
+    # itself left the class out of band (obs.profile.MachineProfile.flagged)
+    fit_residual: Optional[float] = None
+    fit_flagged: bool = False
 
     def as_dict(self) -> Dict[str, Any]:
-        return {
+        out = {
             "class": self.cls,
             "modeled_s": self.modeled_s,
             "measured_s": self.measured_s,
@@ -52,6 +57,10 @@ class ClassRow:
             "ratio": self.ratio,
             "flagged": self.flagged,
         }
+        if self.fit_residual is not None or self.fit_flagged:
+            out["fit_residual"] = self.fit_residual
+            out["fit_flagged"] = self.fit_flagged
+        return out
 
 
 @dataclass
@@ -69,6 +78,9 @@ class CalibrationReport:
     rows: List[ClassRow] = field(default_factory=list)
     factor: float = DEFAULT_FLAG_FACTOR
     calls: int = 0
+    # set when a fitted MachineProfile was joined in (see attach_profile)
+    profile_digest: Optional[str] = None
+    profile_flagged: List[str] = field(default_factory=list)
 
     @property
     def complete(self) -> bool:
@@ -86,13 +98,17 @@ class CalibrationReport:
         return None
 
     def as_dict(self) -> Dict[str, Any]:
-        return {
+        out = {
             "rows": [r.as_dict() for r in self.rows],
             "factor": self.factor,
             "calls": self.calls,
             "complete": self.complete,
             "flagged": self.flagged,
         }
+        if self.profile_digest is not None:
+            out["profile_digest"] = self.profile_digest
+            out["profile_flagged"] = list(self.profile_flagged)
+        return out
 
     def table(self) -> str:
         """Markdown table for reports and the CLI."""
@@ -151,4 +167,22 @@ def calibration_report(
             row.ratio = row.measured_s / row.modeled_s
             row.flagged = not (1.0 / factor <= row.ratio <= factor)
         report.rows.append(row)
+    return report
+
+
+def attach_profile(report: CalibrationReport, profile) -> CalibrationReport:
+    """Join a fitted :class:`~repro.obs.profile.MachineProfile` into a
+    calibration report in place: each class row gains the fit's residual
+    ratio (measured/modeled under the *fitted* constants) and its
+    out-of-band flag, and the report records the profile digest.  This is
+    how "the fitter's residuals surface in the CalibrationReport" — the
+    eager ratio column says how loose the default model was, the
+    ``fit_residual`` column says how much of that the fitted profile
+    explains."""
+    report.profile_digest = profile.digest()
+    report.profile_flagged = list(profile.flagged)
+    for row in report.rows:
+        if row.cls in profile.residuals:
+            row.fit_residual = profile.residuals[row.cls]
+            row.fit_flagged = row.cls in profile.flagged
     return report

@@ -23,13 +23,28 @@ What a measured span contains, precisely:
   calibration.
 
 Eager execution is slower than the jitted path (no XLA fusion across
-steps).  Measured spans are therefore *upper bounds* on per-step device
-time, tightest for steps dominated by real device work (large collectives,
-big matmuls) and loosest for tiny ops — exactly the bias the per-step-class
+steps).  Default (``timing="eager"``) measured spans are therefore *upper
+bounds* on per-step device time, tightest for steps dominated by real
+device work (large collectives, big matmuls) and loosest for tiny ops —
+exactly the bias the per-step-class
 :class:`~repro.obs.calibrate.CalibrationReport` is designed to expose.
 Inner pjit/scan plans execute inside their call step's single span (the
 scan body is one jitted unit; per-trip spans would perturb what they
 measure).
+
+``timing="tight"`` is the calibration mode: each step is warmed up once,
+then re-run :attr:`TraceConfig.repeats` times with ``block_until_ready``
+after every repetition, and the **minimum** elapsed time becomes the span
+(the min-of-K discipline ``benchmarks/perf.py`` uses).  Tight spans are
+measurement-quality per-step seconds — dispatch noise, allocator warmup,
+and GC pauses are excluded by the min — and are what
+:func:`repro.obs.profile.fit_profile` consumes to recover effective
+:class:`~repro.analysis.roofline.RooflineParams` for this machine.  Two
+caveats: span *timestamps* under tight timing are a synthetic monotonic
+cursor (the sum of per-step minima), not wall clock — durations are real,
+absolute positions are not, and control-lane events no longer line up with
+step spans; and each step runs ``1 + repeats`` times, so tight tracing is
+only for calibration runs, never for measuring end-to-end walltime.
 
 The *modeled* timeline has none of these caveats: it is emitted straight
 from the overlap schedule (``plan_opt.modeled_timeline``) by replaying the
@@ -110,6 +125,14 @@ class TraceConfig:
         If set, the runner does not auto-write anywhere; callers export via
         ``runner.tracer.write(path)`` — this field just carries the
         caller's intent along.
+    timing
+        ``"eager"`` (default): one perf_counter pair per step, dispatch
+        included.  ``"tight"``: min-of-``repeats`` with ``block_until_ready``
+        per step — calibration-grade durations, synthetic timestamps (see
+        the module docstring).
+    repeats
+        Timed repetitions per step under ``timing="tight"`` (after one
+        untimed warmup).
     """
 
     enabled: bool = True
@@ -117,10 +140,13 @@ class TraceConfig:
     measured: bool = True
     sync: bool = True
     path: Optional[str] = None
+    timing: str = "eager"
+    repeats: int = 3
 
     @property
     def cache_key(self) -> Tuple:
-        return (self.enabled, self.modeled, self.measured, self.sync)
+        return (self.enabled, self.modeled, self.measured, self.sync,
+                self.timing, self.repeats)
 
 
 def step_lane(kind: str) -> int:
@@ -291,6 +317,7 @@ CONTROL_EVENT_KINDS = frozenset({
     "plan_swap", "crash_save", "straggler",           # plan/save/watchdog
     "ckpt_save",                                      # committed checkpoints
     "chaos_event",                                    # injected campaign event
+    "profile_applied",                                # calibrated RooflineParams
 })
 
 

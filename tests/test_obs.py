@@ -179,6 +179,34 @@ def test_maybe_dump_env(tmp_path, monkeypatch):
     assert metrics.maybe_dump() is None
 
 
+def test_atexit_dump_writes_snapshot_in_subprocess(tmp_path):
+    """The ``REPRO_METRICS_DUMP`` atexit hook (registered at import when the
+    env var is set) must write a loadable snapshot when the interpreter
+    exits normally — the in-process ``maybe_dump`` test above can't cover
+    the atexit path itself."""
+    import subprocess
+
+    p = str(tmp_path / "atexit.json")
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env = dict(os.environ)
+    env[metrics.DUMP_ENV] = p
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    code = (
+        "from repro.obs import metrics\n"
+        "metrics.inc('atexit.test.marker', 2)\n"
+        "metrics.set_gauge('atexit.test.gauge', 1.5)\n"
+        "metrics.observe('atexit.test.hist', 3.0)\n"
+    )
+    subprocess.run([sys.executable, "-c", code], check=True, env=env,
+                   timeout=120)
+    with open(p) as f:
+        snap = json.load(f)
+    assert snap["counters"]["atexit.test.marker"] == 2
+    assert snap["gauges"]["atexit.test.gauge"] == 1.5
+    assert snap["histograms"]["atexit.test.hist"]["count"] == 1
+
+
 def test_module_level_registry_is_process_wide():
     metrics.inc("proc.wide.marker", 5)
     assert metrics.registry().counter("proc.wide.marker").value >= 5

@@ -1,0 +1,369 @@
+"""Machine-profile fitting (`repro.obs.profile`): the calibration loop.
+
+Covers the PR-10 acceptance surface: planted-constant recovery within the
+named tolerance class (the fitter must invert its own forward model),
+robust outlier rejection, JSON round-trips for `RooflineParams` and
+`MachineProfile`, profile resolution precedence (explicit arg > env var >
+nothing), fit-residual / staleness gauges in the metrics registry,
+tight-timed traced execution (numerics identical, spans non-overlapping),
+plan-cache isolation (same jaxpr under two profiles -> two process-cache
+entries; profile-off shares one), default-params bit-identity of
+`PlanCost`, re-scoring criteria, `CalibrationReport` joins, and memory
+telemetry.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from repro import obs
+from repro.analysis.roofline import DEFAULT_PARAMS, RooflineParams
+from repro.core import Mesh, annotate, mesh_split, propagate
+from repro.core.compat import assert_close
+from repro.core.plan import compile_plan, plan_cost
+from repro.obs import calibrate, metrics, trace
+from repro.obs.profile import (MachineProfile, StepSample, collect_samples,
+                               fit_profile, memory_report, rescore_report,
+                               resolve_profile)
+
+PLANTED = RooflineParams(peak_flops=1.5e13, ici_bw=2.5e10,
+                         collective_launch_s=2.5e-5)
+
+# (class, flops, wire_bytes, launches): two compute classes spanning a 16x
+# flops range plus three collective shapes, so all three fitted columns are
+# well determined
+_FEATS = (
+    ("einsum", 2e9, 0.0, 0.0), ("einsum", 8e9, 0.0, 0.0),
+    ("eltwise", 5e8, 0.0, 0.0),
+    ("reshard", 0.0, 4e6, 1.0), ("reshard", 0.0, 3.2e7, 1.0),
+    ("reshard", 0.0, 1e5, 2.0),
+)
+
+
+def _planted_samples(params=PLANTED):
+    out = []
+    for cls, fl, wb, la in _FEATS:
+        s = StepSample(cls=cls, flops=fl, wire_bytes=wb, launches=la,
+                       measured_s=0.0)
+        out.append(dataclasses.replace(s, measured_s=s.modeled_s(params)))
+    return out
+
+
+# ---------------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------------
+
+
+def test_fit_recovers_planted_constants():
+    prof = fit_profile(_planted_samples(), source="test")
+    assert set(prof.fitted) == {"peak_flops", "ici_bw",
+                                "collective_launch_s"}
+    planted = PLANTED.as_dict()
+    fitted = prof.params.as_dict()
+    for k in prof.fitted:
+        assert_close(fitted[k], planted[k], kind="f32",
+                     err_msg=f"constant {k}")
+    # unobservable fields keep their defaults
+    assert fitted["hbm_bw"] == DEFAULT_PARAMS.hbm_bw
+    assert fitted["overlap_efficiency"] == DEFAULT_PARAMS.overlap_efficiency
+    # exact system: every class residual ratio is 1, nothing flagged
+    for cls, ratio in prof.residuals.items():
+        assert_close(ratio, 1.0, kind="f32", err_msg=f"residual {cls}")
+    assert prof.flagged == []
+    assert prof.dropped == 0
+    assert prof.n_samples == len(_FEATS)
+
+
+def test_fit_sets_residual_gauges_in_registry():
+    metrics.registry().reset()
+    fit_profile(_planted_samples())
+    gauges = metrics.snapshot()["gauges"]
+    assert gauges["profile.fit_samples"] == len(_FEATS)
+    assert gauges["profile.classes_flagged"] == 0.0
+    assert gauges["profile.max_rel_residual"] == pytest.approx(0.0, abs=1e-9)
+    for cls in ("einsum", "eltwise", "reshard"):
+        assert gauges[f"profile.residual.{cls}"] == pytest.approx(1.0)
+
+
+def test_fit_drops_outlier_and_still_recovers():
+    samples = _planted_samples()
+    bad = samples[0]
+    samples[0] = dataclasses.replace(bad, measured_s=bad.measured_s * 100.0)
+    prof = fit_profile(samples)
+    assert prof.dropped >= 1
+    assert_close(prof.params.peak_flops, PLANTED.peak_flops, kind="f32")
+
+
+def test_fit_partial_features_keep_defaults():
+    # compute-only samples: ici_bw / collective_launch_s stay defaults
+    samples = [s for s in _planted_samples() if s.flops > 0.0]
+    prof = fit_profile(samples)
+    assert prof.fitted == ["peak_flops"]
+    assert prof.params.ici_bw == DEFAULT_PARAMS.ici_bw
+    assert prof.params.collective_launch_s == \
+        DEFAULT_PARAMS.collective_launch_s
+    assert_close(prof.params.peak_flops, PLANTED.peak_flops, kind="f32")
+
+
+def test_fit_empty_and_degenerate_sample_sets():
+    prof = fit_profile([])
+    assert prof.params == DEFAULT_PARAMS and prof.fitted == []
+    zeros = [StepSample("x", 0.0, 0.0, 0.0, 1.0)]
+    assert fit_profile(zeros).fitted == []
+
+
+# ---------------------------------------------------------------------------------
+# persistence + resolution
+# ---------------------------------------------------------------------------------
+
+
+def test_roofline_params_json_roundtrip():
+    d = PLANTED.as_dict()
+    back = RooflineParams.from_dict(json.loads(json.dumps(d)))
+    assert back == PLANTED
+    assert back.digest() == PLANTED.digest()
+    assert PLANTED.digest() != DEFAULT_PARAMS.digest()
+    # unknown keys are ignored, missing keys default
+    assert RooflineParams.from_dict({"bogus": 1.0}) == DEFAULT_PARAMS
+
+
+def test_machine_profile_dump_load_roundtrip(tmp_path):
+    prof = fit_profile(_planted_samples(), source="roundtrip")
+    p = prof.dump(str(tmp_path / "prof.json"))
+    back = MachineProfile.load(p)
+    assert back.params == prof.params
+    assert back.digest() == prof.digest()
+    assert back.fitted == prof.fitted
+    assert back.residuals == pytest.approx(prof.residuals)
+    assert back.n_samples == prof.n_samples
+    assert back.source == "roundtrip"
+
+
+def test_resolve_profile_precedence(tmp_path, monkeypatch):
+    prof = fit_profile(_planted_samples())
+    path = prof.dump(str(tmp_path / "prof.json"))
+    # nothing configured -> None (module defaults, bit-identical path)
+    monkeypatch.delenv("REPRO_MACHINE_PROFILE", raising=False)
+    assert resolve_profile(None) is None
+    # explicit RooflineParams / MachineProfile / path all resolve
+    assert resolve_profile(PLANTED) is PLANTED
+    assert resolve_profile(prof) == prof.params
+    assert resolve_profile(path) == prof.params
+    # env fallback, cached by path+mtime, staleness gauge exported
+    metrics.registry().reset()
+    monkeypatch.setenv("REPRO_MACHINE_PROFILE", path)
+    assert resolve_profile(None) == prof.params
+    assert metrics.snapshot()["gauges"]["profile.staleness_s"] >= 0.0
+    # explicit argument still wins over the env var
+    assert resolve_profile(PLANTED) is PLANTED
+    with pytest.raises(TypeError):
+        resolve_profile(42)
+
+
+# ---------------------------------------------------------------------------------
+# re-scoring
+# ---------------------------------------------------------------------------------
+
+
+def test_rescore_improves_when_fitted_matches_machine():
+    samples = _planted_samples()  # "machine" = PLANTED constants
+    res = rescore_report(samples, PLANTED)
+    assert res["in_band_classes"] == 3
+    assert res["improved_all"]
+    for row in res["classes"].values():
+        assert row["ratio_fitted"] == pytest.approx(1.0)
+        assert row["improved"]
+    # defaults-vs-defaults: nothing gets strictly closer, so not improved
+    res2 = rescore_report(samples, DEFAULT_PARAMS)
+    assert not res2["improved_all"]
+
+
+def test_rescore_empty_is_not_improved():
+    assert not rescore_report([], PLANTED)["improved_all"]
+
+
+# ---------------------------------------------------------------------------------
+# calibration-report join
+# ---------------------------------------------------------------------------------
+
+
+def test_attach_profile_joins_residuals_into_report():
+    events = [
+        {"name": "m", "ph": "X", "ts": 0, "dur": 1.0,
+         "pid": trace.MODELED_PID, "tid": 1, "args": {"class": "compute"}},
+        {"name": "x", "ph": "X", "ts": 0, "dur": 2.0,
+         "pid": trace.MEASURED_PID, "tid": 1,
+         "args": {"class": "compute", "call": 0}},
+    ]
+    rep = calibrate.calibration_report(events)
+    base_dict = rep.as_dict()
+    assert "profile_digest" not in base_dict  # default path: dict unchanged
+    assert all("fit_residual" not in r for r in base_dict["rows"])
+    prof = MachineProfile(params=PLANTED, residuals={"compute": 1.2},
+                          flagged=[])
+    calibrate.attach_profile(rep, prof)
+    d = rep.as_dict()
+    assert d["profile_digest"] == PLANTED.digest()
+    (row,) = [r for r in d["rows"] if r["class"] == "compute"]
+    assert row["fit_residual"] == pytest.approx(1.2)
+    assert row["fit_flagged"] is False
+
+
+# ---------------------------------------------------------------------------------
+# tight-timed traced execution + cache isolation (1-device harness mesh)
+# ---------------------------------------------------------------------------------
+
+m1 = Mesh.create((1, 1), ("x", "y"))
+
+
+def _runner(trace_cfg=None, profile=None):
+    from repro.core.partitioner import spmd_partition
+
+    jmesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("x", "y"))
+
+    def f(a, b):
+        a = annotate(a, mesh_split(2, m1, ["x", -1]))
+        b = annotate(b, mesh_split(2, m1, [-1, "y"]))
+        return jnp.tanh(a @ b)
+
+    return spmd_partition(f, jmesh, m1, trace=trace_cfg, profile=profile)
+
+
+def test_tight_timing_matches_untraced_numerics_and_collects_samples():
+    from repro.core.partitioner import clear_process_plan_cache
+
+    clear_process_plan_cache()
+    a = np.random.RandomState(0).randn(16, 16).astype(np.float32)
+    b = np.random.RandomState(1).randn(16, 16).astype(np.float32)
+    ref = np.asarray(_runner()(a, b))
+    tight = _runner(obs.TraceConfig(timing="tight", repeats=2))
+    out = np.asarray(tight(a, b))
+    assert_close(out, ref, kind="exact")  # re-running pure steps is sound
+    (entry,) = tight.plans.values()
+    measured = tight.tracer.measured_events()
+    assert len(measured) == len(entry.plan.steps)
+    # synthetic-cursor timestamps: spans are schema-valid (no lane overlap)
+    doc = tight.tracer.chrome_trace()
+    assert trace.validate_trace_events(doc["traceEvents"]) == []
+    samples = collect_samples(entry.plan, measured)
+    assert len(samples) == len(measured)
+    assert all(s.measured_s > 0.0 for s in samples)
+    # the join reads features from the plan's own cost model
+    assert any(s.flops > 0.0 for s in samples)
+
+
+def test_cache_isolation_same_jaxpr_two_profiles(tmp_path):
+    from repro.core import partitioner
+    from repro.core.partitioner import (clear_process_plan_cache,
+                                        process_plan_cache_stats)
+
+    clear_process_plan_cache()
+    obs.reset_control_events()
+    a = np.ones((8, 8), np.float32)
+    # profile-off: two call sites share one entry (bit-identical to the
+    # pre-profile world: the pkey's trailing None is the same for both)
+    _runner()(a, a)
+    _runner()(a, a)
+    assert process_plan_cache_stats().hits >= 1
+    assert len(partitioner._PROCESS_CACHE) == 1
+    # two distinct profiles: two *more* entries, no collision with default
+    p2 = dataclasses.replace(PLANTED, peak_flops=PLANTED.peak_flops * 2)
+    r1 = _runner(profile=PLANTED)
+    r1(a, a)
+    r2 = _runner(profile=p2)
+    r2(a, a)
+    assert len(partitioner._PROCESS_CACHE) == 3
+    # the calibrated plans price with their own params
+    (e1,) = r1.plans.values()
+    assert e1.plan.params == PLANTED
+    # applying a profile announces itself on the control lane
+    applied = [e for e in obs.control_events()
+               if e["name"] == "profile_applied"]
+    assert len(applied) == 2
+    assert applied[0]["args"]["digest"] == PLANTED.digest()
+    clear_process_plan_cache()
+    obs.reset_control_events()
+
+
+def test_env_profile_changes_cache_key(tmp_path, monkeypatch):
+    from repro.core import partitioner
+    from repro.core.partitioner import clear_process_plan_cache
+
+    prof = MachineProfile(params=PLANTED)
+    path = prof.dump(str(tmp_path / "prof.json"))
+    clear_process_plan_cache()
+    a = np.ones((8, 8), np.float32)
+    monkeypatch.delenv("REPRO_MACHINE_PROFILE", raising=False)
+    _runner()(a, a)
+    monkeypatch.setenv("REPRO_MACHINE_PROFILE", path)
+    _runner()(a, a)  # ambient profile: distinct entry, same numerics
+    assert len(partitioner._PROCESS_CACHE) == 2
+    clear_process_plan_cache()
+
+
+# ---------------------------------------------------------------------------------
+# PlanCost default-path identity + calibrated pricing
+# ---------------------------------------------------------------------------------
+
+
+def _mlp_plan(params=None):
+    mesh = Mesh.create((4, 8), ("x", "y"))
+
+    def f(a, w):
+        a = annotate(a, mesh_split(2, mesh, ["x", -1]))
+        w = annotate(w, mesh_split(2, mesh, [-1, "y"]))
+        return jnp.tanh(a @ w)
+
+    closed = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                               jax.ShapeDtypeStruct((32, 64), jnp.float32))
+    prop = propagate(closed, mesh).result()
+    return compile_plan(closed, prop, mesh, cost_only=True, profile=params)
+
+
+def test_plancost_none_params_bit_identical_to_explicit_defaults():
+    base = plan_cost(_mlp_plan(None))
+    asdef = plan_cost(_mlp_plan(RooflineParams()))
+    assert base.params is None
+    assert base.total_s == asdef.total_s
+    assert base.collective_s == asdef.collective_s
+    assert base.compute_s == asdef.compute_s
+    assert base.as_dict() == asdef.as_dict()
+
+
+def test_plancost_calibrated_params_reprice():
+    base = plan_cost(_mlp_plan(None))
+    half = plan_cost(_mlp_plan(dataclasses.replace(
+        DEFAULT_PARAMS, peak_flops=DEFAULT_PARAMS.peak_flops / 2.0,
+        ici_bw=DEFAULT_PARAMS.ici_bw / 2.0)))
+    assert half.total_s > base.total_s
+    assert half.compute_s == pytest.approx(2.0 * base.compute_s)
+
+
+# ---------------------------------------------------------------------------------
+# memory telemetry
+# ---------------------------------------------------------------------------------
+
+
+class _FakePlan:
+    peak_bytes = 1024.0
+
+
+def test_memory_report_joins_or_degrades():
+    rep = memory_report(_FakePlan(), None, None)
+    assert rep["modeled_peak_bytes"] == 1024.0
+    assert not rep["measured"] and rep["measured_peak_bytes"] is None
+    rep2 = memory_report(_FakePlan(),
+                         {"peak_bytes_in_use": 100.0},
+                         {"peak_bytes_in_use": 900.0, "bytes_in_use": 500.0})
+    assert rep2["measured"]
+    assert rep2["measured_peak_bytes"] == 900.0
+    assert rep2["measured_live_bytes"] == 500.0
+    assert rep2["measured_peak_delta_bytes"] == 800.0
